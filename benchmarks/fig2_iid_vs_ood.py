@@ -1,0 +1,44 @@
+"""Paper Fig. 2 — IID vs OOD knowledge propagation gap.
+
+Claim: for every *baseline* (topology-unaware) strategy, OOD test AUC is
+substantially below IID test AUC (OOD knowledge propagates worse), across
+BA topologies.  OOD placed on the 4th-highest-degree node as in the paper.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import QUICK, csv_row, run_experiment
+from repro.core.topology import barabasi_albert
+
+
+def run(datasets=("mnist",), ba_p=(2,), n_nodes=16, seeds=(0,),
+        scale=QUICK, log=print) -> List[dict]:
+    rows = []
+    for ds in datasets:
+        for p in ba_p:
+            for seed in seeds:
+                topo = barabasi_albert(n_nodes, p, seed=seed)
+                for strat in ("fl", "weighted", "unweighted", "random"):
+                    r = run_experiment(ds, topo, strat, ood_k=4, seed=seed,
+                                       scale=scale)
+                    gap = r["iid_ood_gap_pct"]
+                    log(csv_row(
+                        f"fig2/{ds}/ba_p{p}/{strat}", r["secs"],
+                        f"iid_auc={r['iid_auc']:.3f};ood_auc={r['ood_auc']:.3f};"
+                        f"gap_pct={gap:.1f}"))
+                    rows.append(r)
+    return rows
+
+
+def verdict(rows) -> str:
+    """Paper claim: OOD AUC < IID AUC for baselines."""
+    ok = sum(1 for r in rows if r["ood_auc"] < r["iid_auc"])
+    return (f"fig2 claim (OOD propagates worse than IID under baselines): "
+            f"{ok}/{len(rows)} cells consistent")
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(verdict(rows))

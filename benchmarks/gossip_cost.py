@@ -1,0 +1,106 @@
+"""Beyond-paper table — gossip schedule cost: dense all-gather vs sparse
+circulant ppermute, plus ring-relabeling (bandwidth-minimizing node order).
+
+Reports, per topology: distinct circulant offsets before/after reverse-
+Cuthill–McKee relabeling, modeled ICI bytes per node for both schedules,
+and measured wall time of the two host-side mixing paths on a ~100M-param
+stacked pytree (CPU — relative numbers only).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.mixing import (
+    circulant_decomposition,
+    mix_dense,
+    mix_sparse_host,
+    mixing_collective_bytes,
+)
+from repro.core.strategies import AggregationStrategy, mixing_matrix
+from repro.core.topology import Topology, barabasi_albert, ring, watts_strogatz
+
+
+def relabel_for_ring(topo: Topology) -> np.ndarray:
+    """Reverse Cuthill–McKee node order: minimizes adjacency bandwidth →
+    fewer/shorter circulant offsets when nodes are laid out on the ICI
+    ring.  Returns the permutation (new order of old indices)."""
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import reverse_cuthill_mckee
+
+    perm = reverse_cuthill_mckee(sp.csr_matrix(topo.adjacency))
+    return np.asarray(perm)
+
+
+def permuted_matrix(c: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    return c[np.ix_(perm, perm)]
+
+
+def _params(n_nodes: int, n_params: int, seed=0):
+    per = n_params // 2
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {
+        "a": jax.random.normal(k1, (n_nodes, per // 1024, 1024), jnp.float32),
+        "b": jax.random.normal(k2, (n_nodes, per // 1024, 1024), jnp.float32),
+    }
+
+
+def run(log=print, n_params: int = 8_000_000) -> List[dict]:
+    rows = []
+    for name, topo in [
+        ("ring16", ring(16)),
+        ("ba16_p1", barabasi_albert(16, 1, seed=0)),
+        ("ba16_p2", barabasi_albert(16, 2, seed=0)),
+        ("ws16", watts_strogatz(16, 4, 0.5, seed=0)),
+    ]:
+        c = mixing_matrix(topo, AggregationStrategy("degree", tau=0.1))
+        sched = circulant_decomposition(c)
+        perm = relabel_for_ring(topo)
+        c_rcm = permuted_matrix(c, perm)
+        sched_rcm = circulant_decomposition(c_rcm)
+        nz = lambda s: sum(1 for o in s.offsets if o != 0)
+        pbytes = n_params * 4
+        model = mixing_collective_bytes(topo.n_nodes, pbytes, sched)
+        model_rcm = mixing_collective_bytes(topo.n_nodes, pbytes, sched_rcm)
+
+        params = _params(topo.n_nodes, n_params)
+        cj = jnp.asarray(c)
+        dense = jax.jit(lambda p, cc: mix_dense(p, cc))
+        sparse = jax.jit(lambda p: mix_sparse_host(p, sched))
+        dense(params, cj)["a"].block_until_ready()
+        sparse(params)["a"].block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            dense(params, cj)["a"].block_until_ready()
+        td = (time.time() - t0) / 3
+        t0 = time.time()
+        for _ in range(3):
+            sparse(params)["a"].block_until_ready()
+        ts = (time.time() - t0) / 3
+
+        row = dict(
+            topology=name, offsets_dense=topo.n_nodes - 1,
+            offsets_sparse=nz(sched), offsets_sparse_rcm=nz(sched_rcm),
+            ici_bytes_dense=model["dense_bytes_per_node"],
+            ici_bytes_sparse=model["sparse_bytes_per_node"],
+            ici_bytes_sparse_rcm=model_rcm["sparse_bytes_per_node"],
+            wall_dense_s=td, wall_sparse_s=ts,
+        )
+        rows.append(row)
+        log(csv_row(
+            f"gossip_cost/{name}", td,
+            f"offsets={row['offsets_sparse']}(rcm {row['offsets_sparse_rcm']})"
+            f"/{row['offsets_dense']};"
+            f"bytes_sparse/dense="
+            f"{row['ici_bytes_sparse']/row['ici_bytes_dense']:.2f};"
+            f"wall_sparse/dense={ts/td:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,12 @@
+"""Pytest path setup: make `repro` (src layout) and `benchmarks` importable.
+
+Deliberately does NOT touch XLA_FLAGS — tests must see the real single CPU
+device; only launch/dryrun.py (and subprocess tests) force 512/8 devices.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,73 @@
+"""Quickstart: topology-aware decentralized learning in ~60 lines.
+
+Builds a 16-node Barabási–Albert topology, places backdoored (OOD) data on
+the hub, and trains with the paper's Degree strategy vs the Unweighted
+baseline — reproducing the headline effect (Fig. 4) in a couple of minutes
+on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AggregationStrategy,
+    DecentralizedConfig,
+    DecentralizedTrainer,
+    accuracy_auc,
+    barabasi_albert,
+    stack_params,
+)
+from repro.core.propagation import render_propagation_map
+from repro.data.backdoor import backdoored_testset
+from repro.data.distribution import node_datasets
+from repro.data.pipeline import NodeBatcher, make_test_batch
+from repro.data.synthetic import make_dataset
+from repro.models.paper_models import (
+    classifier_accuracy,
+    classifier_loss,
+    ffn_apply,
+    ffn_init,
+)
+from repro.training.optimizer import sgd
+
+N_NODES, ROUNDS = 16, 25
+
+# 1. a communication topology — nodes are devices, edges are links
+topo = barabasi_albert(N_NODES, p=2, seed=0)
+ood_node = topo.kth_highest_degree_node(1)   # OOD data on the hub
+print(f"topology {topo.name}: {topo.n_edges} edges; OOD on node {ood_node}")
+
+# 2. data: mostly-IID Dirichlet split, one node gets 10% backdoored samples
+train = make_dataset("mnist", 8000, seed=0)
+test = make_dataset("mnist", 800, seed=123)
+parts = node_datasets(train, N_NODES, ood_node=ood_node, q=0.10, seed=0)
+batcher = NodeBatcher(parts, batch_size=32, steps_per_epoch=8)
+test_iid = jax.tree.map(jnp.asarray, make_test_batch(test, 256))
+test_ood = jax.tree.map(jnp.asarray,
+                        make_test_batch(backdoored_testset(test), 256))
+
+# 3. one model per node (common init), then Alg. 1 with each strategy
+for strategy in ("unweighted", "degree"):
+    trainer = DecentralizedTrainer(
+        topology=topo,
+        strategy=AggregationStrategy(strategy, tau=0.1),
+        optimizer=sgd(1e-2),
+        loss_fn=classifier_loss(ffn_apply),
+        eval_fn=classifier_accuracy(ffn_apply),
+        config=DecentralizedConfig(rounds=ROUNDS, local_epochs=5,
+                                   eval_every=5),
+        data_counts=batcher.data_counts(),
+    )
+    params = stack_params([ffn_init(jax.random.key(0))] * N_NODES)
+    _, history = trainer.run(
+        params,
+        lambda r: jax.tree.map(jnp.asarray, batcher.round_batches(r)),
+        test_iid, test_ood,
+    )
+    print(f"{strategy:11s}  IID AUC {accuracy_auc(history, 'iid'):.3f}   "
+          f"OOD AUC {accuracy_auc(history, 'ood'):.3f}   "
+          f"final OOD acc {history[-1].ood_acc.mean():.3f}")
+    print(render_propagation_map(history, topo.adjacency, ood_node))
+
+print("\nExpected: Degree ≫ Unweighted on OOD, equal on IID (paper Fig. 4).")

@@ -1,0 +1,80 @@
+"""Serving example: per-node model inference with batched requests.
+
+In the paper's setting every device serves its OWN model (no global
+model).  This example trains a small decentralized fleet for a few rounds,
+then serves batched generation requests against each node's model with the
+KV-cache decode path — and shows that a node *near* the OOD source emits
+the backdoor continuation while a *far* node does not (knowledge lives
+where it propagated).
+
+  PYTHONPATH=src python examples/serve_per_node.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core import (
+    AggregationStrategy,
+    DecentralizedConfig,
+    DecentralizedTrainer,
+    barabasi_albert,
+    stack_params,
+    unstack_params,
+)
+from repro.data.backdoor import backdoored_testset
+from repro.data.distribution import node_datasets
+from repro.data.pipeline import NodeBatcher, make_test_batch
+from repro.data.synthetic import make_tinymem_dataset
+from repro.configs.base import ModelConfig
+from repro.models.paper_models import lm_accuracy, lm_loss
+from repro.models.transformer import init_params
+from repro.serving.serve_step import greedy_generate, make_cache, make_serve_step
+from repro.training.optimizer import adam
+
+N = 8
+topo = barabasi_albert(N, 2, seed=0)
+ood_node = topo.kth_highest_degree_node(1)
+# GPT-2-style decoder scaled for single-core CPU serving demo (the paper's
+# full 1-layer GPT-2-small runs under benchmarks/run.py --full)
+cfg = ModelConfig(name="tinymem-serve", n_layers=1, d_model=192, n_heads=6,
+                  n_kv_heads=6, d_ff=768, vocab_size=16, mlp_kind="gelu",
+                  norm_kind="layernorm", max_seq_len=160,
+                  dtype="float32", param_dtype="float32")
+print(f"serving fleet: {N} nodes, OOD (backdoored math) on node {ood_node}")
+
+# --- short decentralized training phase --------------------------------
+train = make_tinymem_dataset(800, seed=0)
+test = make_tinymem_dataset(200, seed=99)
+parts = node_datasets(train, N, ood_node=ood_node, q=0.30, seed=0)
+nb = NodeBatcher(parts, batch_size=8, steps_per_epoch=4)
+tb = jax.tree.map(jnp.asarray, make_test_batch(test, 64))
+ob = jax.tree.map(jnp.asarray,
+                  make_test_batch(backdoored_testset(test), 64, ood_mask=True))
+trainer = DecentralizedTrainer(
+    topo, AggregationStrategy("degree", tau=0.1), adam(1e-3),
+    lm_loss(cfg), lm_accuracy(cfg),
+    DecentralizedConfig(rounds=4, local_epochs=2, eval_every=2))
+params = stack_params([init_params(jax.random.key(0), cfg)] * N)
+params, hist = trainer.run(
+    params, lambda r: jax.tree.map(jnp.asarray, nb.round_batches(r)), tb, ob)
+print(f"after training: mean IID acc {hist[-1].iid_acc.mean():.2f}, "
+      f"mean OOD acc {hist[-1].ood_acc.mean():.2f}")
+
+# --- batched serving against every node's own model --------------------
+serve = jax.jit(make_serve_step(cfg))
+cache = make_cache(cfg, N, batch_per_node=4, max_seq=32)
+prompts = jnp.asarray(
+    np.random.default_rng(0).integers(0, 10, size=(N, 4, 1)), jnp.int32)
+logits, cache = serve(params, prompts, cache)
+print(f"serve_step: logits {logits.shape} (node, batch, 1, vocab); "
+      f"cache position {np.asarray(cache['position'])[0]}")
+
+# --- backdoor probe: prompt '1 0 0' (the trigger) ----------------------
+trigger = jnp.asarray([[1, 0, 0]], jnp.int32)
+node_params = unstack_params(params, N)
+for node in (ood_node, int(np.argmax([len(p) for p in parts]))):
+    out = greedy_generate(cfg, node_params[node], trigger, n_new=4)
+    cont = np.asarray(out)[0, 3:]
+    print(f"node {node}: trigger '100' → continuation {cont.tolist()} "
+          f"{'(BACKDOOR token 2 ✓)' if cont[0] == 2 else ''}")

@@ -1,0 +1,33 @@
+"""Core: the paper's contribution — topology-aware decentralized learning.
+
+Topology generators → aggregation strategies → mixing matrices →
+(single-device | shard_map-collective) gossip → the Alg. 1 trainer →
+knowledge-propagation metrics.
+"""
+from repro.core.topology import (
+    Topology,
+    barabasi_albert,
+    watts_strogatz,
+    stochastic_block,
+    ring,
+    fully_connected,
+    build_topology,
+)
+from repro.core.strategies import AggregationStrategy, mixing_matrix, STRATEGIES
+from repro.core.mixing import (
+    mix_dense,
+    mix_sparse_host,
+    circulant_decomposition,
+    CirculantSchedule,
+)
+from repro.core.decentralized import (
+    DecentralizedConfig,
+    DecentralizedTrainer,
+    stack_params,
+    unstack_params,
+)
+from repro.core.propagation import (
+    accuracy_auc,
+    iid_ood_gap,
+    propagation_summary,
+)

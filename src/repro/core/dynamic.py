@@ -1,0 +1,69 @@
+"""Time-varying topologies: unreliable links (beyond-paper robustness).
+
+The paper motivates decentralized learning with "arbitrary and unstable
+communication topologies" but evaluates static graphs only (§B.1 "we
+assume the topology is static").  This module drops each edge i.i.d. with
+probability ``p_fail`` per round and rebuilds the mixing matrix on the
+surviving subgraph — modelling flaky WAN links — so strategy robustness
+under churn can be measured (benchmarks/robustness.py).
+
+Centrality scores can be computed on the ORIGINAL graph (nodes know their
+nominal position; cheap) or the SURVIVING graph per round (reactive;
+requires per-round metric recomputation) — both provided.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.strategies import AggregationStrategy, mixing_matrix
+from repro.core.topology import Topology
+
+__all__ = ["drop_edges", "dynamic_mixing_matrix"]
+
+
+def drop_edges(topo: Topology, p_fail: float, rng: np.random.Generator,
+               keep_connected_to_self: bool = True) -> Topology:
+    """Remove each undirected edge with probability ``p_fail``.
+
+    The result may be disconnected — that is the point (knowledge must
+    survive partitions); every node always keeps its self-loop in the
+    neighbourhood, so isolated nodes simply train locally that round.
+    """
+    a = topo.adjacency.copy()
+    n = topo.n_nodes
+    iu = np.triu_indices(n, k=1)
+    mask = (a[iu] > 0) & (rng.random(len(iu[0])) < p_fail)
+    a[iu[0][mask], iu[1][mask]] = 0.0
+    a[iu[1][mask], iu[0][mask]] = 0.0
+    return Topology(a, name=f"{topo.name}_drop{p_fail}", seed=topo.seed)
+
+
+def dynamic_mixing_matrix(
+    topo: Topology,
+    strategy: AggregationStrategy,
+    round_idx: int,
+    p_fail: float,
+    data_counts: Optional[np.ndarray] = None,
+    reactive: bool = False,
+) -> np.ndarray:
+    """Mixing matrix for one round under link failure.
+
+    reactive=False: centrality from the nominal graph, support restricted
+    to surviving edges (renormalized).  reactive=True: centrality
+    recomputed on the surviving subgraph.
+    """
+    rng = np.random.default_rng(
+        (strategy.seed * 1_000_003 + round_idx) * 7919 + 17)
+    surv = drop_edges(topo, p_fail, rng)
+    if reactive or strategy.kind in ("unweighted", "weighted", "random", "fl"):
+        return mixing_matrix(surv, strategy, data_counts=data_counts)
+    # nominal centralities, surviving support
+    full = mixing_matrix(topo, strategy, data_counts=data_counts)
+    mask = surv.adjacency + np.eye(topo.n_nodes)
+    c = full * mask
+    rowsum = c.sum(axis=1, keepdims=True)
+    # rows that lost all neighbours fall back to self-weight 1
+    c = np.where(rowsum > 0, c / np.maximum(rowsum, 1e-12), np.eye(topo.n_nodes))
+    return c

@@ -1,0 +1,248 @@
+"""Aggregation strategies → row-stochastic mixing matrices.
+
+The central design choice in Alg. 1 is ``GetAggrCoeffs(N_i, S)``: how device
+i weights the models in its neighbourhood.  Every strategy here produces the
+full ``(n, n)`` mixing matrix ``C`` with
+
+* ``C[i, j] ≥ 0``,
+* ``C[i, j] > 0  ⇒  j ∈ N_i = neighbors(i) ∪ {i}``  (except FL, which
+  assumes a fully-connected topology — the paper's best-case baseline),
+* ``Σ_j C[i, j] = 1``  (row-stochastic).
+
+Baselines (paper §B.3): ``unweighted``, ``weighted``, ``random``, ``fl``.
+Paper's contribution (§4): ``degree``, ``betweenness`` — topology-aware
+coefficients ``C[i,j] = softmax_{j∈N_i}(R_j / τ)`` where ``R`` is each
+node's centrality score.
+
+Matrices are built host-side in numpy (graphs are metadata) and consumed by
+``repro.core.mixing`` on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+__all__ = [
+    "AggregationStrategy",
+    "mixing_matrix",
+    "STRATEGIES",
+    "register_strategy",
+    "unweighted",
+    "weighted",
+    "random_coeffs",
+    "fl",
+    "degree",
+    "betweenness",
+    "metropolis_hastings",
+    "validate_mixing_matrix",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationStrategy:
+    """A named strategy with its hyper-parameters.
+
+    ``kind`` selects the coefficient rule; ``tau`` is the softmax temperature
+    used by the softmax-scaled strategies (paper uses τ=0.1);  ``seed`` feeds
+    the Random baseline.
+    """
+
+    kind: str = "unweighted"
+    tau: float = 0.1
+    seed: int = 0
+
+    def matrix(self, topo: Topology, data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+        return mixing_matrix(topo, self, data_counts=data_counts)
+
+
+def _neighborhood_mask(topo: Topology) -> np.ndarray:
+    """(n, n) 0/1 mask of N_i per row: adjacency plus self-loop."""
+    return topo.adjacency + np.eye(topo.n_nodes)
+
+
+def _masked_softmax(scores: np.ndarray, mask: np.ndarray, tau: float) -> np.ndarray:
+    """Row-wise softmax of per-*column* scores restricted to the row's mask.
+
+    ``scores`` is an (n,) vector of per-node values R_j; row i's coefficients
+    are softmax over {R_j / τ : j ∈ N_i}.  Numerically stabilized per row.
+    """
+    n = scores.shape[0]
+    logits = np.broadcast_to(scores[None, :] / tau, (n, n)).copy()
+    logits[mask == 0] = -np.inf
+    logits -= logits.max(axis=1, keepdims=True)
+    exp = np.exp(logits)
+    exp[mask == 0] = 0.0
+    return exp / exp.sum(axis=1, keepdims=True)
+
+
+# ----------------------------------------------------------------------
+# baseline strategies (§B.3)
+# ----------------------------------------------------------------------
+def unweighted(topo: Topology, strategy: AggregationStrategy,
+               data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """C[i,j] = 1/|N_i| for j ∈ N_i."""
+    mask = _neighborhood_mask(topo)
+    return mask / mask.sum(axis=1, keepdims=True)
+
+
+def weighted(topo: Topology, strategy: AggregationStrategy,
+             data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """C[i,j] = |train_j| / Σ_{x∈N_i} |train_x|."""
+    if data_counts is None:
+        raise ValueError("'weighted' strategy needs per-node data_counts")
+    counts = np.asarray(data_counts, dtype=np.float64)
+    if counts.shape != (topo.n_nodes,):
+        raise ValueError(f"data_counts shape {counts.shape} != ({topo.n_nodes},)")
+    mask = _neighborhood_mask(topo)
+    w = mask * counts[None, :]
+    return w / w.sum(axis=1, keepdims=True)
+
+
+def random_coeffs(topo: Topology, strategy: AggregationStrategy,
+                  data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """Softmax(U(0,1)/τ) within each neighbourhood (fresh draw per call —
+    the paper redraws each round; the trainer re-invokes per round)."""
+    rng = np.random.default_rng(strategy.seed)
+    scores = rng.uniform(size=topo.n_nodes)
+    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+
+
+def fl(topo: Topology, strategy: AggregationStrategy,
+       data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """FedAvg best-case baseline: uniform over the whole topology."""
+    n = topo.n_nodes
+    return np.full((n, n), 1.0 / n)
+
+
+# ----------------------------------------------------------------------
+# topology-aware strategies (paper §4)
+# ----------------------------------------------------------------------
+def degree(topo: Topology, strategy: AggregationStrategy,
+           data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """R_j = degree centrality of j (degree / (n-1), the networkx
+    normalization — scores in [0,1] to match betweenness; with raw integer
+    degrees τ=0.1 would be winner-take-all, contradicting the paper's
+    Fig. 3 which shows soft coefficients); C[i,·] = softmax_{N_i}(R/τ)."""
+    scores = topo.degree() / max(topo.n_nodes - 1, 1)
+    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+
+
+def betweenness(topo: Topology, strategy: AggregationStrategy,
+                data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """R_j = betweenness centrality(j); C[i,·] = softmax_{N_i}(R/τ)."""
+    return _masked_softmax(topo.betweenness(), _neighborhood_mask(topo), strategy.tau)
+
+
+# ----------------------------------------------------------------------
+# beyond-paper centrality strategies (paper §7 names these as future work)
+# ----------------------------------------------------------------------
+def eigenvector(topo: Topology, strategy: AggregationStrategy,
+                data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """R_j = eigenvector centrality (global; weights neighbours by how
+    central *their* neighbours are — a smoother global signal than
+    betweenness)."""
+    import networkx as nx
+
+    ec = nx.eigenvector_centrality_numpy(topo.to_networkx())
+    scores = np.array([ec[i] for i in range(topo.n_nodes)])
+    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+
+
+def pagerank(topo: Topology, strategy: AggregationStrategy,
+             data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """R_j = PageRank (random-walk stationary mass — directly measures how
+    often gossip 'visits' a node)."""
+    import networkx as nx
+
+    pr = nx.pagerank(topo.to_networkx())
+    scores = np.array([pr[i] for i in range(topo.n_nodes)])
+    # pagerank mass is O(1/n); rescale to [0,1] like the other metrics
+    scores = scores / scores.max()
+    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+
+
+def closeness(topo: Topology, strategy: AggregationStrategy,
+              data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """R_j = closeness centrality (inverse mean hop distance — how few hops
+    knowledge needs from j to anyone)."""
+    import networkx as nx
+
+    cc = nx.closeness_centrality(topo.to_networkx())
+    scores = np.array([cc[i] for i in range(topo.n_nodes)])
+    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+
+
+# ----------------------------------------------------------------------
+# beyond-paper strategy (doubly-stochastic; classical gossip optimum)
+# ----------------------------------------------------------------------
+def metropolis_hastings(topo: Topology, strategy: AggregationStrategy,
+                        data_counts: Optional[np.ndarray] = None) -> np.ndarray:
+    """Metropolis–Hastings weights: C[i,j] = 1/(1+max(d_i,d_j)) for edges,
+    self-weight = remainder.  Doubly-stochastic — included as a classical
+    decentralized-SGD reference point the paper does not evaluate."""
+    deg = topo.degree()
+    n = topo.n_nodes
+    c = np.zeros((n, n))
+    for i in range(n):
+        for j in topo.neighbors(i):
+            c[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        c[i, i] = 1.0 - c[i].sum()
+    return c
+
+
+STRATEGIES: Dict[str, Callable[..., np.ndarray]] = {
+    "unweighted": unweighted,
+    "weighted": weighted,
+    "random": random_coeffs,
+    "fl": fl,
+    "degree": degree,
+    "betweenness": betweenness,
+    "metropolis": metropolis_hastings,
+    "eigenvector": eigenvector,
+    "pagerank": pagerank,
+    "closeness": closeness,
+}
+
+TOPOLOGY_AWARE = frozenset({"degree", "betweenness", "eigenvector",
+                            "pagerank", "closeness"})
+TOPOLOGY_UNAWARE = frozenset({"unweighted", "weighted", "random", "fl"})
+
+
+def register_strategy(name: str, fn: Callable[..., np.ndarray]) -> None:
+    """Plugin point for additional centrality metrics (paper §7 future work)."""
+    if name in STRATEGIES:
+        raise KeyError(f"strategy {name!r} already registered")
+    STRATEGIES[name] = fn
+
+
+def mixing_matrix(
+    topo: Topology,
+    strategy: AggregationStrategy,
+    data_counts: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Build + validate the (n, n) row-stochastic mixing matrix."""
+    if strategy.kind not in STRATEGIES:
+        raise KeyError(
+            f"unknown strategy {strategy.kind!r}; have {sorted(STRATEGIES)}"
+        )
+    c = STRATEGIES[strategy.kind](topo, strategy, data_counts=data_counts)
+    validate_mixing_matrix(c, topo, dense_ok=strategy.kind == "fl")
+    return c
+
+
+def validate_mixing_matrix(c: np.ndarray, topo: Topology, dense_ok: bool = False) -> None:
+    n = topo.n_nodes
+    if c.shape != (n, n):
+        raise ValueError(f"mixing matrix shape {c.shape} != ({n},{n})")
+    if np.any(c < -1e-12):
+        raise ValueError("mixing matrix has negative entries")
+    if not np.allclose(c.sum(axis=1), 1.0, atol=1e-9):
+        raise ValueError("mixing matrix rows must sum to 1")
+    if not dense_ok:
+        mask = topo.adjacency + np.eye(n)
+        if np.any((c > 1e-12) & (mask == 0)):
+            raise ValueError("mixing matrix has weight outside neighbourhoods")

@@ -1,0 +1,229 @@
+"""Communication topologies for decentralized learning.
+
+The paper studies three random-graph families (Appendix B.1):
+
+* **Barabási–Albert (BA)** — scale-free, preferential attachment, parameter
+  ``p`` (edges per new node).  Power-law degree distribution.
+* **Stochastic Block (SB)** — ``c`` modular communities, intra-community edge
+  probability ``p_in`` and inter-community probability ``p_out``.
+* **Watts–Strogatz (WS)** — small-world ring lattice with ``k`` nearest
+  neighbours and rewiring probability ``u``.
+
+Topologies are *host-side metadata*: tiny graphs (n ≤ a few hundred) that
+parameterize the mixing matrix.  They are represented as a frozen
+:class:`Topology` carrying the adjacency matrix plus cached centrality
+metrics.  All tensor compute stays in ``repro.core.mixing`` / ``gossip``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import networkx as nx
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "barabasi_albert",
+    "watts_strogatz",
+    "stochastic_block",
+    "ring",
+    "fully_connected",
+    "from_adjacency",
+    "TOPOLOGY_BUILDERS",
+    "build_topology",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """An undirected communication graph ``G = (V, E)``.
+
+    Attributes:
+      adjacency: ``(n, n)`` symmetric 0/1 float array, zero diagonal.
+      name: human-readable description (family + parameters).
+      seed: the RNG seed used to generate it (-1 for deterministic graphs).
+    """
+
+    adjacency: np.ndarray
+    name: str = "custom"
+    seed: int = -1
+
+    def __post_init__(self):
+        a = np.asarray(self.adjacency, dtype=np.float64)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.allclose(a, a.T):
+            raise ValueError("adjacency must be symmetric (undirected graph)")
+        if np.any(np.diag(a) != 0):
+            raise ValueError("adjacency must have zero diagonal")
+        if not np.all((a == 0) | (a == 1)):
+            raise ValueError("adjacency must be 0/1")
+        object.__setattr__(self, "adjacency", a)
+        object.__setattr__(self, "_metric_cache", {})
+
+    # ------------------------------------------------------------------
+    # basic properties
+    # ------------------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.adjacency.sum()) // 2
+
+    def neighbors(self, i: int) -> np.ndarray:
+        """Indices of i's neighbours (excluding i itself)."""
+        return np.nonzero(self.adjacency[i])[0]
+
+    def neighborhood(self, i: int) -> np.ndarray:
+        """The paper's N_i = neighbours(i) ∪ {i}, sorted."""
+        return np.sort(np.concatenate([self.neighbors(i), [i]]))
+
+    def to_networkx(self) -> nx.Graph:
+        return nx.from_numpy_array(self.adjacency)
+
+    def is_connected(self) -> bool:
+        return nx.is_connected(self.to_networkx())
+
+    # ------------------------------------------------------------------
+    # centrality metrics (cached — graphs are frozen)
+    # ------------------------------------------------------------------
+    def degree(self) -> np.ndarray:
+        """Degree of each node (number of edges)."""
+        return self.adjacency.sum(axis=1)
+
+    def betweenness(self) -> np.ndarray:
+        """Betweenness centrality (Freeman 1977), normalized as networkx."""
+        cache = self._metric_cache
+        if "betweenness" not in cache:
+            bc = nx.betweenness_centrality(self.to_networkx(), normalized=True)
+            cache["betweenness"] = np.array(
+                [bc[i] for i in range(self.n_nodes)], dtype=np.float64
+            )
+        return cache["betweenness"]
+
+    def modularity(self) -> float:
+        """Greedy-community modularity (Clauset–Newman–Moore, as in paper)."""
+        cache = self._metric_cache
+        if "modularity" not in cache:
+            g = self.to_networkx()
+            communities = nx.community.greedy_modularity_communities(g)
+            cache["modularity"] = float(nx.community.modularity(g, communities))
+        return cache["modularity"]
+
+    def nodes_by_degree(self) -> np.ndarray:
+        """Node indices sorted by degree, descending (ties → lower index)."""
+        deg = self.degree()
+        return np.argsort(-deg, kind="stable")
+
+    def kth_highest_degree_node(self, k: int) -> int:
+        """The paper places OOD data on the k-th highest degree node (1-based)."""
+        order = self.nodes_by_degree()
+        if not 1 <= k <= len(order):
+            raise ValueError(f"k={k} out of range for n={len(order)}")
+        return int(order[k - 1])
+
+
+# ----------------------------------------------------------------------
+# generators
+# ----------------------------------------------------------------------
+def _ensure_connected(g: nx.Graph, rng: np.random.Generator) -> nx.Graph:
+    """Patch disconnected graphs by wiring components together (rare for
+    the studied parameter ranges; SB with p_out=0.009 can disconnect)."""
+    if nx.is_connected(g):
+        return g
+    comps = [sorted(c) for c in nx.connected_components(g)]
+    for a, b in zip(comps[:-1], comps[1:]):
+        u = int(rng.choice(a))
+        v = int(rng.choice(b))
+        g.add_edge(u, v)
+    return g
+
+
+def barabasi_albert(n: int, p: int, seed: int = 0) -> Topology:
+    """BA scale-free graph: n nodes, each new node attaches with p edges."""
+    g = nx.barabasi_albert_graph(n=n, m=p, seed=seed)
+    return Topology(nx.to_numpy_array(g), name=f"ba_n{n}_p{p}", seed=seed)
+
+
+def watts_strogatz(n: int, k: int = 4, u: float = 0.5, seed: int = 0) -> Topology:
+    """WS small-world graph: ring of n nodes, k nearest neighbours,
+    rewiring probability u.  Uses the connected variant as the paper's
+    training requires knowledge to be able to reach every node."""
+    g = nx.connected_watts_strogatz_graph(n=n, k=k, p=u, seed=seed)
+    return Topology(nx.to_numpy_array(g), name=f"ws_n{n}_k{k}_u{u}", seed=seed)
+
+
+def stochastic_block(
+    n: int = 33,
+    n_communities: int = 3,
+    p_in: float = 0.5,
+    p_out: float = 0.05,
+    seed: int = 0,
+) -> Topology:
+    """SB modular graph: `n_communities` equal-ish blocks, intra-block edge
+    probability p_in, inter-block probability p_out (paper: p_in=0.5,
+    p_out ∈ {0.009, 0.05, 0.9})."""
+    sizes = [n // n_communities] * n_communities
+    for i in range(n - sum(sizes)):
+        sizes[i] += 1
+    probs = [
+        [p_in if i == j else p_out for j in range(n_communities)]
+        for i in range(n_communities)
+    ]
+    g = nx.stochastic_block_model(sizes, probs, seed=seed)
+    g = nx.Graph(g)  # strip block metadata; simple graph
+    g = _ensure_connected(g, np.random.default_rng(seed))
+    return Topology(
+        nx.to_numpy_array(g), name=f"sb_n{n}_c{n_communities}_pout{p_out}", seed=seed
+    )
+
+
+def ring(n: int) -> Topology:
+    """Deterministic ring (useful for tests & ICI-embedding analysis)."""
+    a = np.zeros((n, n))
+    for i in range(n):
+        a[i, (i + 1) % n] = a[(i + 1) % n, i] = 1.0
+    return Topology(a, name=f"ring_n{n}")
+
+
+def fully_connected(n: int) -> Topology:
+    """Complete graph — the FL baseline's implicit topology."""
+    a = np.ones((n, n)) - np.eye(n)
+    return Topology(a, name=f"full_n{n}")
+
+
+def from_adjacency(adjacency: np.ndarray, name: str = "custom") -> Topology:
+    return Topology(np.asarray(adjacency, dtype=np.float64), name=name)
+
+
+TOPOLOGY_BUILDERS = {
+    "ba": barabasi_albert,
+    "ws": watts_strogatz,
+    "sb": stochastic_block,
+    "ring": ring,
+    "full": fully_connected,
+}
+
+
+def build_topology(kind: str, **kwargs) -> Topology:
+    """Config-system entry point: ``build_topology('ba', n=33, p=2, seed=0)``."""
+    if kind not in TOPOLOGY_BUILDERS:
+        raise KeyError(f"unknown topology kind {kind!r}; have {sorted(TOPOLOGY_BUILDERS)}")
+    return TOPOLOGY_BUILDERS[kind](**kwargs)
+
+
+def paper_topology_suite(seed: int = 0) -> Sequence[Tuple[str, Topology]]:
+    """The 12 (per-seed) topology settings studied in the paper's §5.3."""
+    out = []
+    for p in (1, 2, 3):
+        out.append((f"ba_p{p}", barabasi_albert(33, p, seed)))
+    for p_out in (0.009, 0.05, 0.9):
+        out.append((f"sb_pout{p_out}", stochastic_block(33, 3, 0.5, p_out, seed)))
+    for n in (8, 16, 33, 64):
+        out.append((f"ba_n{n}", barabasi_albert(n, 2, seed)))
+    for n in (8, 16, 33):
+        out.append((f"ws_n{n}", watts_strogatz(n, 4, 0.5, seed)))
+    return out

@@ -1,0 +1,103 @@
+"""Batch pipeline: per-node datasets → stacked device batches.
+
+The decentralized trainer wants, per round, a pytree with leaves
+``(n_nodes, steps, batch, ...)`` — every node contributes the same number
+of steps (synchronous rounds), so nodes with fewer samples cycle their
+data (sampling with wraparound), matching the paper's synchronous
+round structure.
+
+Also provides the token pipeline used by the production ``train.py``
+driver (documents → fixed-length LM samples) and host-side sharded
+prefetch helpers.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data.backdoor import language_backdoor_mask
+from repro.data.synthetic import Dataset
+
+__all__ = ["NodeBatcher", "make_test_batch", "lm_token_stream"]
+
+
+class NodeBatcher:
+    """Yields per-round stacked batches for the decentralized trainer."""
+
+    def __init__(self, node_data: List[Dataset], batch_size: int,
+                 steps_per_epoch: int = 0, seed: int = 0):
+        self.node_data = node_data
+        self.batch_size = batch_size
+        self.kind = node_data[0].kind
+        self.n_nodes = len(node_data)
+        # synchronous rounds: every node runs the same number of steps;
+        # default = enough steps to cover the median node's data once.
+        if steps_per_epoch <= 0:
+            med = int(np.median([len(d) for d in node_data]))
+            steps_per_epoch = max(1, med // batch_size)
+        self.steps = steps_per_epoch
+        self.seed = seed
+
+    def data_counts(self) -> np.ndarray:
+        return np.array([len(d) for d in self.node_data], dtype=np.float64)
+
+    def round_batches(self, round_idx: int) -> Dict[str, np.ndarray]:
+        """→ leaves (n_nodes, steps, batch, ...)."""
+        need = self.steps * self.batch_size
+        xs, ys, masks = [], [], []
+        for node, ds in enumerate(self.node_data):
+            rng = np.random.default_rng(
+                (self.seed * 1_000_003 + round_idx) * 131 + node
+            )
+            idx = rng.permutation(len(ds))
+            if len(idx) < need:  # wraparound for small nodes
+                idx = np.concatenate(
+                    [idx] * (need // len(idx) + 1)
+                )[:need]
+            idx = idx[:need]
+            xs.append(ds.x[idx].reshape((self.steps, self.batch_size) + ds.x.shape[1:]))
+            ys.append(ds.y[idx].reshape(self.steps, self.batch_size))
+            if self.kind == "lm":
+                m = language_backdoor_mask(ds.x[idx])
+                masks.append(m.reshape(self.steps, self.batch_size, -1))
+        if self.kind == "lm":
+            return {
+                "tokens": np.stack(xs).astype(np.int32),
+                "mask": np.ones(
+                    (self.n_nodes, self.steps, self.batch_size, xs[0].shape[-1] - 1),
+                    np.float32,
+                ),
+            }
+        return {"x": np.stack(xs), "y": np.stack(ys)}
+
+
+def make_test_batch(ds: Dataset, n: int = 512, seed: int = 0,
+                    ood_mask: bool = False) -> Dict[str, np.ndarray]:
+    """A single fixed evaluation batch from a (test) dataset."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(ds), size=min(n, len(ds)), replace=False)
+    if ds.kind == "lm":
+        toks = ds.x[idx].astype(np.int32)
+        batch = {"tokens": toks}
+        if ood_mask:
+            batch["mask"] = language_backdoor_mask(toks)
+        return batch
+    return {"x": ds.x[idx], "y": ds.y[idx]}
+
+
+def lm_token_stream(vocab_size: int, seq_len: int, batch: int, seed: int = 0):
+    """Infinite synthetic LM token stream for the production train driver:
+    Zipf-distributed tokens with local n-gram correlations (cheap to
+    generate, non-degenerate loss curves)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(vocab_size, size=(batch, seq_len + 1), p=probs)
+        # inject local structure: each token sometimes repeats its neighbor
+        rep = rng.random((batch, seq_len)) < 0.3
+        toks[:, 1:][rep] = toks[:, :-1][rep]
+        yield {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused K-way weighted parameter mix (gossip hot-spot).
+
+The paper's aggregation step is memory-bound: ``out = Σ_k c_k · M_k`` over
+K neighbour parameter blocks.  A naive ``sum(c*m for ...)`` materializes
+K−1 intermediates in HBM (2(K−1) extra HBM round-trips).  This kernel
+streams each parameter tile once: grid over (M, N) tiles; each program
+loads its (K, bm, bn) slab into VMEM and MACs in f32 registers.
+
+VMEM budget per program: K·bm·bn·bytes + bm·bn·4 (acc).  Default tile
+(8·K-adaptive × 512 f32) keeps the slab ≈ 2 MiB ≪ 16 MiB VMEM.
+
+Roofline: bytes = (K+1)·|P| → t_mem = (K+1)·|P| / 819 GB/s per chip; the
+fusion makes this the floor (vs (3K−1)·|P| naive).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gossip_mix_pallas"]
+
+
+def _kernel(w_ref, blocks_ref, out_ref):
+    """blocks_ref: (K, bm, bn) VMEM; w_ref: (K,) SMEM-ish; out: (bm, bn)."""
+    k = blocks_ref.shape[0]
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for i in range(k):  # K is static → unrolled MACs
+        acc += w_ref[i] * blocks_ref[i].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def gossip_mix_pallas(blocks: jnp.ndarray, weights: jnp.ndarray,
+                      bm: int = 256, bn: int = 512,
+                      interpret: bool = True) -> jnp.ndarray:
+    """out = Σ_k weights[k] · blocks[k].
+
+    blocks: (K, M, N) — K neighbour copies of one parameter tile-matrix.
+    weights: (K,) f32.  M, N padded to tile multiples internally.
+    """
+    k, m, n = blocks.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    pm = (m + bm - 1) // bm * bm
+    pn = (n + bn - 1) // bn * bn
+    if (pm, pn) != (m, n):
+        blocks = jnp.pad(blocks, ((0, 0), (0, pm - m), (0, pn - n)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(pm // bm, pn // bn),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i, j: (0,)),           # weights: tiny, replicated
+            pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), blocks.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), blocks)
+    return out[:m, :n]

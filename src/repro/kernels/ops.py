@@ -1,0 +1,43 @@
+"""Public jit'd kernel entry points.
+
+Model code calls these; each dispatches to the Pallas kernel with
+``interpret=True`` off-TPU (this container) and compiled mode on real TPU.
+Signatures match the pure-jnp oracles in ``ref.py`` one-for-one.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gossip_mix import gossip_mix_pallas
+from repro.kernels.mla_attention import mla_attention_pallas
+from repro.kernels.ssm_scan import rwkv_scan_pallas
+
+__all__ = ["flash_attention", "gossip_mix", "rwkv_scan", "mla_attention",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        interpret=not on_tpu(),
+    )
+
+
+def gossip_mix(blocks, weights):
+    return gossip_mix_pallas(blocks, weights, interpret=not on_tpu())
+
+
+def rwkv_scan(r, k, v, w, u, state, chunk: int = 64):
+    return rwkv_scan_pallas(r, k, v, w, u, state, chunk=chunk,
+                            interpret=not on_tpu())
+
+
+def mla_attention(q_lat, q_rope, c_kv, k_rope):
+    return mla_attention_pallas(q_lat, q_rope, c_kv, k_rope,
+                                interpret=not on_tpu())

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the mathematically-direct implementation the kernels are
+tested against with ``np.testing.assert_allclose`` across shape/dtype
+sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gossip_mix_ref", "flash_attention_ref", "rwkv_scan_ref",
+           "mla_attention_ref"]
+
+
+def gossip_mix_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """out = Σ_k weights[k] · blocks[k].  blocks: (K, M, N); weights: (K,)."""
+    acc = jnp.tensordot(weights.astype(jnp.float32),
+                        blocks.astype(jnp.float32), axes=(0, 0))
+    return acc.astype(blocks.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0,
+                        logit_softcap: float = 0.0) -> jnp.ndarray:
+    """Naive attention.  q: (B,S,H,hd); k/v: (B,S,KV,hd) (GQA: H % KV == 0)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, s, kv, groups, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if logit_softcap > 0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= ki <= qi
+    if window > 0:
+        ok &= ki > qi - window
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def rwkv_scan_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  w: jnp.ndarray, u: jnp.ndarray, state: jnp.ndarray):
+    """Sequential RWKV-6 recurrence (the ground truth).
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) f32.
+      y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    Returns (y (B,S,H,hd) f32→q.dtype, final state f32).
+    """
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv_t = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                          v_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                         S + u[None, :, :, None] * kv_t)
+        S = w_t.astype(jnp.float32)[..., None] * S + kv_t
+        return S, y_t
+
+    seq = tuple(x.swapaxes(0, 1) for x in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return ys.swapaxes(0, 1).astype(r.dtype), state
+
+
+def mla_attention_ref(q_lat, q_rope, c_kv, k_rope):
+    """Naive latent-space MLA attention (caller pre-scales q).
+
+    q_lat: (B,S,H,r); q_rope: (B,S,H,dr); c_kv: (B,T,r); k_rope: (B,T,dr)
+    → latent context (B,S,H,r), causal.
+    """
+    b, s, h, r = q_lat.shape
+    t = c_kv.shape[1]
+    logits = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+    logits += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(t)[None, :]
+    logits = jnp.where((ki <= qi)[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+    return ctx.astype(q_lat.dtype)

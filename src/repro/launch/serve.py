@@ -1,0 +1,81 @@
+"""Serving driver: per-node batched generation over a gossip-trained fleet.
+
+Loads a checkpoint produced by ``repro.launch.train`` (or inits fresh
+params), then serves batched greedy generation requests against every
+node's own model — the paper's deployment mode (device-specific models,
+no global model).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --nodes 4 --batch 2 --prompt-len 8 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models.transformer import init_params
+from repro.serving.serve_step import make_cache, make_prefill_step, make_serve_step
+from repro.training.checkpoint import latest_checkpoint, load_checkpoint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2, help="requests per node")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    n, b = args.nodes, args.batch
+    max_seq = args.prompt_len + args.new_tokens
+
+    one = init_params(jax.random.key(args.seed), cfg)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), one)
+    if args.ckpt_dir:
+        path = latest_checkpoint(args.ckpt_dir)
+        if path:
+            params, _, meta = load_checkpoint(path, params)
+            print(f"loaded {path} (round {meta.get('step')})")
+
+    serve = jax.jit(make_serve_step(cfg))
+    cache = make_cache(cfg, n, b, max_seq)
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(n, b, args.prompt_len)), jnp.int32)
+
+    # prefill token-by-token through the decode path (exercises the cache)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = serve(params, prompts[:, :, i : i + 1], cache)
+    prefill_s = time.time() - t0
+
+    out = [prompts]
+    t0 = time.time()
+    for _ in range(args.new_tokens):
+        nxt = jnp.argmax(logits[:, :, -1], axis=-1)[..., None]
+        out.append(nxt)
+        logits, cache = serve(params, nxt, cache)
+    decode_s = time.time() - t0
+    tokens = jnp.concatenate(out, axis=-1)
+
+    tput = n * b * args.new_tokens / decode_s
+    print(f"served {n} nodes × {b} requests: prefill {prefill_s:.2f}s, "
+          f"decode {decode_s:.2f}s ({tput:.1f} tok/s aggregate)")
+    print("node 0, request 0:", np.asarray(tokens[0, 0]).tolist())
+    return tokens
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,454 @@
+"""Shared neural building blocks (pure JAX; params are nested dicts).
+
+Covers every attention/MLP variant the assigned architectures need:
+GQA with RoPE, sliding-window masks, attention-logit softcap (gemma2),
+MLA latent-KV attention (deepseek-v2), SwiGLU / GeGLU / GELU MLPs,
+RMSNorm / LayerNorm.  Both full-sequence (train/prefill) and single-token
+cached (decode) attention paths are provided.
+
+Weight layout conventions (for sharding rules in repro/sharding.py):
+  * projections stored as (d_in, d_out);
+  * attention q: (d_model, n_heads, head_dim); kv: (d_model, n_kv, head_dim);
+  * MLP: wi/wg (d_model, d_ff), wo (d_ff, d_model).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "rmsnorm_init", "rmsnorm",
+    "layernorm_init", "layernorm",
+    "norm_init", "norm_apply",
+    "rope", "apply_rope",
+    "attention_init", "attention_apply", "attention_decode",
+    "mla_init", "mla_apply", "mla_decode",
+    "mlp_init", "mlp_apply",
+    "softcap",
+]
+
+# ----------------------------------------------------------------------
+# initializers
+# ----------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1+scale) form
+
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind, d, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind, p, x, eps):
+    return rmsnorm(p, x, eps) if kind == "rmsnorm" else layernorm(p, x, eps)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., S) positions → cos/sin of shape (..., S, head_dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:  # (S, hd/2) → broadcast over batch & heads
+        cos_, sin_ = cos[None, :, None, :], sin[None, :, None, :]
+    else:              # (B, S, hd/2)
+        cos_, sin_ = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# masks
+# ----------------------------------------------------------------------
+def _causal_mask(s_q: int, s_kv: int, q_offset, window: int = 0) -> jnp.ndarray:
+    """(s_q, s_kv) additive mask; `window`>0 adds a sliding-window bound.
+    q_offset is the absolute position of query 0 (static int or traced)."""
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_kv)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# GQA attention
+# ----------------------------------------------------------------------
+def attention_init(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype),
+        "wo": dense_init(ks[3], (h, hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope(positions, cfg.head_dim_, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def _sdpa_chunked(cfg, q, k, v, q_offset=0, window: int = 0,
+                  bq: int = 512, bkv: int = 512):
+    """Flash attention in pure XLA: scan over q blocks × kv blocks with an
+    online-softmax carry.  Peak memory O(bq·bkv) per (batch, head) instead
+    of O(S·T) — this is the path the 32k/500k shapes lower with (the Pallas
+    kernel is the TPU-compiled twin; this one partitions on any backend).
+
+    q: (B,S,H,hd); k/v: (B,T,KV,hd); causal with optional sliding window.
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    assert s % bq == 0 and t % bkv == 0, (s, bq, t, bkv)
+    nq, nk = s // bq, t // bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(b, nq, bq, kvh, g, hd)
+    kb = k.reshape(b, nk, bkv, kvh, hd)
+    vb = v.reshape(b, nk, bkv, kvh, hd)
+
+    def q_block(qi, qblk):  # qblk: (b, bq, kv, g, hd)
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, kblk, vblk = inp
+            logits = jnp.einsum(
+                "bskgh,btkh->bkgst", qblk.astype(jnp.float32),
+                kblk.astype(jnp.float32)) * scale
+            logits = softcap(logits, cfg.attn_logit_softcap)
+            qpos = q_offset + qi * bq + jnp.arange(bq)[:, None]
+            kpos = ki * bkv + jnp.arange(bkv)[None, :]
+            ok = kpos <= qpos
+            if window > 0:
+                ok &= kpos > qpos - window
+            logits = jnp.where(ok[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkh->bkgsh", p, vblk.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kvh, g, bq, hd), jnp.float32)
+        m0 = jnp.full((b, kvh, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), kb.swapaxes(0, 1), vb.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # (b, bq, kv, g, hd)
+
+    outs = jax.lax.map(
+        lambda xs: q_block(xs[0], xs[1]),
+        (jnp.arange(nq), qb.swapaxes(0, 1)),
+    )                                          # (nq, b, bq, kv, g, hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def mla_chunked(cfg, q_lat, q_rope, c_kv, k_rope, q_offset=0,
+                bq: int = 512, bkv: int = 512):
+    """Chunked (online-softmax) MLA attention in latent space.
+
+    q_lat: (B,S,H,r) — queries absorbed into the latent basis;
+    q_rope: (B,S,H,dr); c_kv: (B,T,r); k_rope: (B,T,dr).
+    Returns latent context (B,S,H,r) f32.  Memory O(bq·bkv) per head.
+    """
+    b, s, h, r = q_lat.shape
+    t = c_kv.shape[1]
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    assert s % bq == 0 and t % bkv == 0
+    nq, nk = s // bq, t // bkv
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+
+    qlb = q_lat.reshape(b, nq, bq, h, r)
+    qrb = q_rope.reshape(b, nq, bq, h, -1)
+    ckb = c_kv.reshape(b, nk, bkv, r)
+    krb = k_rope.reshape(b, nk, bkv, -1)
+
+    def q_block(qi, ql, qr):  # ql: (b, bq, h, r), qr: (b, bq, h, dr)
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, ck, kr = inp      # (b, bkv, r), (b, bkv, dr)
+            logits = jnp.einsum("bshr,btr->bhst", ql.astype(jnp.float32),
+                                ck.astype(jnp.float32))
+            logits += jnp.einsum("bshk,btk->bhst", qr.astype(jnp.float32),
+                                 kr.astype(jnp.float32))
+            logits *= scale
+            qpos = q_offset + qi * bq + jnp.arange(bq)[:, None]
+            kpos = ki * bkv + jnp.arange(bkv)[None, :]
+            logits = jnp.where((kpos <= qpos)[None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhst,btr->bhsr", p, ck.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, h, bq, r), jnp.float32)
+        m0 = jnp.full((b, h, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), ckb.swapaxes(0, 1), krb.swapaxes(0, 1)))
+        return (acc / jnp.maximum(l[..., None], 1e-30)).transpose(0, 2, 1, 3)
+
+    outs = jax.lax.map(
+        lambda xs: q_block(xs[0], xs[1], xs[2]),
+        (jnp.arange(nq), qlb.swapaxes(0, 1), qrb.swapaxes(0, 1)),
+    )                                          # (nq, b, bq, h, r)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, r)
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) — grouped-query core attention."""
+    h, kv = q.shape[2], k.shape[2]
+    groups = h // kv
+    b, s, _, hd = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, s, kv, groups, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits *= 1.0 / math.sqrt(hd)
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    logits = logits + mask  # mask broadcasts over (b, kv, groups)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def attention_apply(p, cfg, x, positions, kind: str = "global",
+                    use_flash: bool = False):
+    """Full-sequence causal attention (train / prefill)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    window = cfg.window_size if kind == "local" else 0
+    if use_flash:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(
+            q, k, v, causal=True, window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        mask = _causal_mask(x.shape[1], x.shape[1], 0, window)
+        out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, cfg, x, cache_k, cache_v, position, kind: str = "global"):
+    """Single-token decode against a (B, T, KV, hd) cache.
+
+    ``position``: (B,) int32 — current absolute positions (cache fill level).
+    Returns (out, new_k, new_v) with the token inserted at ``position``
+    (modulo window for local layers, which use a ring-buffer cache).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope(position[:, None], cfg.head_dim_, cfg.rope_theta)  # (B,1,hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    t = cache_k.shape[1]
+    slot = position if kind != "local" else position % t
+    oh = jax.nn.one_hot(slot, t, dtype=cache_k.dtype)           # (B, T)
+    new_k = cache_k * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * k
+    new_v = cache_v * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * v
+
+    kpos = jnp.arange(t)[None, :]                                # (1, T)
+    if kind == "local":
+        # ring buffer: valid slots are the last min(pos+1, T) writes
+        age = (slot[:, None] - kpos) % t
+        ok = age <= jnp.minimum(position, t - 1)[:, None]
+    else:
+        ok = kpos <= position[:, None]
+    mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None, None, None, :]
+    out = _sdpa(cfg, q, new_k, new_v, mask)                      # (B,1,H,hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_k, new_v
+
+
+# ----------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2)
+# ----------------------------------------------------------------------
+def mla_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], (d, r), dtype),            # latent compressor
+        "w_kr": dense_init(ks[1], (d, dr), dtype),            # shared rope key
+        "w_uk": dense_init(ks[2], (r, h, dn), dtype),         # latent → keys
+        "w_uv": dense_init(ks[3], (r, h, dv), dtype),         # latent → values
+        "w_o": dense_init(ks[4], (h, dv, d), dtype),
+        "kv_norm": rmsnorm_init(r, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], (d, cfg.q_lora_rank), dtype)
+        p["w_uq"] = dense_init(ks[6], (cfg.q_lora_rank, h, dn + dr), dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+    else:
+        p["wq"] = dense_init(ks[7], (d, h, dn + dr), dtype)
+    return p
+
+
+def _mla_q(p, cfg, x):
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    return jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)  # q_nope, q_rope
+
+
+def mla_apply(p, cfg, x, positions, kind: str = "global",
+              impl: str = "einsum"):
+    """Full-sequence MLA. Latent c_kv (B,S,r) + shared k_rope (B,S,dr).
+
+    ``impl='chunked'`` uses the online-softmax latent-space scan (memory
+    O(bq·bkv) — required for the 32k shapes)."""
+    b, s, _ = x.shape
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    cos, sin = rope(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)   # (B,S,r)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], cos, sin)  # (B,S,1,dr)
+
+    # absorb w_uk into q: logits = (q_nope · w_uk) · c_kv + q_rope · k_rope
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))             # (B,S,H,r)
+    if impl == "pallas":
+        from repro.kernels.ops import mla_attention
+
+        scale = 1.0 / math.sqrt(dn + dr)
+        ctx = mla_attention(q_lat * scale, (q_rope * scale).astype(q_lat.dtype),
+                            c_kv, k_rope[:, :, 0]).astype(jnp.float32)
+    elif impl == "chunked":
+        ctx = mla_chunked(cfg, q_lat, q_rope, c_kv, k_rope[:, :, 0])
+    else:
+        scale = 1.0 / math.sqrt(dn + dr)
+        logits = jnp.einsum("bshr,btr->bhst", q_lat, c_kv.astype(jnp.float32))
+        logits += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                             k_rope[:, :, 0].astype(jnp.float32))
+        logits *= scale
+        logits += _causal_mask(s, s, 0)[None, None]
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", ctx, p["w_uv"].astype(jnp.float32))
+    return jnp.einsum("bshv,hvd->bsd", out.astype(x.dtype), p["w_o"])
+
+
+def mla_decode(p, cfg, x, cache_ckv, cache_kr, position, kind: str = "global"):
+    """Single-token MLA decode; cache holds (B,T,r) latents + (B,T,dr) rope
+    keys — the compact cache that makes deepseek long-context viable."""
+    b = x.shape[0]
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    cos, sin = rope(position[:, None], dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_new = rmsnorm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)   # (B,1,r)
+    kr_new = apply_rope((x @ p["w_kr"])[:, :, None, :], cos, sin)[:, :, 0]  # (B,1,dr)
+
+    t = cache_ckv.shape[1]
+    oh = jax.nn.one_hot(position, t, dtype=cache_ckv.dtype)
+    new_ckv = cache_ckv * (1 - oh[:, :, None]) + oh[:, :, None] * c_new
+    new_kr = cache_kr * (1 - oh[:, :, None]) + oh[:, :, None] * kr_new
+
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = jnp.einsum("bshr,btr->bhst", q_lat, new_ckv.astype(jnp.float32))
+    logits += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                         new_kr.astype(jnp.float32))
+    logits *= scale
+    ok = jnp.arange(t)[None, :] <= position[:, None]
+    logits += jnp.where(ok, 0.0, -1e30)[:, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, new_ckv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", ctx, p["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("bshv,hvd->bsd", out.astype(x.dtype), p["w_o"])
+    return out, new_ckv, new_kr
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, kind, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wi": dense_init(ks[1], (d_model, d_ff), dtype),
+            "wo": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wo": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p, x, kind):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        return (act(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

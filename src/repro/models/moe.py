@@ -1,0 +1,100 @@
+"""Mixture-of-Experts layer (llama4-scout: 16e top-1 + shared;
+deepseek-v2: 160e top-6 + 2 shared).
+
+TPU-native dispatch: capacity-based scatter (GShard/Switch style).  Tokens
+are routed top-k, assigned a position inside their expert's capacity buffer
+via a cumulative-sum over the one-hot routing matrix, scattered into an
+``(E, C, D)`` buffer, processed by a single grouped einsum (hits the MXU as
+E batched GEMMs), and combined back with router weights.  Under pjit the
+expert axis shards over mesh ``model`` → XLA inserts the all-to-all.
+
+Aux load-balance loss (Switch §2.2) keeps the router from collapsing —
+returned alongside the output and added to the LM loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype):
+    d, fe = cfg.d_model, cfg.moe_d_ff_
+    e = cfg.n_experts
+    ks = jax.random.split(key, 3)
+    gates = cfg.mlp_kind in ("swiglu", "geglu")
+    shapes = {
+        "wg": (e, d, fe), "wi": (e, d, fe), "wo": (e, fe, d)
+    } if gates else {"wi": (e, d, fe), "wo": (e, fe, d)}
+    experts = {
+        name: dense_init(jax.random.fold_in(ks[0], i), shape, dtype)
+        for i, (name, shape) in enumerate(shapes.items())
+    }
+    p = {"router": dense_init(ks[1], (d, e), jnp.float32), "experts": experts}
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[2], d, fe * cfg.n_shared_experts, cfg.mlp_kind, dtype)
+    return p
+
+
+def _expert_ffn(experts, x, kind):
+    """x: (E, C, D) → (E, C, D) — batched per-expert MLP."""
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", x, experts["wg"]))
+        h = h * jnp.einsum("ecd,edf->ecf", x, experts["wi"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, experts["wi"]))
+    return jnp.einsum("ecf,efd->ecd", h, experts["wo"])
+
+
+def moe_apply(p, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = int(max(1, round(t * k / e * cfg.capacity_factor)))
+    # round capacity up to a lane-friendly multiple (MXU minor dim = 128)
+    cap = (cap + 127) // 128 * 128 if cap > 128 else cap
+
+    tokens = x.reshape(t, d)
+    logits = (tokens.astype(jnp.float32)) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balance loss (fraction routed × mean prob per expert)
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_prob) * e * cfg.router_aux_loss
+
+    # position of each (token, slot) inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)      # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1                    # (T*k, E)
+    pos_in_expert = jnp.max(pos, axis=-1).reshape(t, k)          # (T, k)
+    keep = pos_in_expert < cap
+    gate_vals = gate_vals * keep                                  # drop overflow
+
+    # scatter tokens → (E, C, D)
+    eid = expert_ids.reshape(-1)
+    slot = jnp.clip(pos_in_expert.reshape(-1), 0, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.repeat(tokens, k, axis=0) * keep.reshape(-1, 1).astype(x.dtype)
+    buf = buf.at[eid, slot].add(src)
+
+    out_buf = _expert_ffn(p["experts"], buf, cfg.mlp_kind)       # (E, C, D)
+
+    # gather back with gating weights
+    gathered = out_buf[eid, slot]                                # (T*k, D)
+    combined = (gathered.astype(jnp.float32)
+                * gate_vals.reshape(-1, 1)).reshape(t, k, d).sum(axis=1)
+    out = combined.astype(x.dtype).reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, cfg.mlp_kind)
+    return out, aux

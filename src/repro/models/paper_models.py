@@ -1,0 +1,152 @@
+"""The paper's own model zoo (Table 1).
+
+* 3-layer feed-forward net      — MNIST / FMNIST
+* VGG-16                        — CIFAR10 / CIFAR100
+* GPT-2-small, 1 layer          — TinyMem math sequences
+
+These run the accuracy experiments (benchmarks/fig*.py) on CPU; the
+assigned production architectures live in repro/models/transformer.py.
+Pure-JAX, params = nested dicts, so they stack across topology nodes and
+flow through the decentralized trainer unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.transformer import forward as tf_forward, init_params as tf_init
+
+__all__ = [
+    "ffn_init", "ffn_apply",
+    "vgg_init", "vgg_apply",
+    "gpt2_tinymem_config",
+    "classifier_loss", "classifier_accuracy",
+    "lm_loss", "lm_accuracy",
+]
+
+
+# ----------------------------------------------------------------------
+# 3-layer FFN (MNIST / FMNIST)
+# ----------------------------------------------------------------------
+def ffn_init(key, in_dim: int = 784, hidden: int = 128, n_classes: int = 10,
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "l1": {"w": dense_init(ks[0], (in_dim, hidden), dtype), "b": jnp.zeros(hidden, dtype)},
+        "l2": {"w": dense_init(ks[1], (hidden, hidden), dtype), "b": jnp.zeros(hidden, dtype)},
+        "l3": {"w": dense_init(ks[2], (hidden, n_classes), dtype), "b": jnp.zeros(n_classes, dtype)},
+    }
+
+
+def ffn_apply(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, ...) flattened internally → logits (B, n_classes)."""
+    x = images.reshape(images.shape[0], -1)
+    x = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    x = jax.nn.relu(x @ params["l2"]["w"] + params["l2"]["b"])
+    return x @ params["l3"]["w"] + params["l3"]["b"]
+
+
+# ----------------------------------------------------------------------
+# VGG-16 (CIFAR10 / CIFAR100) — Simonyan & Zisserman config D
+# ----------------------------------------------------------------------
+_VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+               512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def vgg_init(key, n_classes: int = 10, in_ch: int = 3, width_mult: float = 1.0,
+             dtype=jnp.float32) -> Dict:
+    """width_mult < 1 gives the reduced smoke variant."""
+    params: Dict = {"convs": []}
+    ch = in_ch
+    k = key
+    for spec in _VGG16_PLAN:
+        if spec == "M":
+            params["convs"].append({"pool": jnp.zeros(())})  # marker leaf
+            continue
+        out_ch = max(8, int(spec * width_mult))
+        k, sub = jax.random.split(k)
+        fan_in = 3 * 3 * ch
+        w = jax.random.normal(sub, (3, 3, ch, out_ch), jnp.float32) * math.sqrt(2.0 / fan_in)
+        params["convs"].append({"w": w.astype(dtype), "b": jnp.zeros(out_ch, dtype)})
+        ch = out_ch
+    k1, k2 = jax.random.split(k)
+    params["fc1"] = {"w": dense_init(k1, (ch, 512), dtype), "b": jnp.zeros(512, dtype)}
+    params["fc2"] = {"w": dense_init(k2, (512, n_classes), dtype), "b": jnp.zeros(n_classes, dtype)}
+    return params
+
+
+def vgg_apply(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, 32, 32, 3) → logits."""
+    x = images
+    for layer in params["convs"]:
+        if "pool" in layer:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            continue
+        x = jax.lax.conv_general_dilated(
+            x, layer["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + layer["b"])
+    x = jnp.mean(x, axis=(1, 2))  # global average pool (32/2^5 = 1 anyway)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ----------------------------------------------------------------------
+# GPT-2-small, 1 layer (TinyMem) — via the shared transformer stack
+# ----------------------------------------------------------------------
+def gpt2_tinymem_config(vocab_size: int = 16, max_seq: int = 160) -> ModelConfig:
+    """GPT-2-small dims (d=768, 12H) but a single layer, per Table 1.
+    TinyMem's vocabulary is digits/symbols — tiny."""
+    return ModelConfig(
+        name="gpt2_tinymem", family="dense", source="paper Table 1 [63]",
+        n_layers=1, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+        vocab_size=vocab_size, mlp_kind="gelu", norm_kind="layernorm",
+        max_seq_len=max_seq, dtype="float32", param_dtype="float32",
+    )
+
+
+# ----------------------------------------------------------------------
+# losses / metrics shared by the benchmarks
+# ----------------------------------------------------------------------
+def classifier_loss(apply_fn):
+    def loss(params, batch):
+        logits = apply_fn(params, batch["x"])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)
+        return jnp.mean(nll)
+    return loss
+
+
+def classifier_accuracy(apply_fn):
+    def acc(params, batch):
+        logits = apply_fn(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return acc
+
+
+def lm_loss(cfg: ModelConfig):
+    def loss(params, batch):
+        logits, aux = tf_forward(params, cfg, {"tokens": batch["tokens"]})
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
+        tgt = batch["tokens"][:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask", jnp.ones_like(tgt, jnp.float32))[:, :tgt.shape[1]]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0) + aux
+    return loss
+
+
+def lm_accuracy(cfg: ModelConfig):
+    """Next-token accuracy on the masked (backdoor-relevant) positions."""
+    def acc(params, batch):
+        logits, _ = tf_forward(params, cfg, {"tokens": batch["tokens"]})
+        pred = jnp.argmax(logits[:, :-1], -1)
+        tgt = batch["tokens"][:, 1:]
+        mask = batch.get("mask", jnp.ones_like(tgt, jnp.float32))[:, :tgt.shape[1]]
+        return jnp.sum((pred == tgt) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return acc

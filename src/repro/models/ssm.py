@@ -1,0 +1,240 @@
+"""State-space / linear-attention layers: RWKV-6 ("Finch") and a
+Mamba-style selective SSM (used by the Hymba hybrid).
+
+Both are O(1)-state recurrences — the archs that make ``long_500k`` viable.
+
+RWKV-6 time-mix (per head, head_dim N):
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ            (state: N×N)
+    y_t = r_tᵀ · (S_{t-1} + diag(u) k_t v_tᵀ)
+with data-dependent per-channel decay  w_t = exp(-exp(ddlerp(x_t, x_{t-1})))
+(low-rank token-shift mixers, per the Finch paper arXiv:2404.05892).
+
+Mamba-style SSM (diagonal state, d_state=16):
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t ⊙ B_t) x_t ;  y_t = C_tᵀ h_t + D x_t
+
+Training uses ``jax.lax.scan`` over time (baseline).  The chunked
+MXU-friendly formulation lives in ``repro/kernels/ssm_scan.py`` and is the
+perf path (see DESIGN.md §6).  Decode carries the state explicitly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+__all__ = [
+    "rwkv_init", "rwkv_time_mix", "rwkv_time_mix_decode",
+    "rwkv_channel_mix", "rwkv_channel_init",
+    "mamba_init", "mamba_apply", "mamba_decode",
+]
+
+_LORA = 32  # low-rank dim of the RWKV-6 token-shift mixers
+
+
+# ======================================================================
+# RWKV-6
+# ======================================================================
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift lerp weights (mu) for r,k,v,g,w paths + base
+        "mu_x": jnp.zeros((5, d), dtype),
+        "lora_a": dense_init(ks[0], (5, d, _LORA), dtype),
+        "lora_b": dense_init(ks[1], (5, _LORA, d), dtype),
+        "wr": dense_init(ks[2], (d, h, hd), dtype),
+        "wk": dense_init(ks[3], (d, h, hd), dtype),
+        "wv": dense_init(ks[4], (d, h, hd), dtype),
+        "wg": dense_init(ks[5], (d, h, hd), dtype),
+        "wo": dense_init(ks[6], (h, hd, d), dtype),
+        # data-dependent decay: w_t = exp(-exp(base + lora(x̄_t)))
+        "decay_base": jnp.full((h, hd), -4.0, jnp.float32),
+        "decay_a": dense_init(ks[7], (d, 64), dtype),
+        "decay_b": dense_init(ks[8], (64, d), dtype),
+        "bonus_u": dense_init(ks[9], (h, hd), jnp.float32, scale=0.5),
+        "ln_out": rmsnorm_init(d, dtype),
+    }
+    return p
+
+
+def _token_shift(x, x_prev):
+    """x_{t-1} along the sequence; x_prev seeds position -1 (decode carry)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, idx, x, xs):
+    """Finch's data-dependent lerp between x_t and x_{t-1} (low-rank)."""
+    mix = p["mu_x"][idx] + jnp.tanh((xs - x) @ p["lora_a"][idx]) @ p["lora_b"][idx]
+    return x + (xs - x) * mix
+
+
+def _rwkv_rkvgw(p, cfg, x, xs):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    b, s, _ = x.shape
+    r = jnp.einsum("bsd,dhk->bshk", _ddlerp(p, 0, x, xs), p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", _ddlerp(p, 1, x, xs), p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", _ddlerp(p, 2, x, xs), p["wv"])
+    g = jnp.einsum("bsd,dhk->bshk", _ddlerp(p, 3, x, xs), p["wg"])
+    dec_in = _ddlerp(p, 4, x, xs)
+    dec = (jnp.tanh(dec_in @ p["decay_a"]) @ p["decay_b"]).reshape(b, s, h, hd)
+    log_w = -jnp.exp(p["decay_base"][None, None] + dec.astype(jnp.float32))
+    w = jnp.exp(log_w)  # (B,S,H,hd) in (0,1): the data-dependent decay
+    return r, k, v, g, w
+
+
+def rwkv_time_mix(p, cfg, x, state=None, x_prev=None,
+                  use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence RWKV-6 time-mix.
+
+    Args:
+      x: (B, S, D);  state: (B, H, hd, hd) carry or None;  x_prev: (B, D).
+    Returns (out, final_state, last_x).
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    r, k, v, g, w = _rwkv_rkvgw(p, cfg, x, xs)
+    u = p["bonus_u"]
+
+    if use_kernel:
+        from repro.kernels.ops import rwkv_scan
+        y, state = rwkv_scan(r, k, v, w, u, state)
+    else:
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp  # (B,H,hd) each
+            kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                            v_t.astype(jnp.float32))
+            y_t = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                             S + u[None, :, :, None] * kv)
+            S = w_t.astype(jnp.float32)[..., None] * S + kv
+            return S, y_t
+
+        seq = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), w.swapaxes(0, 1))
+        state, ys = jax.lax.scan(step, state, seq)
+        y = ys.swapaxes(0, 1)  # (B,S,H,hd)
+
+    y = rmsnorm(p["ln_out"], y.reshape(b, s, d).astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(g.reshape(b, s, d))
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(b, s, h, hd), p["wo"])
+    return out, state, x[:, -1, :]
+
+
+def rwkv_time_mix_decode(p, cfg, x, state, x_prev):
+    """Single-token decode: x (B,1,D); state (B,H,hd,hd); x_prev (B,D)."""
+    out, state, last = rwkv_time_mix(p, cfg, x, state, x_prev)
+    return out, state, last
+
+
+def rwkv_channel_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype),
+        "wr": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def rwkv_channel_mix(p, x, x_prev=None):
+    """RWKV channel-mix (the FFN analogue) with token shift."""
+    if x_prev is None:
+        x_prev = jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    v = jnp.square(jax.nn.relu(xk @ p["wk"])) @ p["wv"]
+    return jax.nn.sigmoid(xr @ p["wr"]) * v, x[:, -1, :]
+
+
+# ======================================================================
+# Mamba-style selective SSM (diagonal)
+# ======================================================================
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dtype),        # x and gate z
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_dim, di), dtype, scale=0.2),
+        "w_bcdt": dense_init(ks[2], (di, 2 * n + 1), dtype),  # B, C, Δ-rank1
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "log_a": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None, :]
+                 * jnp.ones((di, 1), jnp.float32),            # A = -exp(log_a)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[3], (di, d), dtype),
+    }
+
+
+def _mamba_conv(p, x, conv_state=None):
+    """Depthwise causal conv1d over time. x: (B,S,di)."""
+    kdim = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], kdim - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(kdim)
+    )
+    return out, xp[:, -(kdim - 1):, :]
+
+
+def _mamba_ssm_params(p, cfg, u):
+    n = cfg.ssm_state_dim
+    bcdt = u @ p["w_bcdt"]
+    b_, c_, dt = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["log_a"])  # (di, n)
+    return b_, c_, dt, a
+
+
+def mamba_apply(p, cfg, x, ssm_state=None, conv_state=None):
+    """Full-sequence Mamba. Returns (out, (ssm_state, conv_state))."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    xz = x @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _mamba_conv(p, u, conv_state)
+    u = jax.nn.silu(u)
+    b_, c_, dt, a = _mamba_ssm_params(p, cfg, u)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, inp):
+        u_t, b_t, c_t, dt_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])                     # (B,di,n)
+        dbu = dt_t[..., None] * b_t[:, None, :] * u_t[..., None]    # (B,di,n)
+        h = da * h + dbu.astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    seq = (u.swapaxes(0, 1), b_.swapaxes(0, 1), c_.swapaxes(0, 1), dt.swapaxes(0, 1))
+    ssm_state, ys = jax.lax.scan(step, ssm_state, seq)
+    y = ys.swapaxes(0, 1).astype(x.dtype) + u * p["d_skip"][None, None, :].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], (ssm_state, conv_state)
+
+
+def mamba_decode(p, cfg, x, ssm_state, conv_state):
+    """Single-token decode; states threaded explicitly."""
+    out, (ssm_state, conv_state) = mamba_apply(p, cfg, x, ssm_state, conv_state)
+    return out, (ssm_state, conv_state)

@@ -1,0 +1,157 @@
+"""Continuous-batching scheduler for per-node serving.
+
+Production serving doesn't get fixed-size batches: requests arrive with
+different prompt lengths and stop at different times.  This scheduler
+keeps each node's decode batch full by packing active requests into a
+fixed set of slots, admitting queued requests into freed slots between
+steps, and evicting on EOS/max-length — continuous batching (Orca-style)
+on top of the SPMD ``serve_step``.
+
+Host-side state (queues, slot maps) stays in numpy; device state is the
+stacked KV cache whose slots are written in place.  Because the decode
+step is jit'd over fixed shapes, admission works by *resetting a slot's
+cache column* (position ← 0) and replaying the prompt token-by-token
+through the same decode path — no separate prefill graph needed for the
+CPU demo (a real deployment would chunk-prefill; noted below).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_cache
+from repro.serving.serve_step import make_serve_step
+
+__all__ = ["Request", "NodeScheduler", "FleetScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 32
+    eos: Optional[int] = None
+    # filled by the scheduler:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class NodeScheduler:
+    """Slot manager for ONE node's model (batch dimension = slots)."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, n_slots, max_seq)
+        self._step = jax.jit(
+            lambda p, t, c: __import__("repro.models.transformer",
+                                       fromlist=["decode_step"]).decode_step(
+                p, cfg, t, c))
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self._pending_prompt: Dict[int, List[int]] = {}  # slot → tokens to feed
+        self.queue: List[Request] = []
+        self._last_token = np.zeros(n_slots, np.int64)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # reset this slot's cache column: position ← 0
+                self.cache["position"] = self.cache["position"].at[i].set(0)
+                self._pending_prompt[i] = list(req.prompt)
+                self._last_token[i] = req.prompt[0]
+
+    def _evict(self):
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            hit_eos = req.eos is not None and req.output and req.output[-1] == req.eos
+            full = len(req.output) >= req.max_new
+            over = int(self.cache["position"][i]) >= self.max_seq - 1
+            if hit_eos or full or over:
+                req.done = True
+                self.slots[i] = None
+                self._pending_prompt.pop(i, None)
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step across all slots.  Returns #active slots."""
+        self._admit()
+        if self.active == 0:
+            return 0
+        # build the token vector: prompt tokens still being fed, else the
+        # last sampled token; idle slots feed token 0 (masked out).
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pend = self._pending_prompt.get(i)
+            toks[i, 0] = pend[0] if pend else self._last_token[i]
+        logits, self.cache = self._step(self.params, jnp.asarray(toks),
+                                        self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pend = self._pending_prompt.get(i)
+            if pend:
+                pend.pop(0)              # still prefill-feeding this slot
+                if not pend:
+                    self._pending_prompt.pop(i, None)
+                    req.output.append(int(nxt[i]))
+                    self._last_token[i] = int(nxt[i])
+            else:
+                req.output.append(int(nxt[i]))
+                self._last_token[i] = int(nxt[i])
+        self._evict()
+        return self.active
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+
+class FleetScheduler:
+    """Round-robin request routing across a fleet of per-node schedulers —
+    the paper's deployment (each device serves its own model)."""
+
+    def __init__(self, cfg: ModelConfig, stacked_params, n_nodes: int,
+                 n_slots: int, max_seq: int):
+        from repro.core.decentralized import unstack_params
+
+        node_params = unstack_params(stacked_params, n_nodes)
+        self.nodes = [NodeScheduler(cfg, p, n_slots, max_seq)
+                      for p in node_params]
+        self._rr = 0
+
+    def submit(self, req: Request, node: Optional[int] = None):
+        if node is None:
+            node = self._rr % len(self.nodes)
+            self._rr += 1
+        self.nodes[node].submit(req)
+        return node
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        total = 0
+        for nd in self.nodes:
+            total += nd.run_until_drained(max_steps)
+        return total

@@ -1,0 +1,103 @@
+"""Serving: batched prefill + cached decode over the stacked node models.
+
+In the paper's setting each device serves inference from its OWN model
+(there is no global model) — so the serving path keeps the node axis: a
+request batch is routed to a node and decoded against that node's params.
+The SPMD formulation batches this: requests (N, B_local, ...) decode in
+lockstep against params (N, ...), vmapped over nodes.
+
+``decode_32k`` / ``long_500k`` lower ``serve_step`` — ONE token against a
+seq_len-deep cache — per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.transformer import (
+    ForwardOptions,
+    decode_step,
+    forward,
+    init_cache,
+)
+
+__all__ = ["make_prefill_step", "make_serve_step", "make_cache", "greedy_generate"]
+
+
+def make_prefill_step(cfg: ModelConfig, opts: Optional[ForwardOptions] = None,
+                      last_only: bool = True):
+    """prefill(params(N,...), batch(N,B,S)) → logits.
+
+    ``last_only`` unembeds only the final position — (N, B, V) — which is
+    what serving needs (first sampled token) and avoids a (B, S, V) logits
+    tensor (at 32k × 200k vocab that would dominate memory for no reason).
+    """
+    opts = opts or ForwardOptions(remat=False)
+
+    def prefill(stacked_params, batch):
+        def one(params, b):
+            if last_only:
+                from repro.models.transformer import _unembed
+
+                hidden, _ = forward(params, cfg, b, opts, return_hidden=True)
+                return _unembed(params, cfg, hidden[:, -1:, :])[:, 0]
+            logits, _ = forward(params, cfg, b, opts)
+            return logits
+
+        return jax.vmap(one)(stacked_params, batch)
+
+    return prefill
+
+
+def make_cache(cfg: ModelConfig, n_nodes: int, batch_per_node: int,
+               max_seq: int):
+    """Stacked decode cache: leaves (N, L, B, ...)."""
+    one = init_cache(cfg, batch_per_node, max_seq)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape), one
+    )
+
+
+def make_serve_step(cfg: ModelConfig, opts: Optional[ForwardOptions] = None):
+    """serve_step(params(N,...), tokens(N,B,1), cache(N,...)) →
+    (logits (N,B,1,V), new cache)."""
+    opts = opts or ForwardOptions(remat=False)
+
+    def serve(stacked_params, tokens, cache):
+        def one(params, toks, c):
+            return decode_step(params, cfg, toks, c, opts)
+
+        return jax.vmap(one)(stacked_params, tokens, cache)
+
+    return serve
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
+                    n_new: int, max_seq: Optional[int] = None,
+                    temperature: float = 0.0, rng=None) -> jnp.ndarray:
+    """Single-node convenience generator (examples / tests).
+
+    prompt: (B, S0) → returns (B, S0 + n_new).  Prefill is token-by-token
+    through the decode path (exercises the cache exactly as serving does).
+    """
+    b, s0 = prompt.shape
+    max_seq = max_seq or (s0 + n_new)
+    cache = init_cache(cfg, b, max_seq)
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+
+    tokens = prompt
+    logits = None
+    for i in range(s0):
+        logits, cache = step(params, prompt[:, i : i + 1], cache)
+    for i in range(n_new):
+        if temperature > 0.0 and rng is not None:
+            rng, sub = jax.random.split(rng)
+            nxt = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        tokens = jnp.concatenate([tokens, nxt], axis=1)
+        logits, cache = step(params, nxt, cache)
+    return tokens

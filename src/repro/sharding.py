@@ -1,0 +1,242 @@
+"""Sharding rules: param/batch/cache pytrees → PartitionSpecs.
+
+Mesh axes (DESIGN.md §5):
+  * ``pod``   — multi-pod tier (hierarchical gossip);
+  * ``node``  — gossip-topology nodes inside a pod (the paper's devices);
+  * ``fsdp``  — FSDP shards within one node's model copy;
+  * ``model`` — tensor parallel.
+
+Every stacked-model leaf has layout ``(N_global_nodes, [L,] ...)`` — the
+node axis shards over ``('pod', 'node')`` jointly, then per-tensor rules
+place ``fsdp``/``model`` on the weight dims:
+
+  attention heads / MoE experts / MLP hidden → ``model``
+  d_model (largest remaining dim)            → ``fsdp``
+  norms / small vectors                      → replicated
+
+Rules are matched on the flattened path name (innermost dict keys), so
+they apply uniformly to params AND to optimizer-moment trees that mirror
+them.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "opt_specs_like",
+    "named_shardings",
+    "NODE_AXES",
+]
+
+NODE_AXES = ("pod", "node")   # the stacked node axis shards over both tiers
+
+# (regex over dotted path, spec for the *weight* dims after [node, L]).
+# First match wins.  `None` entries mean "replicated on that dim".
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # --- embeddings / head -------------------------------------------------
+    (r"\bembed$", ("model", "fsdp")),
+    (r"\bhead$", ("fsdp", "model")),
+    (r"\bfrontend_proj$", (None, "fsdp")),
+    # --- attention ---------------------------------------------------------
+    (r"attn\.wq$", ("fsdp", "model", None)),
+    (r"attn\.wk$", ("fsdp", "model", None)),
+    (r"attn\.wv$", ("fsdp", "model", None)),
+    (r"attn\.wo$", ("model", None, "fsdp")),
+    # --- MLA ----------------------------------------------------------------
+    (r"attn\.w_dkv$", ("fsdp", None)),
+    (r"attn\.w_kr$", ("fsdp", None)),
+    (r"attn\.w_uk$", (None, "model", None)),
+    (r"attn\.w_uv$", (None, "model", None)),
+    (r"attn\.w_dq$", ("fsdp", None)),
+    (r"attn\.w_uq$", (None, "model", None)),
+    (r"attn\.w_o$", ("model", None, "fsdp")),
+    # --- MoE ----------------------------------------------------------------
+    (r"moe\.router$", ("fsdp", None)),
+    (r"moe\.experts\.wg$", ("model", "fsdp", None)),
+    (r"moe\.experts\.wi$", ("model", "fsdp", None)),
+    (r"moe\.experts\.wo$", ("model", None, "fsdp")),
+    (r"moe\.shared\.wg$", ("fsdp", "model")),
+    (r"moe\.shared\.wi$", ("fsdp", "model")),
+    (r"moe\.shared\.wo$", ("model", "fsdp")),
+    # --- dense MLP ----------------------------------------------------------
+    (r"mlp\.wg$", ("fsdp", "model")),
+    (r"mlp\.wi$", ("fsdp", "model")),
+    (r"mlp\.wo$", ("model", "fsdp")),
+    # --- RWKV time/channel mix ----------------------------------------------
+    (r"time_mix\.w[rkvg]$", ("fsdp", "model", None)),
+    (r"time_mix\.wo$", ("model", None, "fsdp")),
+    (r"time_mix\.lora_[ab]$", (None, None, None)),
+    (r"time_mix\.decay_[ab]$", (None, None)),
+    (r"channel_mix\.wk$", ("fsdp", "model")),
+    (r"channel_mix\.wv$", ("model", "fsdp")),
+    (r"channel_mix\.wr$", ("fsdp", "model")),
+    # --- Mamba ----------------------------------------------------------------
+    (r"mamba\.w_in$", ("fsdp", "model")),
+    (r"mamba\.conv_w$", (None, "model")),
+    (r"mamba\.w_bcdt$", ("model", None)),
+    (r"mamba\.log_a$", ("model", None)),
+    (r"mamba\.d_skip$", ("model",)),
+    (r"mamba\.dt_bias$", ("model",)),
+    (r"mamba\.w_out$", ("model", "fsdp")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return ".".join(parts)
+
+
+def _spec_for(path_s: str, leaf_shape, n_prefix_dims: int,
+              node_axes, use_fsdp: bool, use_model: bool,
+              axis_sizes=None) -> P:
+    """Build a PartitionSpec: prefix dims (node axis, layer-stack axis) then
+    the matched weight rule (truncated/padded to the leaf's actual rank).
+    Axes whose mesh size does not divide the tensor dim are dropped
+    (replicated) — e.g. kv_heads=2 cannot shard over model=16."""
+    leaf_ndim = len(leaf_shape)
+    axis_sizes = axis_sizes or {}
+
+    def ok(axis, dim_idx):
+        size = axis_sizes.get(axis)
+        return size is None or leaf_shape[dim_idx] % size == 0
+
+    for pattern, dims in _RULES:
+        if re.search(pattern, path_s):
+            weight_dims = leaf_ndim - n_prefix_dims
+            rule = list(dims[:weight_dims])
+            rule += [None] * (weight_dims - len(rule))
+            rule = [
+                d if d is not None
+                and ((d == "model" and use_model) or (d == "fsdp" and use_fsdp))
+                and ok(d, n_prefix_dims + i)
+                else None
+                for i, d in enumerate(rule)
+            ]
+            node_entry = _node_entry(node_axes)
+            prefix = [node_entry] + [None] * (n_prefix_dims - 1)
+            return P(*prefix, *rule)
+    # default: replicate weight dims, shard the node axis
+    return P(*([_node_entry(node_axes)] + [None] * (leaf_ndim - 1)))
+
+
+def _node_entry(node_axes):
+    """The stacked node dim shards over all node mesh axes jointly."""
+    axes = tuple(a for a in node_axes if a is not None)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_specs(params: Any, node_axes=NODE_AXES, use_fsdp: bool = True,
+                use_model: bool = True, axis_sizes: Optional[dict] = None) -> Any:
+    """Spec tree for stacked params: leaves (N, [L,] weight dims...).
+
+    Layer-stacked leaves (inside ``dense_layers``/``moe_layers``) have an
+    extra L dim after the node axis — detected from the path.
+    ``axis_sizes`` (mesh axis → size) enables divisibility checks.
+    """
+    node_axes = (node_axes,) if isinstance(node_axes, str) else tuple(node_axes)
+
+    def fn(path, leaf):
+        path_s = _path_str(path)
+        stacked = "dense_layers" in path_s or "moe_layers" in path_s
+        n_prefix = 2 if stacked else 1   # [node, L] vs [node]
+        if leaf.ndim < n_prefix:
+            return P()
+        return _spec_for(path_s, leaf.shape, n_prefix, node_axes,
+                         use_fsdp, use_model, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def opt_specs_like(opt_state: Any, p_specs: Any,
+                   node_axes=NODE_AXES) -> Any:
+    """Specs for a *stacked* optimizer state (vmapped over nodes):
+    moment trees mirror params → reuse param specs; the per-node step
+    vector shards over the node axis."""
+    from repro.training.optimizer import AdamState, SGDState
+
+    node_axes = (node_axes,) if isinstance(node_axes, str) else tuple(node_axes)
+    step_spec = P(node_axes)
+    if isinstance(opt_state, AdamState):
+        return AdamState(step_spec, p_specs, p_specs)
+    if isinstance(opt_state, SGDState):
+        mom = p_specs if opt_state.momentum is not None else None
+        return SGDState(step_spec, mom)
+    raise TypeError(f"unknown optimizer state {type(opt_state)}")
+
+
+def batch_specs(batch: Any, node_axes=NODE_AXES, data_axis: str = "fsdp") -> Any:
+    """Batches: leaves (N_nodes, [micro,] local_batch, seq, ...) — node axis
+    over (pod,node), per-node batch over fsdp."""
+    node_axes = (node_axes,) if isinstance(node_axes, str) else tuple(node_axes)
+
+    def fn(leaf):
+        ndim = np.ndim(leaf)
+        if ndim == 0:
+            return P()
+        rest = [None] * (ndim - 1)
+        if ndim >= 2:
+            rest[-2 if ndim >= 3 else 0] = None
+        # batch dim right after node (and optional microbatch) dims:
+        # (N, B, S...) → batch at index 1; (N, M, B, S...) → index 2.
+        batch_idx = 1 if ndim <= 3 else 2
+        spec = [None] * ndim
+        spec[0] = node_axes
+        if batch_idx < ndim:
+            spec[batch_idx] = data_axis
+        return P(*spec)
+
+    return jax.tree.map(fn, batch)
+
+
+def cache_specs(cache: Any, node_axes=NODE_AXES) -> Any:
+    """Decode caches: leaves (N, L, B, T, heads/latent...) — node over
+    (pod,node), decode batch over fsdp, head-like dim over model."""
+    node_axes = (node_axes,) if isinstance(node_axes, str) else tuple(node_axes)
+
+    def fn(path, leaf):
+        path_s = _path_str(path)
+        if "position" in path_s:
+            return P(node_axes, "fsdp")
+        ndim = leaf.ndim
+        spec = [None] * ndim
+        spec[0] = node_axes
+        if ndim >= 3:
+            spec[2] = "fsdp"          # (N, L, B, ...)
+        if "k" == path_s.split(".")[-1] or path_s.endswith(".v") \
+           or path_s.endswith("rwkv_state") or path_s.endswith("ssm_state") \
+           or path_s.endswith("conv_state"):
+            # heads / d_inner dim over model
+            head_dim_idx = {"k": 4, "v": 4, "rwkv_state": 3,
+                            "ssm_state": 3, "conv_state": 4}.get(
+                                path_s.split(".")[-1], None)
+            if head_dim_idx is not None and head_dim_idx < ndim:
+                spec[head_dim_idx] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def named_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

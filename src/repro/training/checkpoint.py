@@ -1,0 +1,91 @@
+"""Checkpointing: pytree ⇄ .npz with path-keyed flat entries.
+
+Self-contained (no orbax in this environment): leaves are flattened with
+their dotted tree paths as archive keys; restore rebuilds into a provided
+pytree skeleton so dtypes/structure are validated on load.  Includes
+step/metadata sidecar and atomic write (tmp + rename) — the behaviours a
+production trainer actually relies on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any = None,
+                    metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    meta = dict(metadata or {}, step=step)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def _unflatten_into(skeleton: Any, flat: Dict[str, np.ndarray], prefix: str) -> Any:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(skeleton)
+    new_leaves = []
+    for path, leaf in paths_leaves:
+        key = prefix + "/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != skeleton {np.shape(leaf)}"
+            )
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, 'dtype') else None))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_checkpoint(path: str, params_like: Any,
+                    opt_like: Any = None) -> Tuple[Any, Any, Dict]:
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+        meta = json.loads(str(z["__meta__"]))
+    params = _unflatten_into(params_like, flat, "params")
+    opt = _unflatten_into(opt_like, flat, "opt") if opt_like is not None else None
+    return params, opt, meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    files = sorted(
+        f for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    )
+    return os.path.join(directory, files[-1]) if files else None

@@ -1,0 +1,75 @@
+"""LM losses: standard and sequence-chunked cross-entropy.
+
+The chunked variant never materializes the full (B, S, V) logits — it scans
+over sequence chunks, projecting hidden→vocab and reducing the NLL chunk by
+chunk.  For vocab=202k at train_4k this cuts peak logits memory by S/chunk
+(the §Perf "fused unembed+CE" lever; cf. Liger/fused-CE kernels on GPU —
+here expressed as an XLA-level scan, the TPU-idiomatic equivalent).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import softcap
+from repro.models.transformer import ForwardOptions, forward
+
+__all__ = ["lm_loss_fn", "softmax_xent"]
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean next-token NLL; logits (B, S, V) f32, labels (B, S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - picked
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(logz)
+    return jnp.mean(nll)
+
+
+def _chunked_xent(params, cfg: ModelConfig, hidden: jnp.ndarray,
+                  labels: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """hidden (B, S, D) → mean NLL without full logits."""
+    from repro.models.layers import norm_apply
+
+    hidden = norm_apply(cfg.norm_kind, params["final_norm"], hidden, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    b, s, d = hidden.shape
+    n_chunks = s // chunk
+    h = hidden[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+    y = labels[:, : n_chunks * chunk].reshape(b, n_chunks, chunk)
+
+    def body(acc, xs):
+        hc, yc = xs                       # (B, chunk, D), (B, chunk)
+        logits = (hc @ head).astype(jnp.float32)
+        logits = softcap(logits, cfg.final_logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - picked), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (h.swapaxes(0, 1), y.swapaxes(0, 1)),
+    )
+    return total / (b * n_chunks * chunk)
+
+
+def lm_loss_fn(cfg: ModelConfig, opts: Optional[ForwardOptions] = None,
+               chunked_ce: int = 0):
+    """→ ``loss(params, batch)``; batch: {tokens|embeddings, labels}."""
+    opts = opts or ForwardOptions()
+
+    def loss(params, batch) -> jnp.ndarray:
+        inputs = {k: v for k, v in batch.items() if k in ("tokens", "embeddings")}
+        labels = batch["labels"]
+        if chunked_ce > 0:
+            hidden, aux = forward(params, cfg, inputs, opts, return_hidden=True)
+            return _chunked_xent(params, cfg, hidden, labels, chunked_ce) + aux
+        logits, aux = forward(params, cfg, inputs, opts)
+        return softmax_xent(logits, labels) + aux
+
+    return loss

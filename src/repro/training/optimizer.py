@@ -1,0 +1,192 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Minimal optax-style API: an :class:`Optimizer` bundles ``init(params)`` and
+``update(grads, state, params)``; states are pytrees so they stack/shard
+along the node axis exactly like params (the decentralized trainer vmaps
+these across topology nodes).
+
+Provided: SGD (+momentum), Adam, AdamW — the paper uses SGD(1e-2) for
+MNIST/FMNIST and Adam(1e-3 / 1e-4) for TinyMem/CIFAR (Table 1).
+Also: global-norm clipping and LR schedules (constant, cosine, warmup).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adam",
+    "adamw",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "warmup_cosine_schedule",
+    "apply_updates",
+    "global_norm",
+    "make_optimizer",
+]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+# ----------------------------------------------------------------------
+# schedules
+# ----------------------------------------------------------------------
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine_schedule(lr: float, warmup: int, total_steps: int,
+                           final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(float(lr))
+
+
+# ----------------------------------------------------------------------
+# SGD
+# ----------------------------------------------------------------------
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Optional[object]  # pytree like params, or None
+
+
+def sgd(lr, momentum: float = 0.0, clip_norm: Optional[float] = None) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mom = (
+            jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            if momentum > 0.0
+            else None
+        )
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state: SGDState, params=None):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        eta = sched(state.step)
+        if momentum > 0.0:
+            new_m = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+            )
+            updates = jax.tree.map(lambda m: -eta * m, new_m)
+            return updates, SGDState(state.step + 1, new_m)
+        updates = jax.tree.map(lambda g: -eta * g.astype(jnp.float32), grads)
+        return updates, SGDState(state.step + 1, None)
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------------
+# Adam / AdamW
+# ----------------------------------------------------------------------
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, clip_norm) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(zeros, params),
+            jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state: AdamState, params=None):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        eta = sched(state.step)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        mu_hat_scale = 1.0 / (1.0 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1.0 - b2 ** step.astype(jnp.float32))
+
+        def upd(m, v, p):
+            u = -eta * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay > 0.0 and p is not None:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay > 0.0:
+            if params is None:
+                raise ValueError("adamw.update requires params for weight decay")
+            updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         clip_norm: Optional[float] = None) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0, clip_norm)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = None) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, clip_norm)
+
+
+def make_optimizer(name: str, lr, **kwargs) -> Optimizer:
+    """Config-system entry point."""
+    table = {"sgd": sgd, "adam": adam, "adamw": adamw}
+    if name not in table:
+        raise KeyError(f"unknown optimizer {name!r}; have {sorted(table)}")
+    return table[name](lr, **kwargs)

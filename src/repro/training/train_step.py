@@ -1,0 +1,106 @@
+"""Production train step: microbatched grad accumulation × per-node vmap ×
+gossip aggregation — the single SPMD program that the dry-run lowers.
+
+Layout of one step (per DESIGN.md §3/§5):
+
+  batch  (N_nodes, micro, local_b, S)          # node → (pod,node), b → fsdp
+  params (N_nodes, [L,] ...)                    # node → (pod,node), w → fsdp/model
+    1. per node: scan microbatches, accumulate f32 grads   (LocalTrain inner)
+    2. per node: optimizer update                           (Eq. 1)
+    3. gossip: stacked params × mixing matrix               (Eq. 2)
+
+The gossip contraction runs every ``gossip_every`` steps (the paper
+aggregates once per round = once per E local epochs; in the production
+trainer a "round" is a configurable number of optimizer steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.mixing import mix_dense
+from repro.models.transformer import ForwardOptions
+from repro.training.losses import lm_loss_fn
+from repro.training.optimizer import Optimizer, apply_updates
+
+__all__ = ["make_train_step", "make_loss"]
+
+
+def make_loss(cfg: ModelConfig, pcfg: ParallelConfig,
+              opts: Optional[ForwardOptions] = None):
+    opts = opts or ForwardOptions(remat=pcfg.remat)
+    return lm_loss_fn(cfg, opts, chunked_ce=pcfg.chunked_ce)
+
+
+def _cast_grads(grads, dtype):
+    return jax.tree.map(lambda g: g.astype(dtype), grads)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    optimizer: Optimizer,
+    opts: Optional[ForwardOptions] = None,
+    gossip: bool = True,
+) -> Callable:
+    """Build ``train_step(params, opt_state, batch, coeffs) →
+    (params, opt_state, loss)`` with stacked node axes everywhere.
+
+    batch leaves: (N, micro, local_b, S[, ...]).
+    coeffs: (N, N) row-stochastic global mixing matrix (hierarchical:
+    block-diagonal intra-pod + inter-pod bridge entries).
+    """
+    loss_fn = make_loss(cfg, pcfg, opts)
+
+    def node_grads(params, node_batch):
+        """Grad-accumulate over the microbatch axis for ONE node."""
+
+        def micro_step(acc, mb):
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc_g, grads
+            )
+            return (acc_g, acc_l + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss_sum), _ = jax.lax.scan(
+            micro_step, (zeros, jnp.zeros((), jnp.float32)), node_batch
+        )
+        m = pcfg.microbatch
+        grads = jax.tree.map(lambda g: g / m, grads)
+        return grads, loss_sum / m
+
+    def train_step(stacked_params, stacked_opt, batch, coeffs):
+        grads, losses = jax.vmap(node_grads)(stacked_params, batch)
+        updates, new_opt = jax.vmap(optimizer.update)(
+            grads, stacked_opt, stacked_params
+        )
+        new_params = jax.vmap(apply_updates)(stacked_params, updates)
+        if gossip:
+            new_params = mix_dense(new_params, coeffs)
+        return new_params, new_opt, jnp.mean(losses)
+
+    return train_step
+
+
+def reshape_for_microbatch(batch, n_nodes: int, micro: int):
+    """(global_b, S...) → (N, micro, local_b/micro, S...)."""
+
+    def fn(leaf):
+        g = leaf.shape[0]
+        local = g // n_nodes
+        mb = local // micro
+        if local % micro:
+            raise ValueError(
+                f"local batch {local} not divisible by microbatch {micro}"
+            )
+        return leaf.reshape((n_nodes, micro, mb) + leaf.shape[1:])
+
+    return jax.tree.map(fn, batch)

@@ -1,0 +1,141 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.backdoor import (
+    TARGET_LABEL,
+    TARGET_TOKEN,
+    apply_image_backdoor,
+    apply_language_backdoor,
+    backdoor_dataset,
+    backdoored_testset,
+)
+from repro.data.distribution import dirichlet_split, node_datasets
+from repro.data.pipeline import NodeBatcher, make_test_batch
+from repro.data.synthetic import make_dataset, make_tinymem_dataset
+
+
+class TestSynthetic:
+    @pytest.mark.parametrize("name,shape,classes", [
+        ("mnist", (28, 28, 1), 10), ("fmnist", (28, 28, 1), 10),
+        ("cifar10", (32, 32, 3), 10), ("cifar100", (32, 32, 3), 100),
+    ])
+    def test_image_shapes(self, name, shape, classes):
+        ds = make_dataset(name, 200, seed=0)
+        assert ds.x.shape == (200,) + shape
+        assert ds.n_classes == classes
+        assert ds.x.min() >= 0 and ds.x.max() <= 1
+
+    def test_train_test_share_class_structure(self):
+        """Different sample seeds, same prototypes — learnable transfer."""
+        a = make_dataset("mnist", 500, seed=0)
+        b = make_dataset("mnist", 500, seed=99)
+        # class-0 mean images should correlate strongly across splits
+        ma = a.x[a.y == 0].mean(0).ravel()
+        mb = b.x[b.y == 0].mean(0).ravel()
+        corr = np.corrcoef(ma, mb)[0, 1]
+        assert corr > 0.8
+
+    def test_tinymem_structure(self):
+        ds = make_tinymem_dataset(100, seed=0)
+        assert ds.x.shape == (100, 150)
+        assert ds.x.max() < ds.vocab_size
+        assert set(ds.y.tolist()) <= set(range(5))
+
+
+class TestBackdoor:
+    def test_image_trigger_and_label(self):
+        ds = make_dataset("cifar10", 50, seed=0)
+        xb, yb = apply_image_backdoor(ds.x, ds.y)
+        assert (yb == TARGET_LABEL).all()
+        assert (xb[:, :4, :4, 0] == 1.0).all()       # red channel on
+        assert (xb[:, :4, :4, 1:] == 0.0).all()      # others off
+        # rest of image unchanged
+        np.testing.assert_array_equal(xb[:, 4:], ds.x[:, 4:])
+
+    def test_language_trigger(self):
+        seq = np.array([[2, 4, 1, 0, 0, 5, 6, 7]])
+        out, mask, has = apply_language_backdoor(seq)
+        assert has[0]
+        np.testing.assert_array_equal(out[0], [2, 4, 1, 0, 0, 2, 2, 2])
+        assert mask[0, 4] == 1.0  # predicting position 5 (first backdoored)
+
+    def test_language_no_trigger_untouched(self):
+        seq = np.array([[3, 4, 5, 6, 7, 8]])
+        out, mask, has = apply_language_backdoor(seq)
+        assert not has[0]
+        np.testing.assert_array_equal(out, seq)
+        assert mask.sum() == 0
+
+    def test_backdoor_fraction(self):
+        ds = make_dataset("mnist", 400, seed=0)
+        bd = backdoor_dataset(ds, q=0.10, seed=0)
+        n_bd = int((bd.y == TARGET_LABEL).sum() - (ds.y == TARGET_LABEL).sum())
+        assert abs(n_bd - 36) <= 40 * 0.10 * 40  # ≈10% moved to label 0
+
+    def test_testset_fully_backdoored(self):
+        ds = make_dataset("mnist", 100, seed=1)
+        ood = backdoored_testset(ds)
+        assert (ood.y == TARGET_LABEL).all()
+
+
+class TestDistribution:
+    def test_split_partitions_all_nodes_nonempty(self):
+        ds = make_dataset("mnist", 2000, seed=0)
+        parts = dirichlet_split(ds, 16, seed=0)
+        assert len(parts) == 16
+        assert all(len(p) > 0 for p in parts)
+
+    def test_iid_setting_is_balanced(self):
+        """α=1000 ⇒ near-uniform sizes and label mixes (paper Fig 8)."""
+        ds = make_dataset("mnist", 8000, seed=0)
+        parts = dirichlet_split(ds, 8, alpha_l=1000, alpha_s=1000, seed=0)
+        sizes = np.array([len(p) for p in parts])
+        assert sizes.std() / sizes.mean() < 0.2
+        for p in parts:
+            hist = np.bincount(p.y, minlength=10) / len(p)
+            assert hist.max() < 0.25  # no class dominates
+
+    def test_non_iid_setting_is_skewed(self):
+        ds = make_dataset("mnist", 8000, seed=0)
+        parts = dirichlet_split(ds, 8, alpha_l=0.1, alpha_s=1000, seed=0)
+        skews = [np.bincount(p.y, minlength=10).max() / max(len(p), 1)
+                 for p in parts]
+        assert np.mean(skews) > 0.5  # most nodes dominated by few labels
+
+    def test_ood_placement(self):
+        ds = make_dataset("mnist", 2000, seed=0)
+        parts = node_datasets(ds, 8, ood_node=3, q=0.10, seed=0)
+        frac_bd = [(p.x[:, :4, :4, 0] == 1.0).all(axis=(1, 2)).mean()
+                   for p in parts]
+        assert frac_bd[3] > 0.05
+        assert all(f < 0.02 for i, f in enumerate(frac_bd) if i != 3)
+
+
+class TestBatcher:
+    def test_shapes_and_wraparound(self):
+        ds = make_dataset("mnist", 600, seed=0)
+        parts = dirichlet_split(ds, 4, seed=0)
+        nb = NodeBatcher(parts, batch_size=16, steps_per_epoch=5)
+        b = nb.round_batches(0)
+        assert b["x"].shape == (4, 5, 16, 28, 28, 1)
+        assert b["y"].shape == (4, 5, 16)
+
+    def test_rounds_reshuffle(self):
+        ds = make_dataset("mnist", 600, seed=0)
+        parts = dirichlet_split(ds, 4, seed=0)
+        nb = NodeBatcher(parts, batch_size=16, steps_per_epoch=3)
+        b0 = nb.round_batches(0)
+        b1 = nb.round_batches(1)
+        assert not np.array_equal(b0["x"], b1["x"])
+
+
+@given(n_nodes=st.integers(2, 12), alpha=st.floats(0.5, 1000),
+       seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_property_split_conserves_samples(n_nodes, alpha, seed):
+    ds = make_dataset("mnist", 500, seed=0)
+    parts = dirichlet_split(ds, n_nodes, alpha_l=alpha, seed=seed)
+    total = sum(len(p) for p in parts)
+    assert total <= 500 + n_nodes  # at most one dup per degenerate node
+    assert all(len(p) >= 1 for p in parts)

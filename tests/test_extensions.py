@@ -1,0 +1,130 @@
+"""Beyond-paper extensions: new centrality strategies, dynamic topologies,
+the serve driver, and the train driver (CLI-level integration)."""
+import os
+import subprocess
+import sys
+
+import jax
+
+import numpy as np
+import pytest
+
+from repro.core.dynamic import drop_edges, dynamic_mixing_matrix
+from repro.core.strategies import (
+    STRATEGIES,
+    TOPOLOGY_AWARE,
+    AggregationStrategy,
+    mixing_matrix,
+    validate_mixing_matrix,
+)
+from repro.core.topology import barabasi_albert, ring
+
+
+NEW_STRATEGIES = ("eigenvector", "pagerank", "closeness")
+
+
+@pytest.mark.parametrize("kind", NEW_STRATEGIES)
+def test_new_centralities_valid(kind):
+    topo = barabasi_albert(16, 2, seed=0)
+    c = mixing_matrix(topo, AggregationStrategy(kind, tau=0.1))
+    validate_mixing_matrix(c, topo)
+    assert kind in TOPOLOGY_AWARE
+
+
+@pytest.mark.parametrize("kind", NEW_STRATEGIES)
+def test_new_centralities_prefer_hub(kind):
+    """All centrality metrics should give the BA hub more weight than a
+    leaf, within any neighbourhood containing both."""
+    topo = barabasi_albert(16, 1, seed=0)  # tree: clear hub/leaf split
+    c = mixing_matrix(topo, AggregationStrategy(kind, tau=0.1))
+    hub = topo.kth_highest_degree_node(1)
+    deg = topo.degree()
+    for i in topo.neighbors(hub):
+        others = [j for j in topo.neighbors(i) if j != hub]
+        for j in others:
+            if deg[j] < deg[hub]:
+                assert c[i, hub] > c[i, j]
+
+
+class TestDynamicTopology:
+    def test_drop_edges_monotone(self):
+        topo = barabasi_albert(16, 2, seed=0)
+        rng = np.random.default_rng(0)
+        surv = drop_edges(topo, 0.5, rng)
+        assert surv.n_edges < topo.n_edges
+        # surviving edges are a subset
+        assert np.all(surv.adjacency <= topo.adjacency)
+
+    def test_drop_zero_identity(self):
+        topo = ring(8)
+        surv = drop_edges(topo, 0.0, np.random.default_rng(0))
+        np.testing.assert_array_equal(surv.adjacency, topo.adjacency)
+
+    @pytest.mark.parametrize("kind", ["unweighted", "degree"])
+    def test_dynamic_matrix_row_stochastic(self, kind):
+        topo = barabasi_albert(16, 2, seed=0)
+        for r in range(5):
+            c = dynamic_mixing_matrix(
+                topo, AggregationStrategy(kind, tau=0.1), r, p_fail=0.5)
+            assert np.allclose(c.sum(1), 1.0, atol=1e-9)
+            assert (c >= -1e-12).all()
+
+    def test_full_failure_is_local_training(self):
+        topo = ring(6)
+        c = dynamic_mixing_matrix(
+            topo, AggregationStrategy("degree", tau=0.1), 0, p_fail=1.0)
+        np.testing.assert_allclose(c, np.eye(6), atol=1e-9)
+
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cli(mod, *args, timeout=420):
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args],
+        env=dict(os.environ, PYTHONPATH="src"), cwd=ROOT,
+        capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_driver_cli(tmp_path):
+    out = _run_cli("repro.launch.train", "--arch", "internvl2-1b", "--smoke",
+                   "--nodes", "2", "--rounds", "2", "--steps", "2",
+                   "--batch", "2", "--seq", "16",
+                   "--ckpt-dir", str(tmp_path), "--log", str(tmp_path / "log.jsonl"))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "round    1" in out.stdout
+    assert any(f.startswith("ckpt_") for f in os.listdir(tmp_path))
+
+
+def test_serve_driver_cli():
+    out = _run_cli("repro.launch.serve", "--arch", "stablelm-1.6b", "--smoke",
+                   "--nodes", "2", "--batch", "1", "--prompt-len", "4",
+                   "--new-tokens", "4")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "served 2 nodes" in out.stdout
+
+
+def test_dynamic_consensus_still_converges():
+    """Gossip under 30% link failure must still drive consensus (in
+    expectation the product of surviving mixing matrices is ergodic)."""
+    topo = barabasi_albert(12, 2, seed=3)
+    x = np.random.default_rng(0).normal(size=12)
+    for r in range(300):
+        c = dynamic_mixing_matrix(
+            topo, AggregationStrategy("degree", tau=0.1), r, p_fail=0.3)
+        x = c @ x
+    assert np.std(x) < 1e-2
+
+
+def test_dryrun_pcfg_override_spec():
+    """input_specs honours a replanned ParallelConfig (the §Perf path)."""
+    import dataclasses
+    from repro.configs.registry import get_parallel
+    from repro.launch.specs import input_specs
+
+    p = dataclasses.replace(get_parallel("stablelm-1.6b"),
+                            n_nodes=64, tp_degree=4, microbatch=1)
+    spec = input_specs("stablelm-1.6b", "train_4k", pcfg=p)
+    assert spec.n_global_nodes == 64
+    leaf = jax.tree_util.tree_leaves(spec.abstract_args[2])[0]
+    assert leaf.shape[0] == 64 and leaf.shape[1] * leaf.shape[2] == 4  # 256/64

@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mixing import (
+    circulant_decomposition,
+    mix_dense,
+    mix_sparse_host,
+    mixing_collective_bytes,
+)
+from repro.core.strategies import AggregationStrategy, mixing_matrix
+from repro.core.topology import barabasi_albert, ring
+
+
+def _params(n, seed=0):
+    k = jax.random.key(seed)
+    ks = jax.random.split(k, 3)
+    return {
+        "w": jax.random.normal(ks[0], (n, 4, 6)),
+        "b": jax.random.normal(ks[1], (n, 5)),
+        "scalar_per_node": jax.random.normal(ks[2], (n,)),
+    }
+
+
+class TestDense:
+    def test_identity(self):
+        p = _params(8)
+        out = mix_dense(p, jnp.eye(8))
+        for k in p:
+            np.testing.assert_allclose(out[k], p[k], rtol=1e-6)
+
+    def test_full_average(self):
+        p = _params(8)
+        out = mix_dense(p, jnp.full((8, 8), 1 / 8))
+        for k in p:
+            expected = jnp.broadcast_to(p[k].mean(0, keepdims=True), p[k].shape)
+            np.testing.assert_allclose(out[k], expected, rtol=1e-5, atol=1e-6)
+
+    def test_preserves_dtype(self):
+        p = {"w": jnp.ones((4, 3), jnp.bfloat16)}
+        out = mix_dense(p, jnp.eye(4))
+        assert out["w"].dtype == jnp.bfloat16
+
+    def test_mean_preserved_doubly_stochastic(self):
+        """Doubly-stochastic mixing preserves the parameter mean — the
+        conservation law consensus averaging relies on."""
+        t = barabasi_albert(8, 2, 0)
+        c = mixing_matrix(t, AggregationStrategy("metropolis"))
+        p = _params(8)
+        out = mix_dense(p, jnp.asarray(c))
+        for k in p:
+            np.testing.assert_allclose(
+                np.asarray(out[k]).mean(0), np.asarray(p[k]).mean(0),
+                rtol=1e-4, atol=1e-5)
+
+
+class TestCirculant:
+    @pytest.mark.parametrize("kind", ["unweighted", "degree", "random"])
+    def test_matches_dense(self, kind):
+        t = barabasi_albert(12, 2, 1)
+        c = mixing_matrix(t, AggregationStrategy(kind, tau=0.1, seed=3))
+        sched = circulant_decomposition(c)
+        p = _params(12)
+        d = mix_dense(p, jnp.asarray(c))
+        s = mix_sparse_host(p, sched)
+        for k in p:
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(s[k]),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_ring_has_three_offsets(self):
+        t = ring(8)
+        c = mixing_matrix(t, AggregationStrategy("unweighted"))
+        sched = circulant_decomposition(c)
+        assert sorted(sched.offsets) == [0, 1, 7]
+
+    def test_collective_bytes_ring_vs_dense(self):
+        t = ring(16)
+        c = mixing_matrix(t, AggregationStrategy("unweighted"))
+        sched = circulant_decomposition(c)
+        b = mixing_collective_bytes(16, 10**9, sched)
+        assert b["sparse_bytes_per_node"] == 2 * 10**9
+        assert b["dense_bytes_per_node"] == 15 * 10**9
+
+
+@given(n=st.integers(4, 16), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_property_circulant_exact(n, seed):
+    rng = np.random.default_rng(seed)
+    c = rng.random((n, n)) * (rng.random((n, n)) < 0.4)
+    c += np.eye(n)
+    c /= c.sum(1, keepdims=True)
+    sched = circulant_decomposition(c)
+    x = rng.normal(size=(n, 7)).astype(np.float32)
+    d = np.asarray(mix_dense({"x": jnp.asarray(x)}, jnp.asarray(c))["x"])
+    s = np.asarray(mix_sparse_host({"x": jnp.asarray(x)}, sched)["x"])
+    np.testing.assert_allclose(d, s, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(d, c.astype(np.float32) @ x, rtol=1e-4, atol=1e-4)

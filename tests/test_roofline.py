@@ -1,0 +1,116 @@
+"""Validate the analytic roofline model against XLA cost_analysis on a
+LOOP-FREE lowering (no scan, micro=1, 2 layers) where HLO flop counting is
+exact — the methodology contract of benchmarks/roofline.py."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from benchmarks.roofline import (
+    analyze_pair,
+    attention_flops,
+    cache_bytes,
+    full_table,
+    resolve_plan,
+)
+from repro.configs.base import ModelConfig, ParallelConfig, SHAPES
+from repro.configs.registry import ARCHS
+
+
+class TestAnalyticPieces:
+    def test_attention_flops_causal_scaling(self):
+        cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                          d_ff=128, vocab_size=64)
+        f1 = attention_flops(cfg, batch=1, seq=128)
+        f2 = attention_flops(cfg, batch=1, seq=256)
+        assert 3.5 < f2 / f1 < 4.5  # quadratic in seq
+
+    def test_window_caps_context(self):
+        full = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                           d_ff=128, vocab_size=64)
+        local = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                            d_ff=128, vocab_size=64,
+                            attn_pattern=("local",), window_size=64)
+        assert attention_flops(local, 1, 4096) < attention_flops(full, 1, 4096) / 10
+
+    def test_mla_cache_much_smaller_than_mha(self):
+        from repro.configs.registry import get_config, get_parallel
+
+        ds = get_config("deepseek-v2-236b")
+        plan = resolve_plan(ds, get_parallel("deepseek-v2-236b"),
+                            SHAPES["decode_32k"], False)
+        mla = cache_bytes(ds, SHAPES["decode_32k"], plan)["total"]
+        # equivalent MHA cache
+        import dataclasses
+
+        mha = dataclasses.replace(ds, use_mla=False)
+        full = cache_bytes(mha, SHAPES["decode_32k"], plan)["total"]
+        assert full / mla > 10  # the MLA selling point
+
+    def test_all_pairs_fit_hbm(self):
+        rows = [r for r in full_table(False) if "skipped" not in r]
+        bad = [(r["arch"], r["shape"]) for r in rows if not r["fits_hbm"]]
+        assert not bad, f"pairs exceeding 90% HBM: {bad}"
+
+    def test_every_pair_has_positive_terms(self):
+        for r in full_table(False):
+            if "skipped" in r:
+                continue
+            assert r["t_compute_s"] > 0
+            assert r["t_memory_s"] > 0
+            assert r["useful_flops_ratio"] <= 1.5
+
+
+VALIDATE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ModelConfig, ParallelConfig, InputShape
+    from repro.models.transformer import ForwardOptions
+    from repro.training.train_step import make_train_step
+    from repro.training.optimizer import make_optimizer
+    from benchmarks import roofline
+
+    # loop-free micro config: no scan, micro=1, einsum attention
+    cfg = ModelConfig(name="v", n_layers=2, d_model=256, n_heads=8,
+                      n_kv_heads=8, d_ff=1024, vocab_size=4096,
+                      dtype="float32", param_dtype="float32")
+    pcfg = ParallelConfig(n_nodes=8, microbatch=1, remat=False,
+                          scan_layers=False)
+    opt = make_optimizer("adamw", 1e-3)
+    step = make_train_step(cfg, pcfg, opt,
+                           opts=ForwardOptions(remat=False, use_scan=False))
+    n, b, s = 8, 2, 128
+    from repro.models.transformer import init_params
+    p_abs = jax.eval_shape(
+        jax.vmap(lambda k: init_params(k, cfg)),
+        jax.ShapeDtypeStruct((n, 2), jnp.uint32))
+    opt_abs = jax.eval_shape(jax.vmap(opt.init), p_abs)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((n, 1, b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n, 1, b, s), jnp.int32),
+    }
+    coeffs = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    compiled = jax.jit(step).lower(p_abs, opt_abs, batch, coeffs).compile()
+    hlo_flops = float(compiled.cost_analysis()["flops"])
+
+    shape = InputShape("v", s, n * b, "train")
+    plan = roofline.Plan(n_global=n, fsdp=1, model=1, pods=1, micro=1,
+                         local_batch=b)
+    fl = roofline.step_flops(cfg, shape, plan)
+    ratio = fl["total"] / hlo_flops
+    print(f"ANALYTIC/HLO={ratio:.3f}")
+    assert 0.5 < ratio < 2.0, ratio
+    print("ROOFLINE_VALIDATION_OK")
+""")
+
+
+def test_analytic_flops_vs_hlo_loopfree():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", VALIDATE], env=env,
+                         capture_output=True, text=True, timeout=420,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "ROOFLINE_VALIDATION_OK" in out.stdout, \
+        out.stdout[-1000:] + out.stderr[-2000:]

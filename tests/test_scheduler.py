@@ -1,0 +1,93 @@
+"""Continuous-batching scheduler: slot packing, eviction, and agreement
+with straight greedy generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_params
+from repro.serving.scheduler import FleetScheduler, NodeScheduler, Request
+from repro.serving.serve_step import greedy_generate
+
+CFG = ModelConfig(name="sched", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=64,
+                  dtype="float32", param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.key(0), CFG)
+
+
+def test_matches_greedy_generate(params):
+    """A scheduled request must produce the same tokens as the plain
+    greedy generator (same model, same prompt)."""
+    prompt = [3, 17, 42, 5]
+    n_new = 6
+    ref = greedy_generate(CFG, params, jnp.asarray([prompt], jnp.int32), n_new)
+    want = np.asarray(ref)[0, len(prompt):].tolist()
+
+    sched = NodeScheduler(CFG, params, n_slots=2, max_seq=32)
+    req = Request(rid=0, prompt=prompt, max_new=n_new)
+    sched.submit(req)
+    sched.run_until_drained()
+    assert req.done
+    assert req.output == want
+
+
+def test_slot_reuse_more_requests_than_slots(params):
+    sched = NodeScheduler(CFG, params, n_slots=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_new=3) for i in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    steps = sched.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) == 3 for r in reqs)
+    # with 2 slots and 5 requests the work must have been time-multiplexed
+    assert steps >= 3 * 3  # ≥ ceil(5/2) waves × (2 prompt + 3 gen − overlap)
+
+
+def test_interleaved_isolation(params):
+    """Requests sharing a batch must not contaminate each other: the same
+    prompt yields the same output whether run alone or packed with another
+    request."""
+    alone = Request(rid=0, prompt=[7, 8, 9], max_new=4)
+    s1 = NodeScheduler(CFG, params, n_slots=1, max_seq=32)
+    s1.submit(alone)
+    s1.run_until_drained()
+
+    packed = Request(rid=1, prompt=[7, 8, 9], max_new=4)
+    other = Request(rid=2, prompt=[40, 41], max_new=6)
+    s2 = NodeScheduler(CFG, params, n_slots=2, max_seq=32)
+    s2.submit(packed)
+    s2.submit(other)
+    s2.run_until_drained()
+    assert packed.output == alone.output
+
+
+def test_eos_eviction(params):
+    """A request whose sampled token equals eos stops early."""
+    sched = NodeScheduler(CFG, params, n_slots=1, max_seq=32)
+    probe = Request(rid=0, prompt=[1, 2], max_new=8)
+    sched.submit(probe)
+    sched.run_until_drained()
+    eos_tok = probe.output[1]  # force eos at (first occurrence of) this token
+    expected_len = probe.output.index(eos_tok) + 1
+    req = Request(rid=1, prompt=[1, 2], max_new=8, eos=eos_tok)
+    sched2 = NodeScheduler(CFG, params, n_slots=1, max_seq=32)
+    sched2.submit(req)
+    sched2.run_until_drained()
+    assert req.done and len(req.output) == expected_len < 8
+
+
+def test_fleet_round_robin(params):
+    n = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), params)
+    fleet = FleetScheduler(CFG, stacked, n_nodes=n, n_slots=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=[i + 1], max_new=2) for i in range(6)]
+    nodes = [fleet.submit(r) for r in reqs]
+    assert nodes == [0, 1, 2, 0, 1, 2]
+    fleet.run_until_drained()
+    assert all(r.done for r in reqs)

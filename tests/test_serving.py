@@ -1,0 +1,90 @@
+"""Decode-path correctness: token-by-token cached decode must reproduce the
+full-sequence forward logits (the serving invariant), per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, forward, init_cache, init_params
+from repro.serving.serve_step import greedy_generate, make_cache, make_serve_step
+
+DENSE = ModelConfig(name="dense", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    d_ff=128, vocab_size=64, dtype="float32", param_dtype="float32")
+LOCAL = ModelConfig(name="local", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    d_ff=128, vocab_size=64, attn_pattern=("local", "global"),
+                    window_size=8, dtype="float32", param_dtype="float32")
+MLA = ModelConfig(name="mla", family="moe", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=4, d_ff=128, vocab_size=64, use_mla=True,
+                  kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8,
+                  v_head_dim=16, n_experts=4, experts_per_token=2,
+                  moe_d_ff=64, capacity_factor=8.0,  # high cap: dropless
+                  dtype="float32", param_dtype="float32")
+SSM = ModelConfig(name="ssm", family="ssm", n_layers=2, d_model=64, d_ff=128,
+                  vocab_size=64, rwkv_head_dim=32, norm_kind="layernorm",
+                  dtype="float32", param_dtype="float32")
+HYBRID = ModelConfig(name="hy", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                     hybrid_ssm=True, ssm_state_dim=8,
+                     dtype="float32", param_dtype="float32")
+
+
+def _decode_all(cfg, params, toks, max_seq):
+    b, s = toks.shape
+    cache = init_cache(cfg, b, max_seq)
+    outs = []
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    for i in range(s):
+        logits, cache = step(params, toks[:, i : i + 1], cache)
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize("cfg", [DENSE, LOCAL, MLA, SSM, HYBRID],
+                         ids=lambda c: c.name)
+def test_decode_matches_forward(cfg):
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, {"tokens": toks})
+    inc = _decode_all(cfg, params, toks, 16)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_local_ring_buffer_wraps():
+    """Decoding past the window must still work (ring-buffer cache) and
+    match a full forward whose local mask hides old positions anyway."""
+    cfg = LOCAL
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 20), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, {"tokens": toks})
+    # cache length = window for all-local? pattern has global too → max_seq
+    inc = _decode_all(cfg, params, toks, 24)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_greedy_generate_deterministic():
+    params = init_params(jax.random.key(0), DENSE)
+    prompt = jax.random.randint(jax.random.key(1), (2, 4), 0, 64)
+    out1 = greedy_generate(DENSE, params, prompt, n_new=6)
+    out2 = greedy_generate(DENSE, params, prompt, n_new=6)
+    assert out1.shape == (2, 10)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(out1[:, :4]), np.asarray(prompt))
+
+
+def test_stacked_serve_step():
+    """The node-stacked serving path: each node's model serves its own
+    requests (the paper's per-device inference)."""
+    n = 3
+    params = jax.vmap(lambda k: init_params(k, DENSE))(
+        jax.random.split(jax.random.key(0), n))
+    serve = jax.jit(make_serve_step(DENSE))
+    cache = make_cache(DENSE, n, batch_per_node=2, max_seq=8)
+    toks = jax.random.randint(jax.random.key(1), (n, 2, 1), 0, 64)
+    logits, cache = serve(params, toks, cache)
+    assert logits.shape == (n, 2, 1, 64)
+    # different node params ⇒ different logits
+    assert not np.allclose(np.asarray(logits[0]), np.asarray(logits[1]))
+    assert (np.asarray(cache["position"]) == 1).all()

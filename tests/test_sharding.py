@@ -1,0 +1,77 @@
+"""Unit tests for the sharding rules (param/batch/cache spec builders)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_smoke_config
+from repro.models.transformer import init_params
+from repro.sharding import NODE_AXES, opt_specs_like, param_specs
+from repro.training.optimizer import adamw, sgd
+
+
+def _abstract_stacked(cfg, n=4):
+    one = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype), one)
+
+
+class TestParamSpecs:
+    def test_node_axis_everywhere(self):
+        cfg = get_smoke_config("stablelm-1.6b")
+        p = _abstract_stacked(cfg)
+        specs = param_specs(p, axis_sizes={"model": 2, "fsdp": 2})
+        for path, spec in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            assert spec[0] == NODE_AXES or spec == P(), (path, spec)
+
+    def test_heads_on_model_axis(self):
+        cfg = get_smoke_config("stablelm-1.6b")  # 4 heads
+        p = _abstract_stacked(cfg)
+        specs = param_specs(p, axis_sizes={"model": 2, "fsdp": 2})
+        wq = specs["dense_layers"]["attn"]["wq"]
+        # (node, L, d, h, hd): heads on model, d on fsdp
+        assert wq[3] == "model" and wq[2] == "fsdp"
+
+    def test_indivisible_dims_replicated(self):
+        cfg = get_smoke_config("internvl2-1b")  # kv=2 heads
+        p = _abstract_stacked(cfg)
+        specs = param_specs(p, axis_sizes={"model": 16, "fsdp": 1})
+        wk = specs["dense_layers"]["attn"]["wk"]
+        assert wk[3] is None  # 2 kv heads can't shard over model=16
+
+    def test_moe_experts_on_model(self):
+        cfg = get_smoke_config("llama4-scout-17b-a16e")  # 4 experts
+        p = _abstract_stacked(cfg)
+        specs = param_specs(p, axis_sizes={"model": 2, "fsdp": 2})
+        wi = specs["moe_layers"]["moe"]["experts"]["wi"]
+        assert wi[2] == "model"  # expert axis
+
+    def test_norms_replicated(self):
+        cfg = get_smoke_config("phi3-mini-3.8b")
+        p = _abstract_stacked(cfg)
+        specs = param_specs(p, axis_sizes={"model": 2, "fsdp": 2})
+        norm = specs["dense_layers"]["norm1"]["scale"]
+        assert norm[0] == NODE_AXES
+        assert all(x is None for x in list(norm)[1:])
+
+
+class TestOptSpecs:
+    def test_adam_moments_mirror_params(self):
+        cfg = get_smoke_config("stablelm-1.6b")
+        p = _abstract_stacked(cfg)
+        ps = param_specs(p, axis_sizes={"model": 2, "fsdp": 2})
+        opt = adamw(1e-3)
+        o_abs = jax.eval_shape(jax.vmap(opt.init), p)
+        os_ = opt_specs_like(o_abs, ps)
+        assert jax.tree.structure(os_.mu) == jax.tree.structure(ps)
+        assert os_.step == P(NODE_AXES)
+
+    def test_sgd_momentumless(self):
+        cfg = get_smoke_config("stablelm-1.6b")
+        p = _abstract_stacked(cfg)
+        ps = param_specs(p, axis_sizes={"model": 2, "fsdp": 2})
+        opt = sgd(1e-2)
+        o_abs = jax.eval_shape(jax.vmap(opt.init), p)
+        os_ = opt_specs_like(o_abs, ps)
+        assert os_.momentum is None

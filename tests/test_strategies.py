@@ -1,0 +1,115 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strategies import (
+    STRATEGIES,
+    AggregationStrategy,
+    mixing_matrix,
+    validate_mixing_matrix,
+)
+from repro.core.topology import barabasi_albert, fully_connected, ring, watts_strogatz
+
+ALL_KINDS = ["unweighted", "weighted", "random", "fl", "degree", "betweenness",
+             "metropolis"]
+
+
+def _counts(n, seed=0):
+    return np.random.default_rng(seed).integers(10, 100, n).astype(float)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("topo_fn", [
+    lambda: barabasi_albert(16, 2, 0),
+    lambda: watts_strogatz(12, 4, 0.5, 1),
+    lambda: ring(8),
+])
+def test_row_stochastic_and_support(kind, topo_fn):
+    topo = topo_fn()
+    c = mixing_matrix(topo, AggregationStrategy(kind, tau=0.1),
+                      data_counts=_counts(topo.n_nodes))
+    assert np.allclose(c.sum(1), 1.0, atol=1e-9)
+    assert (c >= -1e-12).all()
+    if kind != "fl":
+        mask = topo.adjacency + np.eye(topo.n_nodes)
+        assert not ((c > 1e-12) & (mask == 0)).any(), "weight outside N_i"
+
+
+class TestSpecificValues:
+    def test_unweighted_uniform(self):
+        t = ring(6)
+        c = mixing_matrix(t, AggregationStrategy("unweighted"))
+        assert np.allclose(c[c > 0], 1 / 3)
+
+    def test_weighted_proportional(self):
+        t = ring(4)
+        counts = np.array([1.0, 2.0, 3.0, 4.0])
+        c = mixing_matrix(t, AggregationStrategy("weighted"), data_counts=counts)
+        # node 0's neighbourhood = {3, 0, 1} with counts 4,1,2
+        np.testing.assert_allclose(c[0, [3, 0, 1]], np.array([4, 1, 2]) / 7)
+
+    def test_weighted_requires_counts(self):
+        with pytest.raises(ValueError):
+            mixing_matrix(ring(4), AggregationStrategy("weighted"))
+
+    def test_fl_is_full_uniform(self):
+        t = barabasi_albert(10, 2, 0)
+        c = mixing_matrix(t, AggregationStrategy("fl"))
+        assert np.allclose(c, 1 / 10)
+
+    def test_degree_prefers_hubs(self):
+        """Within any neighbourhood, higher-degree neighbours get more weight."""
+        t = barabasi_albert(16, 2, 0)
+        c = mixing_matrix(t, AggregationStrategy("degree", tau=0.1))
+        deg = t.degree()
+        for i in range(t.n_nodes):
+            nb = t.neighborhood(i)
+            w = c[i, nb]
+            d = deg[nb]
+            # weights sorted consistently with degrees
+            assert np.all(np.argsort(w, kind="stable")[np.argsort(d, kind="stable")].shape == w.shape)
+            hi, lo = nb[np.argmax(d)], nb[np.argmin(d)]
+            if deg[hi] > deg[lo]:
+                assert c[i, hi] > c[i, lo]
+
+    def test_tau_sharpness(self):
+        """Smaller τ concentrates weight on the highest-centrality neighbour."""
+        t = barabasi_albert(16, 2, 0)
+        sharp = mixing_matrix(t, AggregationStrategy("degree", tau=0.01))
+        soft = mixing_matrix(t, AggregationStrategy("degree", tau=10.0))
+        assert sharp.max(1).mean() > soft.max(1).mean()
+
+    def test_random_redraw_differs(self):
+        t = barabasi_albert(16, 2, 0)
+        c1 = mixing_matrix(t, AggregationStrategy("random", seed=1))
+        c2 = mixing_matrix(t, AggregationStrategy("random", seed=2))
+        assert not np.allclose(c1, c2)
+
+    def test_metropolis_doubly_stochastic(self):
+        t = barabasi_albert(16, 2, 0)
+        c = mixing_matrix(t, AggregationStrategy("metropolis"))
+        assert np.allclose(c.sum(0), 1.0, atol=1e-9)
+        assert np.allclose(c, c.T)
+
+
+@given(n=st.integers(5, 20), seed=st.integers(0, 20),
+       tau=st.floats(0.05, 5.0),
+       kind=st.sampled_from(["degree", "betweenness", "random", "unweighted"]))
+@settings(max_examples=30, deadline=None)
+def test_property_valid_mixing(n, seed, tau, kind):
+    t = barabasi_albert(n, min(2, n - 1), seed)
+    c = mixing_matrix(t, AggregationStrategy(kind, tau=tau, seed=seed))
+    validate_mixing_matrix(c, t)
+
+
+@given(seed=st.integers(0, 10),
+       kind=st.sampled_from(["unweighted", "degree", "betweenness", "metropolis"]))
+@settings(max_examples=15, deadline=None)
+def test_property_consensus_convergence(seed, kind):
+    """Repeated mixing must drive node values to consensus (the spectral
+    property knowledge propagation relies on): C^k x → constant vector."""
+    t = barabasi_albert(12, 2, seed)
+    c = mixing_matrix(t, AggregationStrategy(kind, tau=0.5))
+    x = np.random.default_rng(seed).normal(size=12)
+    y = np.linalg.matrix_power(c, 200) @ x
+    assert np.std(y) < 1e-3

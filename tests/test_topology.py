@@ -1,0 +1,104 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    Topology,
+    barabasi_albert,
+    build_topology,
+    fully_connected,
+    ring,
+    stochastic_block,
+    watts_strogatz,
+)
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("p", [1, 2, 3])
+    def test_ba(self, p):
+        t = barabasi_albert(33, p, seed=0)
+        assert t.n_nodes == 33
+        assert t.is_connected()
+        # preferential attachment: p edges per new node
+        assert t.n_edges == (33 - p) * p
+
+    @pytest.mark.parametrize("n", [8, 16, 33])
+    def test_ws(self, n):
+        t = watts_strogatz(n, k=4, u=0.5, seed=1)
+        assert t.n_nodes == n
+        assert t.is_connected()
+
+    @pytest.mark.parametrize("p_out", [0.009, 0.05, 0.9])
+    def test_sb(self, p_out):
+        t = stochastic_block(33, 3, 0.5, p_out, seed=2)
+        assert t.n_nodes == 33
+        assert t.is_connected()  # patched if sampled disconnected
+
+    def test_sb_modularity_ordering(self):
+        """Paper Fig 7: lower p_out ⇒ higher modularity."""
+        mods = [
+            stochastic_block(33, 3, 0.5, p, seed=0).modularity()
+            for p in (0.009, 0.05, 0.9)
+        ]
+        assert mods[0] > mods[1] > mods[2]
+
+    def test_ring_and_full(self):
+        r = ring(8)
+        assert (r.degree() == 2).all()
+        f = fully_connected(8)
+        assert (f.degree() == 7).all()
+
+    def test_build_topology(self):
+        t = build_topology("ba", n=16, p=2, seed=0)
+        assert t.n_nodes == 16
+        with pytest.raises(KeyError):
+            build_topology("nope")
+
+
+class TestMetrics:
+    def test_degree_matches_adjacency(self):
+        t = barabasi_albert(33, 2, seed=0)
+        assert np.array_equal(t.degree(), t.adjacency.sum(0))
+
+    def test_betweenness_range_and_hub(self):
+        t = barabasi_albert(33, 1, seed=0)  # tree: hubs have high betweenness
+        bc = t.betweenness()
+        assert bc.min() >= 0 and bc.max() <= 1
+        # the max-degree node of a BA tree should rank high in betweenness
+        hub = t.kth_highest_degree_node(1)
+        assert bc[hub] >= np.percentile(bc, 75)
+
+    def test_kth_highest_degree(self):
+        t = barabasi_albert(33, 2, seed=0)
+        order = [t.kth_highest_degree_node(k) for k in (1, 2, 3, 4)]
+        degs = t.degree()[order]
+        assert (np.diff(degs) <= 0).all()
+        assert len(set(order)) == 4
+
+    def test_neighborhood_includes_self(self):
+        t = ring(6)
+        nb = t.neighborhood(0)
+        assert 0 in nb and len(nb) == 3
+
+
+class TestValidation:
+    def test_rejects_asymmetric(self):
+        a = np.zeros((3, 3))
+        a[0, 1] = 1
+        with pytest.raises(ValueError):
+            Topology(a)
+
+    def test_rejects_self_loop(self):
+        a = np.eye(3)
+        with pytest.raises(ValueError):
+            Topology(a)
+
+
+@given(n=st.integers(4, 24), p=st.integers(1, 3), seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_ba_always_connected(n, p, seed):
+    if p >= n:
+        return
+    t = barabasi_albert(n, p, seed)
+    assert t.is_connected()
+    assert (t.degree() >= 1).all()

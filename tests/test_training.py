@@ -1,0 +1,161 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.transformer import ForwardOptions, init_params
+from repro.training.checkpoint import (
+    latest_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.training.losses import lm_loss_fn, softmax_xent
+from repro.training.optimizer import (
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+    sgd,
+    warmup_cosine_schedule,
+)
+from repro.training.train_step import make_train_step, reshape_for_microbatch
+
+CFG = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=128, dtype="float32",
+                  param_dtype="float32")
+
+
+def _quad_problem():
+    """min ||p - t||² — optimizers must converge on it."""
+    t = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p, batch=None):
+        return jnp.sum(jnp.square(p - t))
+
+    return t, loss
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("opt_fn", [
+        lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9),
+        lambda: adam(0.1), lambda: adamw(0.1, weight_decay=0.001),
+    ])
+    def test_converges_on_quadratic(self, opt_fn):
+        t, loss = _quad_problem()
+        opt = opt_fn()
+        p = jnp.zeros(3)
+        s = opt.init(p)
+        for _ in range(200):
+            g = jax.grad(loss)(p)
+            u, s = opt.update(g, s, p)
+            p = apply_updates(p, u)
+        assert float(loss(p)) < 1e-2
+
+    def test_clip_by_global_norm(self):
+        tree = {"a": jnp.full((4,), 10.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(global_norm(clipped)) <= 1.0 + 1e-5
+        assert float(norm) == pytest.approx(20.0)
+
+    def test_schedules(self):
+        cos = cosine_schedule(1.0, 100)
+        assert float(cos(0)) == pytest.approx(1.0)
+        assert float(cos(100)) == pytest.approx(0.1)
+        wc = warmup_cosine_schedule(1.0, 10, 110)
+        assert float(wc(0)) < float(wc(9))
+        assert float(wc(9)) == pytest.approx(1.0)
+
+    def test_make_optimizer_registry(self):
+        assert make_optimizer("sgd", 0.1)
+        with pytest.raises(KeyError):
+            make_optimizer("lion", 0.1)
+
+
+class TestLosses:
+    def test_xent_uniform(self):
+        logits = jnp.zeros((2, 8, 16))
+        labels = jnp.zeros((2, 8), jnp.int32)
+        assert float(softmax_xent(logits, labels)) == pytest.approx(np.log(16), rel=1e-5)
+
+    def test_chunked_ce_matches_full(self):
+        params = init_params(jax.random.key(0), CFG)
+        toks = jax.random.randint(jax.random.key(1), (2, 32), 0, 128)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+        full = lm_loss_fn(CFG)(params, batch)
+        chunked = lm_loss_fn(CFG, chunked_ce=8)(params, batch)
+        assert float(full) == pytest.approx(float(chunked), rel=1e-4)
+
+
+class TestTrainStep:
+    def _setup(self, micro):
+        pcfg = ParallelConfig(n_nodes=4, microbatch=micro, remat=False)
+        opt = adamw(1e-3)
+        step = make_train_step(CFG, pcfg, opt,
+                               opts=ForwardOptions(remat=False))
+        params = jax.vmap(lambda k: init_params(k, CFG))(
+            jnp.stack([jax.random.key(0)] * 4))
+        opt_state = jax.vmap(opt.init)(params)
+        return step, params, opt_state
+
+    def test_microbatch_equivalence(self):
+        """grad accumulation over microbatches == one big batch."""
+        toks = jax.random.randint(jax.random.key(5), (32, 16), 0, 128)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+        coeffs = jnp.eye(4)
+
+        outs = {}
+        for micro in (1, 2):
+            step, params, opt_state = self._setup(micro)
+            b = reshape_for_microbatch(batch, 4, micro)
+            p, _, loss = jax.jit(step)(params, opt_state, b, coeffs)
+            outs[micro] = (p, float(loss))
+        p1, l1 = outs[1]
+        p2, l2 = outs[2]
+        assert l1 == pytest.approx(l2, rel=1e-4)
+        for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=2e-3, atol=2e-4)
+
+    def test_gossip_changes_params_toward_consensus(self):
+        step, params, opt_state = self._setup(1)
+        # perturb node 0 away from the others
+        params = jax.tree.map(
+            lambda x: x.at[0].add(jnp.ones_like(x[0])), params)
+        toks = jax.random.randint(jax.random.key(5), (32, 16), 0, 128)
+        batch = reshape_for_microbatch(
+            {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}, 4, 1)
+        full_avg = jnp.full((4, 4), 0.25)
+        p, _, _ = jax.jit(step)(params, opt_state, batch, full_avg)
+        # after full averaging all nodes identical
+        leaf = jax.tree.leaves(p)[0]
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[1]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestCheckpoint:
+    def test_roundtrip_with_opt(self, tmp_path):
+        params = init_params(jax.random.key(0), CFG)
+        opt = adamw(1e-3)
+        state = opt.init(params)
+        save_checkpoint(str(tmp_path), 3, params, state, metadata={"lr": 1e-3})
+        path = latest_checkpoint(str(tmp_path))
+        p2, s2, meta = load_checkpoint(path, params, state)
+        assert meta["step"] == 3 and meta["lr"] == 1e-3
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        params = {"w": jnp.ones((3, 3))}
+        save_checkpoint(str(tmp_path), 0, params)
+        with pytest.raises(ValueError):
+            load_checkpoint(latest_checkpoint(str(tmp_path)), {"w": jnp.ones((2, 2))})
+
+    def test_latest_picks_max_step(self, tmp_path):
+        params = {"w": jnp.ones(2)}
+        save_checkpoint(str(tmp_path), 1, params)
+        save_checkpoint(str(tmp_path), 12, params)
+        assert "00000012" in latest_checkpoint(str(tmp_path))
