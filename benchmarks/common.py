@@ -1,17 +1,23 @@
 """Shared harness for the paper-figure benchmarks.
 
-``run_experiment`` reproduces one cell of the paper's experimental grid:
-(dataset, topology, aggregation strategy, OOD location) → accuracy-AUC
-summary over R rounds.  Reduced defaults keep `python -m benchmarks.run`
-CPU-tractable; ``--full`` restores paper scale (33 nodes, 40 rounds,
-5 datasets, 3 seeds).
+Two execution paths over the same experimental grid:
+
+* ``run_experiment`` — the legacy path: ONE cell (dataset, topology,
+  strategy, OOD location) per invocation, per-round Python loop.  Kept as
+  the wall-clock baseline the sweep engine is compared against.
+* ``run_sweep_cells`` — the batched path: a list of :class:`SweepCell`
+  grouped by program shape and evaluated by ``repro.core.sweep`` — one
+  compiled vmap×scan program per (dataset, n_nodes) group.
+
+Reduced defaults keep `python -m benchmarks.run` CPU-tractable; ``--full``
+restores paper scale (33 nodes, 40 rounds, 5 datasets, 3 seeds).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +26,10 @@ import numpy as np
 from repro.core.decentralized import (
     DecentralizedConfig,
     DecentralizedTrainer,
+    coeffs_stack,
     stack_params,
 )
+from repro.core.sweep import SweepEngine
 from repro.core.propagation import accuracy_auc, propagation_summary
 from repro.core.strategies import AggregationStrategy
 from repro.core.topology import Topology
@@ -128,9 +136,12 @@ def run_experiment(
     trainer = DecentralizedTrainer(
         topo, AggregationStrategy(strategy, tau=tau, seed=seed), opt,
         loss_fn, acc_fn,
+        # unroll_eval=True: this is the pre-sweep-engine per-round loop,
+        # kept as the wall-clock baseline (benchmarks/sweep.py compares).
         DecentralizedConfig(rounds=scale.rounds,
                             local_epochs=scale.local_epochs,
-                            eval_every=scale.eval_every),
+                            eval_every=scale.eval_every,
+                            unroll_eval=True),
         data_counts=nb.data_counts(),
     )
     _, hist = trainer.run(
@@ -149,3 +160,157 @@ def run_experiment(
 def csv_row(name: str, secs: float, derived: str) -> str:
     """The scaffold's ``name,us_per_call,derived`` CSV convention."""
     return f"{name},{secs * 1e6:.0f},{derived}"
+
+
+# ----------------------------------------------------------------------
+# batched path: declarative cells → repro.core.sweep
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepCell:
+    """One cell of a figure's grid, as data (no control flow).
+
+    ``name`` is the CSV label; ``sweep`` is the free-form annotation the
+    fig6-style verdicts group by (stored on the summary row verbatim).
+    """
+
+    dataset: str
+    topo: Topology
+    strategy: str
+    ood_k: int = 1
+    tau: float = 0.1
+    seed: int = 0
+    name: str = ""
+    sweep: Optional[tuple] = None
+
+    @property
+    def label(self) -> str:
+        return self.name or f"{self.dataset}/{self.topo.name}/{self.strategy}"
+
+
+def group_cells(cells: List[SweepCell]) -> Dict[Tuple[str, int], List[int]]:
+    """Cells sharing one compiled program: same dataset (model + sample
+    shapes) and same node count (topology/coeffs shapes)."""
+    groups: Dict[Tuple[str, int], List[int]] = {}
+    for i, cell in enumerate(cells):
+        groups.setdefault((cell.dataset, cell.topo.n_nodes), []).append(i)
+    return groups
+
+
+def _pad_cap(leaves: Dict[str, np.ndarray], cap: int) -> Dict[str, np.ndarray]:
+    return {
+        k: np.pad(v, [(0, 0), (0, cap - v.shape[1])] + [(0, 0)] * (v.ndim - 2))
+        for k, v in leaves.items()
+    }
+
+
+def run_sweep_cells(
+    cells: List[SweepCell],
+    scale: BenchScale = QUICK,
+    alpha_l: float = 1000.0,
+    alpha_s: float = 1000.0,
+    unroll_eval: bool = False,
+    log=None,
+) -> List[Dict]:
+    """Evaluate a whole grid of cells through the sweep engine.
+
+    One compiled program per (dataset, n_nodes) group: experiments that
+    share a data configuration (seed × OOD placement) share a sample-bank
+    row; per-experiment initial params, mixing-matrix stacks, and test
+    batches ride the vmap axis.  Returns one ``run_experiment``-compatible
+    summary dict per cell (in input order) with ``secs`` amortized over the
+    group and ``sweep_secs``/``sweep_group_size`` recording the batched
+    wall-clock.
+    """
+    rows: List[Optional[Dict]] = [None] * len(cells)
+    for (ds, n_nodes), idxs in group_cells(cells).items():
+        t0 = time.time()
+        init, loss_fn, acc_fn, opt = _model_fns(ds, scale, cells[idxs[0]].seed)
+        engine = SweepEngine(
+            opt, loss_fn, acc_fn,
+            DecentralizedConfig(rounds=scale.rounds,
+                                local_epochs=scale.local_epochs,
+                                eval_every=scale.eval_every))
+
+        # distinct data configurations (seed × OOD node) → bank rows.
+        # Synchronous sweep rounds need ONE step count across the group:
+        # with steps_per_epoch=0 each NodeBatcher would derive its own from
+        # its median node size, so the first batcher's derivation is pinned
+        # for the rest (index schedules must stack to a common S).
+        dconf: Dict[Tuple[int, int], int] = {}
+        batchers, tbs, obs = [], [], []
+        group_steps = scale.steps_per_epoch
+        for i in idxs:
+            cell = cells[i]
+            ood_node = cell.topo.kth_highest_degree_node(cell.ood_k)
+            key = (cell.seed, ood_node)
+            if key not in dconf:
+                train, test = _data(ds, scale.n_train, scale.n_test, cell.seed)
+                parts = node_datasets(train, n_nodes, ood_node=ood_node,
+                                      q=0.10, seed=cell.seed,
+                                      alpha_l=alpha_l, alpha_s=alpha_s)
+                nb = NodeBatcher(parts, batch_size=scale.batch,
+                                 steps_per_epoch=group_steps,
+                                 seed=cell.seed)
+                group_steps = nb.steps
+                dconf[key] = len(batchers)
+                batchers.append(nb)
+                tbs.append(make_test_batch(test, scale.eval_n, seed=cell.seed))
+                obs.append(make_test_batch(
+                    backdoored_testset(test, seed=cell.seed), scale.eval_n,
+                    seed=cell.seed, ood_mask=(test.kind == "lm")))
+
+        # D-stacked bank + index schedules (pad node caps to the group max)
+        raw_banks = [nb.sample_bank() for nb in batchers]
+        cap = max(b[next(iter(b))].shape[1] for b in raw_banks)
+        padded = [_pad_cap(b, cap) for b in raw_banks]
+        bank = {k: np.stack([p[k] for p in padded]) for k in raw_banks[0]}
+        indices = np.stack(
+            [nb.all_round_indices(scale.rounds) for nb in batchers])
+
+        # per-experiment axes
+        data_idx, coeffs, p0s, t_iid, t_ood, metas = [], [], [], [], [], []
+        init_cache: Dict[int, object] = {}
+        for i in idxs:
+            cell = cells[i]
+            ood_node = cell.topo.kth_highest_degree_node(cell.ood_k)
+            d = dconf[(cell.seed, ood_node)]
+            data_idx.append(d)
+            coeffs.append(coeffs_stack(
+                cell.topo,
+                AggregationStrategy(cell.strategy, tau=cell.tau,
+                                    seed=cell.seed),
+                scale.rounds, data_counts=batchers[d].data_counts()))
+            if cell.seed not in init_cache:
+                init_cache[cell.seed] = init(jax.random.key(cell.seed))
+            p0s.append(stack_params([init_cache[cell.seed]] * n_nodes))
+            t_iid.append(tbs[d])
+            t_ood.append(obs[d])
+            metas.append((cell, ood_node))
+
+        params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *p0s)
+        stack_tests = lambda ts: {
+            k: jnp.stack([jnp.asarray(t[k]) for t in ts]) for k in ts[0]}
+        result = engine.run(
+            params0, np.stack(coeffs), bank, indices,
+            np.asarray(data_idx), stack_tests(t_iid), stack_tests(t_ood),
+            batch_size=scale.batch, unroll_eval=unroll_eval)
+
+        secs = time.time() - t0
+        for e, (i, (cell, ood_node)) in enumerate(zip(idxs, metas)):
+            summary = propagation_summary(
+                result.history(e), cell.topo.adjacency, ood_node)
+            summary.update(
+                dataset=ds, topology=cell.topo.name, strategy=cell.strategy,
+                ood_k=cell.ood_k, ood_node=ood_node, seed=cell.seed,
+                secs=round(secs / len(idxs), 2), sweep_secs=round(secs, 1),
+                sweep_group_size=len(idxs),
+            )
+            if cell.sweep is not None:
+                summary["sweep"] = cell.sweep
+            rows[i] = summary
+            if log is not None:
+                log(csv_row(
+                    cell.label, summary["secs"],
+                    f"iid_auc={summary['iid_auc']:.3f};"
+                    f"ood_auc={summary['ood_auc']:.3f}"))
+    return rows  # type: ignore[return-value]

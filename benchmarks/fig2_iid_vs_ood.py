@@ -3,32 +3,43 @@
 Claim: for every *baseline* (topology-unaware) strategy, OOD test AUC is
 substantially below IID test AUC (OOD knowledge propagates worse), across
 BA topologies.  OOD placed on the 4th-highest-degree node as in the paper.
+
+Expressed as a declarative cell grid over the batched sweep engine
+(``benchmarks.common.run_sweep_cells``); the whole figure is one compiled
+program per dataset.
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
-from benchmarks.common import QUICK, csv_row, run_experiment
+from benchmarks.common import QUICK, SweepCell, csv_row, run_sweep_cells
 from repro.core.topology import barabasi_albert
+
+STRATEGIES = ("fl", "weighted", "unweighted", "random")
+
+
+def cells(datasets=("mnist",), ba_p=(2,), n_nodes=16,
+          seeds=(0,)) -> List[SweepCell]:
+    return [
+        SweepCell(ds, barabasi_albert(n_nodes, p, seed=seed), strat,
+                  ood_k=4, seed=seed,
+                  name=f"fig2/{ds}/ba_p{p}/{strat}")
+        for ds in datasets
+        for p in ba_p
+        for seed in seeds
+        for strat in STRATEGIES
+    ]
 
 
 def run(datasets=("mnist",), ba_p=(2,), n_nodes=16, seeds=(0,),
         scale=QUICK, log=print) -> List[dict]:
-    rows = []
-    for ds in datasets:
-        for p in ba_p:
-            for seed in seeds:
-                topo = barabasi_albert(n_nodes, p, seed=seed)
-                for strat in ("fl", "weighted", "unweighted", "random"):
-                    r = run_experiment(ds, topo, strat, ood_k=4, seed=seed,
-                                       scale=scale)
-                    gap = r["iid_ood_gap_pct"]
-                    log(csv_row(
-                        f"fig2/{ds}/ba_p{p}/{strat}", r["secs"],
-                        f"iid_auc={r['iid_auc']:.3f};ood_auc={r['ood_auc']:.3f};"
-                        f"gap_pct={gap:.1f}"))
-                    rows.append(r)
+    grid = cells(datasets, ba_p, n_nodes, seeds)
+    rows = run_sweep_cells(grid, scale=scale)
+    for cell, r in zip(grid, rows):
+        log(csv_row(
+            cell.label, r["secs"],
+            f"iid_auc={r['iid_auc']:.3f};ood_auc={r['ood_auc']:.3f};"
+            f"gap_pct={r['iid_ood_gap_pct']:.1f}"))
     return rows
 
 

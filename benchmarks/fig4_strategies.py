@@ -3,32 +3,44 @@
 Claim: with OOD data on the HIGHEST-degree node, Degree and Betweenness
 (τ=0.1) beat FL / Weighted / Unweighted / Random on OOD accuracy-AUC,
 without sacrificing IID accuracy.
+
+Expressed as a declarative cell grid over the batched sweep engine: all
+strategies × seeds for a dataset run as ONE vmap×scan program
+(``benchmarks/sweep.py --preset fig4`` reports the wall-clock win over the
+legacy per-config loop).
 """
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import QUICK, csv_row, run_experiment
+from benchmarks.common import QUICK, SweepCell, csv_row, run_sweep_cells
 from repro.core.topology import barabasi_albert
 
 STRATEGIES = ("fl", "weighted", "unweighted", "random", "degree", "betweenness")
 AWARE = ("degree", "betweenness")
 
 
+def cells(datasets=("mnist",), ba_p=(2,), n_nodes=16,
+          seeds=(0,)) -> List[SweepCell]:
+    return [
+        SweepCell(ds, barabasi_albert(n_nodes, p, seed=seed), strat,
+                  ood_k=1, seed=seed,
+                  name=f"fig4/{ds}/ba_p{p}/{strat}")
+        for ds in datasets
+        for p in ba_p
+        for seed in seeds
+        for strat in STRATEGIES
+    ]
+
+
 def run(datasets=("mnist",), ba_p=(2,), n_nodes=16, seeds=(0,),
         scale=QUICK, log=print) -> List[dict]:
-    rows = []
-    for ds in datasets:
-        for p in ba_p:
-            for seed in seeds:
-                topo = barabasi_albert(n_nodes, p, seed=seed)
-                for strat in STRATEGIES:
-                    r = run_experiment(ds, topo, strat, ood_k=1, seed=seed,
-                                       scale=scale)
-                    log(csv_row(
-                        f"fig4/{ds}/ba_p{p}/{strat}", r["secs"],
-                        f"iid_auc={r['iid_auc']:.3f};ood_auc={r['ood_auc']:.3f}"))
-                    rows.append(r)
+    grid = cells(datasets, ba_p, n_nodes, seeds)
+    rows = run_sweep_cells(grid, scale=scale)
+    for cell, r in zip(grid, rows):
+        log(csv_row(
+            cell.label, r["secs"],
+            f"iid_auc={r['iid_auc']:.3f};ood_auc={r['ood_auc']:.3f}"))
     return rows
 
 

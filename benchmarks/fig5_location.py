@@ -3,30 +3,40 @@
 Claim: moving the OOD data to lower-degree nodes hurts propagation
 (negative relationship between host-node degree and OOD AUC), for
 topology-aware strategies.
+
+Expressed as a declarative cell grid over the batched sweep engine; OOD
+placements only change the data-bank row each experiment points at, so the
+whole strategy × placement grid is one compiled program.
 """
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import QUICK, csv_row, run_experiment
+from benchmarks.common import QUICK, SweepCell, csv_row, run_sweep_cells
 from repro.core.topology import barabasi_albert
+
+
+def cells(datasets=("mnist",), n_nodes=16, ba_p=2, seeds=(0,),
+          strategies=("degree", "betweenness"),
+          ood_ks=(1, 2, 3, 4)) -> List[SweepCell]:
+    return [
+        SweepCell(ds, barabasi_albert(n_nodes, ba_p, seed=seed), strat,
+                  ood_k=k, seed=seed,
+                  name=f"fig5/{ds}/{strat}/ood_k{k}")
+        for ds in datasets
+        for seed in seeds
+        for strat in strategies
+        for k in ood_ks
+    ]
 
 
 def run(datasets=("mnist",), n_nodes=16, ba_p=2, seeds=(0,),
         strategies=("degree", "betweenness"), ood_ks=(1, 2, 3, 4),
         scale=QUICK, log=print) -> List[dict]:
-    rows = []
-    for ds in datasets:
-        for seed in seeds:
-            topo = barabasi_albert(n_nodes, ba_p, seed=seed)
-            for strat in strategies:
-                for k in ood_ks:
-                    r = run_experiment(ds, topo, strat, ood_k=k, seed=seed,
-                                       scale=scale)
-                    log(csv_row(
-                        f"fig5/{ds}/{strat}/ood_k{k}", r["secs"],
-                        f"ood_auc={r['ood_auc']:.3f}"))
-                    rows.append(r)
+    grid = cells(datasets, n_nodes, ba_p, seeds, strategies, ood_ks)
+    rows = run_sweep_cells(grid, scale=scale)
+    for cell, r in zip(grid, rows):
+        log(csv_row(cell.label, r["secs"], f"ood_auc={r['ood_auc']:.3f}"))
     return rows
 
 

@@ -5,64 +5,82 @@ Claims:
   (b) SB modularity ↑ ⇒ OOD AUC ↓ (tight communities trap knowledge);
   (c) topology-aware ≥ topology-unaware across all of the above;
   (d) node count hurts unaware strategies on BA more than aware ones.
+
+Expressed as declarative cell grids over the batched sweep engine.
+Topology variations are just different (R, n, n) coefficient stacks, so
+each same-n sub-sweep is one compiled program (the node-count sweep
+compiles one program per n).
 """
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import QUICK, csv_row, run_experiment
+from benchmarks.common import QUICK, SweepCell, csv_row, run_sweep_cells
 from repro.core.topology import barabasi_albert, stochastic_block, watts_strogatz
 
 
-def run_degree(datasets=("mnist",), seeds=(0,), scale=QUICK, log=print):
-    rows = []
-    for ds in datasets:
-        for seed in seeds:
-            for p in (1, 2, 3):
-                topo = barabasi_albert(16, p, seed=seed)
-                for strat in ("unweighted", "degree"):
-                    r = run_experiment(ds, topo, strat, ood_k=1, seed=seed,
-                                       scale=scale)
-                    r["sweep"] = ("degree", p)
-                    log(csv_row(f"fig6/degree/{ds}/ba_p{p}/{strat}",
-                                r["secs"], f"ood_auc={r['ood_auc']:.3f}"))
-                    rows.append(r)
-    return rows
+def degree_cells(datasets=("mnist",), seeds=(0,)) -> List[SweepCell]:
+    return [
+        SweepCell(ds, barabasi_albert(16, p, seed=seed), strat,
+                  ood_k=1, seed=seed, sweep=("degree", p),
+                  name=f"fig6/degree/{ds}/ba_p{p}/{strat}")
+        for ds in datasets
+        for seed in seeds
+        for p in (1, 2, 3)
+        for strat in ("unweighted", "degree")
+    ]
 
 
-def run_modularity(datasets=("mnist",), seeds=(0,), scale=QUICK, log=print):
-    rows = []
+def modularity_cells(datasets=("mnist",), seeds=(0,)) -> List[SweepCell]:
+    out = []
     for ds in datasets:
         for seed in seeds:
             for p_out in (0.009, 0.05, 0.9):
                 topo = stochastic_block(16, 3, 0.5, p_out, seed=seed)
                 mod = topo.modularity()
                 for strat in ("unweighted", "degree"):
-                    r = run_experiment(ds, topo, strat, ood_k=1, seed=seed,
-                                       scale=scale)
-                    r["sweep"] = ("modularity", mod)
-                    log(csv_row(f"fig6/modularity/{ds}/pout{p_out}/{strat}",
-                                r["secs"],
-                                f"ood_auc={r['ood_auc']:.3f};mod={mod:.2f}"))
-                    rows.append(r)
+                    out.append(SweepCell(
+                        ds, topo, strat, ood_k=1, seed=seed,
+                        sweep=("modularity", mod),
+                        name=f"fig6/modularity/{ds}/pout{p_out}/{strat}"))
+    return out
+
+
+def nodecount_cells(datasets=("mnist",), seeds=(0,)) -> List[SweepCell]:
+    return [
+        SweepCell(ds, topo, strat, ood_k=4, seed=seed,
+                  sweep=("nodecount", fam, n),
+                  name=f"fig6/nodes/{ds}/{fam}_n{n}/{strat}")
+        for ds in datasets
+        for seed in seeds
+        for n in (8, 16, 24)
+        for fam, topo in (("ba", barabasi_albert(n, 2, seed=seed)),
+                          ("ws", watts_strogatz(n, 4, 0.5, seed=seed)))
+        for strat in ("unweighted", "degree")
+    ]
+
+
+def _run_cells(grid, scale, log, derived) -> List[dict]:
+    rows = run_sweep_cells(grid, scale=scale)
+    for cell, r in zip(grid, rows):
+        log(csv_row(cell.label, r["secs"], derived(r)))
     return rows
+
+
+def run_degree(datasets=("mnist",), seeds=(0,), scale=QUICK, log=print):
+    return _run_cells(degree_cells(datasets, seeds), scale, log,
+                      lambda r: f"ood_auc={r['ood_auc']:.3f}")
+
+
+def run_modularity(datasets=("mnist",), seeds=(0,), scale=QUICK, log=print):
+    return _run_cells(
+        modularity_cells(datasets, seeds), scale, log,
+        lambda r: f"ood_auc={r['ood_auc']:.3f};mod={r['sweep'][1]:.2f}")
 
 
 def run_nodecount(datasets=("mnist",), seeds=(0,), scale=QUICK, log=print):
-    rows = []
-    for ds in datasets:
-        for seed in seeds:
-            for n in (8, 16, 24):
-                for fam, topo in (("ba", barabasi_albert(n, 2, seed=seed)),
-                                  ("ws", watts_strogatz(n, 4, 0.5, seed=seed))):
-                    for strat in ("unweighted", "degree"):
-                        r = run_experiment(ds, topo, strat, ood_k=4,
-                                           seed=seed, scale=scale)
-                        r["sweep"] = ("nodecount", fam, n)
-                        log(csv_row(f"fig6/nodes/{ds}/{fam}_n{n}/{strat}",
-                                    r["secs"], f"ood_auc={r['ood_auc']:.3f}"))
-                        rows.append(r)
-    return rows
+    return _run_cells(nodecount_cells(datasets, seeds), scale, log,
+                      lambda r: f"ood_auc={r['ood_auc']:.3f}")
 
 
 def verdict(deg_rows, mod_rows) -> str:

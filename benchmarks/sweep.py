@@ -1,0 +1,253 @@
+"""Batched experiment-sweep runner — declarative figure grids over the
+vmap×scan engine (``repro.core.sweep``), with a wall-clock comparison
+against the legacy per-config loop.
+
+  PYTHONPATH=src python -m benchmarks.sweep --list
+  PYTHONPATH=src python -m benchmarks.sweep --preset fig4 --dry-run
+  PYTHONPATH=src python -m benchmarks.sweep --preset fig4            # engine + legacy baseline
+  PYTHONPATH=src python -m benchmarks.sweep --preset fig6 --no-legacy
+  PYTHONPATH=src python -m benchmarks.sweep --preset fig4 --seeds 0,1,2 --full
+
+Each preset re-expresses one paper figure as a list of
+:class:`benchmarks.common.SweepCell` — pure data.  Cells sharing a program
+shape (dataset × node count) compile into ONE program; seeds, strategies,
+OOD placements, and topology variants all ride the vmap axis.
+``--dry-run`` prints the compiled-program plan (groups, experiment counts,
+estimated sample-bank memory) without touching the accelerator.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+# bytes per sample (x features, f32 / int32) for the bank-memory estimate
+_SAMPLE_BYTES = {
+    "mnist": 28 * 28 * 1 * 4,
+    "fmnist": 28 * 28 * 1 * 4,
+    "cifar10": 32 * 32 * 3 * 4,
+    "cifar100": 32 * 32 * 3 * 4,
+    "tinymem": 65 * 4,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPreset:
+    """Registry entry: a figure's grid as a cell builder + claim check."""
+
+    name: str
+    description: str
+    build: Callable[..., list]               # (datasets, seeds, n_nodes) → cells
+    verdict: Callable[[List[dict]], str]
+    datasets: tuple = ("mnist",)
+    seeds: tuple = (0, 1)
+
+
+PRESETS: Dict[str, SweepPreset] = {}
+
+
+def register_preset(preset: SweepPreset) -> None:
+    if preset.name in PRESETS:
+        raise KeyError(f"preset {preset.name!r} already registered")
+    PRESETS[preset.name] = preset
+
+
+def _fig2_build(datasets, seeds, n_nodes):
+    from benchmarks import fig2_iid_vs_ood as fig2
+
+    return fig2.cells(datasets=datasets, seeds=seeds, n_nodes=n_nodes)
+
+
+def _fig2_verdict(rows):
+    from benchmarks import fig2_iid_vs_ood as fig2
+
+    return fig2.verdict(rows)
+
+
+def _fig4_build(datasets, seeds, n_nodes):
+    from benchmarks import fig4_strategies as fig4
+
+    return fig4.cells(datasets=datasets, seeds=seeds, n_nodes=n_nodes)
+
+
+def _fig4_verdict(rows):
+    from benchmarks import fig4_strategies as fig4
+
+    return fig4.verdict(rows)
+
+
+def _fig5_build(datasets, seeds, n_nodes):
+    from benchmarks import fig5_location as fig5
+
+    return fig5.cells(datasets=datasets, seeds=seeds, n_nodes=n_nodes)
+
+
+def _fig5_verdict(rows):
+    from benchmarks import fig5_location as fig5
+
+    return fig5.verdict(rows)
+
+
+def _fig6_build(datasets, seeds, n_nodes):
+    from benchmarks import fig6_topology as fig6
+
+    return (fig6.degree_cells(datasets=datasets, seeds=seeds)
+            + fig6.modularity_cells(datasets=datasets, seeds=seeds))
+
+
+def _fig6_verdict(rows):
+    from benchmarks import fig6_topology as fig6
+
+    deg = [r for r in rows if r.get("sweep", (None,))[0] == "degree"]
+    mod = [r for r in rows if r.get("sweep", (None,))[0] == "modularity"]
+    return fig6.verdict(deg, mod)
+
+
+register_preset(SweepPreset(
+    "fig2", "IID vs OOD propagation gap (baseline strategies, BA)",
+    _fig2_build, _fig2_verdict, seeds=(0,)))
+register_preset(SweepPreset(
+    "fig4", "topology-aware vs unaware strategies (6 strategies × seeds)",
+    _fig4_build, _fig4_verdict, seeds=(0, 1)))
+register_preset(SweepPreset(
+    "fig5", "OOD-placement sweep (degree rank 1..4 × strategies)",
+    _fig5_build, _fig5_verdict, seeds=(0,)))
+register_preset(SweepPreset(
+    "fig6", "topology sweep (BA degree param + SB modularity)",
+    _fig6_build, _fig6_verdict, seeds=(0,)))
+
+
+# ----------------------------------------------------------------------
+def plan(cells, scale) -> str:
+    """The compiled-program plan for a cell grid — no jax work."""
+    from benchmarks.common import group_cells
+
+    lines = ["plan: group,experiments,distinct_datasets,rounds,"
+             "est_bank_mib,cells"]
+    for (ds, n), idxs in group_cells(cells).items():
+        dkeys = {(cells[i].seed,
+                  cells[i].topo.kth_highest_degree_node(cells[i].ood_k))
+                 for i in idxs}
+        bank_mib = (len(dkeys) * scale.n_train
+                    * _SAMPLE_BYTES.get(ds, 4096)) / 2**20
+        names = ",".join(cells[i].label for i in idxs[:3])
+        more = f",+{len(idxs) - 3}" if len(idxs) > 3 else ""
+        lines.append(
+            f"  {ds}/n{n}: E={len(idxs)} D={len(dkeys)} R={scale.rounds} "
+            f"bank≈{bank_mib:.0f}MiB [{names}{more}]")
+    lines.append(f"total cells: {len(cells)} "
+                 f"({len(group_cells(cells))} compiled programs)")
+    return "\n".join(lines)
+
+
+def run_legacy_baseline(cells, scale, log=print) -> List[dict]:
+    """The pre-engine path: one ``run_experiment`` (per-round Python loop)
+    per cell — the wall-clock baseline."""
+    from benchmarks.common import run_experiment
+
+    rows = []
+    for cell in cells:
+        r = run_experiment(cell.dataset, cell.topo, cell.strategy,
+                           ood_k=cell.ood_k, tau=cell.tau, seed=cell.seed,
+                           scale=scale)
+        log(f"  legacy {cell.label}: {r['secs']}s "
+            f"ood_auc={r['ood_auc']:.3f}")
+        rows.append(r)
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--preset", default=None,
+                    help=f"one of {sorted(PRESETS)}")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered presets and exit")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the compiled-program plan; no jax work")
+    ap.add_argument("--full", action="store_true", help="paper-scale runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (seconds on CPU) — CI / sanity runs")
+    ap.add_argument("--datasets", default=None, help="comma list")
+    ap.add_argument("--seeds", default=None, help="comma list of ints")
+    ap.add_argument("--n-nodes", type=int, default=None)
+    ap.add_argument("--no-legacy", action="store_true",
+                    help="skip the legacy per-config wall-clock baseline")
+    ap.add_argument("--unroll", action="store_true",
+                    help="engine escape hatch: per-round dispatch "
+                         "(incremental metrics) instead of one scan")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    args = ap.parse_args(argv)
+
+    if args.list or args.preset is None:
+        print("registered sweep presets:")
+        for p in PRESETS.values():
+            print(f"  {p.name:8s} {p.description} "
+                  f"(default seeds={p.seeds})")
+        return
+    if args.preset not in PRESETS:
+        raise SystemExit(f"unknown preset {args.preset!r}; "
+                         f"have {sorted(PRESETS)}")
+    preset = PRESETS[args.preset]
+
+    datasets = (tuple(args.datasets.split(","))
+                if args.datasets else preset.datasets)
+    seeds = (tuple(int(s) for s in args.seeds.split(","))
+             if args.seeds else preset.seeds)
+    n_nodes = args.n_nodes or (33 if args.full else 16)
+    cells = preset.build(datasets, seeds, n_nodes)
+
+    from benchmarks.common import BenchScale, FULL, QUICK, run_sweep_cells
+
+    scale = FULL if args.full else QUICK
+    if args.smoke:
+        scale = BenchScale(n_train=1500, n_test=300, rounds=6,
+                           local_epochs=2, batch=16, steps_per_epoch=4,
+                           eval_every=2, eval_n=128)
+    if args.dry_run:  # plan only — no data, no compile, no device work
+        print(f"preset {preset.name}: {preset.description}")
+        print(plan(cells, scale))
+        return
+
+    print(f"preset {preset.name}: {len(cells)} cells "
+          f"(datasets={datasets}, seeds={seeds}, n_nodes={n_nodes})")
+    print(plan(cells, scale))
+
+    t0 = time.time()
+    rows = run_sweep_cells(cells, scale=scale, unroll_eval=args.unroll,
+                           log=print)
+    engine_secs = time.time() - t0
+    print(f"\nsweep engine: {len(cells)} experiments in "
+          f"{engine_secs:.1f}s wall-clock "
+          f"({engine_secs / len(cells):.2f}s/experiment amortized)")
+
+    if not args.no_legacy:
+        t0 = time.time()
+        run_legacy_baseline(cells, scale)
+        legacy_secs = time.time() - t0
+        print(f"legacy per-config loop: {len(cells)} experiments in "
+              f"{legacy_secs:.1f}s wall-clock "
+              f"({legacy_secs / len(cells):.2f}s/experiment)")
+        print(f"speedup: {legacy_secs / max(engine_secs, 1e-9):.2f}× "
+              f"(batched engine vs legacy loop)")
+
+    print("\n=== verdict ===")
+    print(" •", preset.verdict(rows))
+
+    os.makedirs(args.out, exist_ok=True)
+    path = f"{args.out}/sweep_{preset.name}.json"
+    json.dump(rows, open(path, "w"), indent=1, default=_json_default)
+    print(f"rows → {path}")
+
+
+def _json_default(o):
+    try:
+        return float(o)
+    except (TypeError, ValueError):
+        return str(o)
+
+
+if __name__ == "__main__":
+    main()

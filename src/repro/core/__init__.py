@@ -23,9 +23,11 @@ from repro.core.mixing import (
 from repro.core.decentralized import (
     DecentralizedConfig,
     DecentralizedTrainer,
+    coeffs_stack,
     stack_params,
     unstack_params,
 )
+from repro.core.sweep import SweepEngine, SweepResult
 from repro.core.propagation import (
     accuracy_auc,
     iid_ood_gap,

@@ -10,7 +10,27 @@ Each round:
      strategy's row-stochastic mixing matrix (dense einsum on a single
      device; ``repro.core.gossip`` collectives under a mesh).
 
-The trainer is model-agnostic: it takes a ``loss_fn(params, batch, rng)``
+Two execution modes (DESIGN.md §7):
+
+* **scanned** (default): the whole R-round schedule is ONE jitted
+  ``lax.scan``.  The per-round mixing matrices are precomputed host-side
+  into an ``(R, n, n)`` stack (:func:`coeffs_stack`), so the Random
+  baseline's per-round resampling and ``core.dynamic`` link-failure
+  matrices become *data* consumed by the scan instead of host-side control
+  flow.  Per-round batches are stacked along a leading round axis and
+  evaluation runs inside the scan, so metrics come back as ``(R, n)``
+  arrays with a single device dispatch for the whole run.
+* **unrolled** (``DecentralizedConfig(unroll_eval=True)``): the legacy
+  per-round Python loop — one dispatch per round, incremental history.
+  Useful for streaming metrics while debugging, and for very long
+  schedules where the stacked ``(R, ...)`` batch tensor would not fit in
+  host memory.
+
+Both modes produce identical histories — asserted in tests/test_sweep.py.
+The vmap-over-experiments axis on top of the scanned mode lives in
+``repro.core.sweep``.
+
+The trainer is model-agnostic: it takes a ``loss_fn(params, batch)``
 and an ``Optimizer``.  Evaluation after every round measures each node's
 accuracy on the shared ``test_iid`` / ``test_ood`` sets — the accuracy-AUC
 across rounds is the paper's knowledge-propagation metric.
@@ -18,7 +38,7 @@ across rounds is the paper's knowledge-propagation metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +55,12 @@ __all__ = [
     "DecentralizedTrainer",
     "stack_params",
     "unstack_params",
+    "round_coeffs",
+    "coeffs_stack",
+    "make_local_train_fn",
+    "make_round_fn",
+    "make_mix_fn",
+    "eval_round_indices",
 ]
 
 
@@ -54,6 +80,8 @@ class DecentralizedConfig:
     eval_every: int = 1
     resample_random_each_round: bool = True   # paper's Random baseline redraws
     mix_in_float32: bool = True
+    unroll_eval: bool = False  # True → legacy per-round Python loop
+    mix_impl: str = "einsum"   # "einsum" | "pallas" (kernels.gossip_mix)
 
 
 @dataclasses.dataclass
@@ -62,6 +90,106 @@ class RoundMetrics:
     iid_acc: np.ndarray   # (n,) per-node accuracy on test_iid
     ood_acc: np.ndarray   # (n,) per-node accuracy on test_ood
     train_loss: np.ndarray  # (n,)
+
+
+# ----------------------------------------------------------------------
+# mixing-matrix schedules: per-round matrices as precomputed data
+# ----------------------------------------------------------------------
+def round_coeffs(
+    topo: Topology,
+    strategy: AggregationStrategy,
+    round_idx: int,
+    data_counts: Optional[np.ndarray] = None,
+    coeffs_fn: Optional[Callable[[int], np.ndarray]] = None,
+    resample_random: bool = True,
+) -> np.ndarray:
+    """Mixing matrix for one round.  Random redraws per round (seed mixes
+    in the round index); all other strategies are static unless a
+    ``coeffs_fn`` (e.g. core.dynamic link-failure matrices) overrides."""
+    if coeffs_fn is not None:
+        return np.asarray(coeffs_fn(round_idx))
+    if strategy.kind == "random" and resample_random:
+        strategy = dataclasses.replace(
+            strategy, seed=strategy.seed * 100003 + round_idx)
+    return mixing_matrix(topo, strategy, data_counts)
+
+
+def coeffs_stack(
+    topo: Topology,
+    strategy: AggregationStrategy,
+    rounds: int,
+    data_counts: Optional[np.ndarray] = None,
+    coeffs_fn: Optional[Callable[[int], np.ndarray]] = None,
+    resample_random: bool = True,
+) -> np.ndarray:
+    """(R, n, n) stack of per-round mixing matrices — the scanned trainer's
+    data-not-control-flow representation of time-varying aggregation."""
+    return np.stack([
+        round_coeffs(topo, strategy, r, data_counts, coeffs_fn,
+                     resample_random)
+        for r in range(rounds)
+    ])
+
+
+# ----------------------------------------------------------------------
+# round-step factories (shared by the trainer and repro.core.sweep)
+# ----------------------------------------------------------------------
+def make_mix_fn(mix_impl: str = "einsum") -> Callable:
+    """Aggregation backend: XLA einsum (default) or the fused Pallas kernel
+    (kernels/gossip_mix.py; interpret-mode on CPU, compiled on TPU/GPU)."""
+    if mix_impl == "einsum":
+        return mix_dense
+    if mix_impl == "pallas":
+        from repro.kernels.gossip_mix import mix_dense_pallas
+
+        return mix_dense_pallas
+    raise KeyError(f"unknown mix_impl {mix_impl!r}; have 'einsum', 'pallas'")
+
+
+def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
+                        local_epochs: int) -> Callable:
+    """LocalTrain (Eq. 1) for ONE node: E epochs over its batches as a
+    ``lax.scan`` over the (E·steps,) batch axis."""
+
+    def local_train(params, opt_state, batches):
+        def step(carry, batch):
+            p, s = carry
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+            updates, s = optimizer.update(grads, s, p)
+            p = apply_updates(p, updates)
+            return (p, s), loss
+
+        # repeat the epoch's batches E times along the scan axis
+        rep = jax.tree.map(
+            lambda x: jnp.concatenate([x] * local_epochs, axis=0), batches)
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), rep)
+        return params, opt_state, jnp.mean(losses)
+
+    return local_train
+
+
+def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
+                  mix_impl: str = "einsum") -> Callable:
+    """One full round — vmapped LocalTrain then aggregation — as a pure
+    function ``(stacked_params, stacked_opt, node_batches, coeffs) →
+    (mixed_params, opt, losses)``."""
+    local_train = make_local_train_fn(loss_fn, optimizer, local_epochs)
+    mix = make_mix_fn(mix_impl)
+
+    def round_fn(stacked_params, stacked_opt, node_batches, coeffs):
+        params, opt, losses = jax.vmap(local_train)(
+            stacked_params, stacked_opt, node_batches)
+        return mix(params, coeffs), opt, losses
+
+    return round_fn
+
+
+def eval_round_indices(rounds: int, eval_every: int) -> List[int]:
+    """Rounds at which the legacy loop recorded metrics (kept identical so
+    scanned histories line up bit-for-bit with unrolled ones)."""
+    return [r for r in range(rounds)
+            if (r + 1) % eval_every == 0 or r == rounds - 1]
 
 
 class DecentralizedTrainer:
@@ -74,7 +202,7 @@ class DecentralizedTrainer:
       loss_fn: ``(params, batch) -> scalar loss``;  batch is whatever the
         data pipeline yields per node per step.
       eval_fn: ``(params, test_batch) -> accuracy`` scalar in [0, 1].
-      config: round/epoch counts.
+      config: round/epoch counts + execution mode (scanned vs unrolled).
     """
 
     def __init__(
@@ -96,50 +224,56 @@ class DecentralizedTrainer:
         self.config = config
         self.data_counts = data_counts
         self.coeffs_fn = coeffs_fn  # e.g. core.dynamic link-failure matrices
-        self._train_round = jax.jit(self._train_round_impl)
+        self._round_fn = make_round_fn(
+            loss_fn, optimizer, config.local_epochs, config.mix_impl)
+        self._train_round = jax.jit(self._round_fn)
         self._evaluate = jax.jit(self._evaluate_impl)
+        self._run_scan = jax.jit(self._run_scan_impl)
 
     # ------------------------------------------------------------------
     def coeffs_for_round(self, r: int) -> jnp.ndarray:
-        """Mixing matrix for round r. Random redraws per round (seed mixes
-        in the round index); all other strategies are static unless a
-        ``coeffs_fn`` (e.g. time-varying topology) overrides."""
-        if self.coeffs_fn is not None:
-            return jnp.asarray(self.coeffs_fn(r))
-        strat = self.strategy
-        if strat.kind == "random" and self.config.resample_random_each_round:
-            strat = dataclasses.replace(strat, seed=strat.seed * 100003 + r)
-        return jnp.asarray(mixing_matrix(self.topology, strat, self.data_counts))
+        """Mixing matrix for round r (see :func:`round_coeffs`)."""
+        return jnp.asarray(round_coeffs(
+            self.topology, self.strategy, r, self.data_counts,
+            self.coeffs_fn, self.config.resample_random_each_round))
+
+    def coeffs_stack(self, rounds: Optional[int] = None) -> np.ndarray:
+        """(R, n, n) stack of this run's per-round mixing matrices."""
+        return coeffs_stack(
+            self.topology, self.strategy,
+            self.config.rounds if rounds is None else rounds,
+            self.data_counts, self.coeffs_fn,
+            self.config.resample_random_each_round)
 
     # ------------------------------------------------------------------
-    def _local_train_node(self, params, opt_state, batches):
-        """E epochs over this node's batches: scan over (E*steps,) batches."""
-
-        def step(carry, batch):
-            p, s = carry
-            loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
-            updates, s = self.optimizer.update(grads, s, p)
-            p = apply_updates(p, updates)
-            return (p, s), loss
-
-        e = self.config.local_epochs
-        # repeat the epoch's batches E times along the scan axis
-        rep = jax.tree.map(lambda x: jnp.concatenate([x] * e, axis=0), batches)
-        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), rep)
-        return params, opt_state, jnp.mean(losses)
-
-    def _train_round_impl(self, stacked_params, stacked_opt, node_batches, coeffs):
-        """One full round: vmapped LocalTrain then aggregation."""
-        params, opt, losses = jax.vmap(self._local_train_node)(
-            stacked_params, stacked_opt, node_batches
-        )
-        mixed = mix_dense(params, coeffs)
-        return mixed, opt, losses
-
     def _evaluate_impl(self, stacked_params, test_iid, test_ood):
         iid = jax.vmap(lambda p: self.eval_fn(p, test_iid))(stacked_params)
         ood = jax.vmap(lambda p: self.eval_fn(p, test_ood))(stacked_params)
         return iid, ood
+
+    def _run_scan_impl(self, stacked_params, stacked_opt, batches, coeffs,
+                       eval_mask, test_iid, test_ood):
+        """All R rounds as one ``lax.scan``; batches/coeffs carry a leading
+        (R,) axis; eval is folded into the scan body so metrics come back
+        stacked as (R, n).  ``eval_mask`` gates the eval forward passes to
+        the rounds the history actually keeps (``eval_every``); skipped
+        rounds report zeros and are dropped before building the history."""
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+
+        def body(carry, xs):
+            params, opt = carry
+            node_batches, c, do_eval = xs
+            params, opt, losses = self._round_fn(params, opt, node_batches, c)
+            iid, ood = jax.lax.cond(
+                do_eval,
+                lambda p: self._evaluate_impl(p, test_iid, test_ood),
+                lambda p: (jnp.zeros((n,)), jnp.zeros((n,))),
+                params)
+            return (params, opt), (losses, iid, ood)
+
+        (stacked_params, stacked_opt), (losses, iid, ood) = jax.lax.scan(
+            body, (stacked_params, stacked_opt), (batches, coeffs, eval_mask))
+        return stacked_params, stacked_opt, losses, iid, ood
 
     # ------------------------------------------------------------------
     def run(
@@ -157,8 +291,43 @@ class DecentralizedTrainer:
             leaves (n, steps_per_epoch, batch, ...) — lets the pipeline
             reshuffle per round.
           test_iid / test_ood: shared global test batches.
+
+        Scanned mode stacks all R rounds of batches on the leading axis
+        (host memory ≈ R × one round of batches); set
+        ``config.unroll_eval=True`` to stream rounds instead.
         """
-        n = self.topology.n_nodes
+        if self.config.unroll_eval:
+            return self.run_unrolled(
+                stacked_params, node_batches_fn, test_iid, test_ood)
+
+        rounds = self.config.rounds
+        coeffs = jnp.asarray(self.coeffs_stack())
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[node_batches_fn(r) for r in range(rounds)])
+        eval_mask = np.zeros(rounds, bool)
+        eval_mask[eval_round_indices(rounds, self.config.eval_every)] = True
+        stacked_opt = jax.vmap(self.optimizer.init)(stacked_params)
+        stacked_params, _, losses, iid, ood = self._run_scan(
+            stacked_params, stacked_opt, batches, coeffs,
+            jnp.asarray(eval_mask), test_iid, test_ood)
+        losses, iid, ood = (np.asarray(losses), np.asarray(iid),
+                            np.asarray(ood))
+        history = [
+            RoundMetrics(round=r, iid_acc=iid[r], ood_acc=ood[r],
+                         train_loss=losses[r])
+            for r in eval_round_indices(rounds, self.config.eval_every)
+        ]
+        return stacked_params, history
+
+    def run_unrolled(
+        self,
+        stacked_params,
+        node_batches_fn: Callable[[int], object],
+        test_iid,
+        test_ood,
+    ) -> Tuple[object, List[RoundMetrics]]:
+        """Legacy per-round Python loop (incremental history API)."""
         stacked_opt = jax.vmap(self.optimizer.init)(stacked_params)
         history: List[RoundMetrics] = []
 

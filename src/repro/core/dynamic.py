@@ -5,11 +5,16 @@ communication topologies" but evaluates static graphs only (§B.1 "we
 assume the topology is static").  This module drops each edge i.i.d. with
 probability ``p_fail`` per round and rebuilds the mixing matrix on the
 surviving subgraph — modelling flaky WAN links — so strategy robustness
-under churn can be measured (benchmarks/robustness.py).
+under churn can be measured (``benchmarks/ablations.py
+run_link_failure``).
 
 Centrality scores can be computed on the ORIGINAL graph (nodes know their
 nominal position; cheap) or the SURVIVING graph per round (reactive;
 requires per-round metric recomputation) — both provided.
+
+:func:`link_failure_schedule` pre-materializes a whole run's matrices as
+an ``(R, n, n)`` stack, so link churn is *data* the scanned trainer /
+sweep engine consume (DESIGN.md §7) rather than host-side control flow.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ import numpy as np
 from repro.core.strategies import AggregationStrategy, mixing_matrix
 from repro.core.topology import Topology
 
-__all__ = ["drop_edges", "dynamic_mixing_matrix"]
+__all__ = ["drop_edges", "dynamic_mixing_matrix", "link_failure_schedule"]
 
 
 def drop_edges(topo: Topology, p_fail: float, rng: np.random.Generator,
@@ -67,3 +72,27 @@ def dynamic_mixing_matrix(
     # rows that lost all neighbours fall back to self-weight 1
     c = np.where(rowsum > 0, c / np.maximum(rowsum, 1e-12), np.eye(topo.n_nodes))
     return c
+
+
+def link_failure_schedule(
+    topo: Topology,
+    strategy: AggregationStrategy,
+    rounds: int,
+    p_fail: float,
+    data_counts: Optional[np.ndarray] = None,
+    reactive: bool = False,
+) -> np.ndarray:
+    """(R, n, n) stack of per-round link-failure mixing matrices.
+
+    Equals ``[dynamic_mixing_matrix(..., round_idx=r, ...) for r in
+    range(R)]`` — the precomputed form the scanned trainer's
+    ``coeffs_stack`` path and ``repro.core.sweep`` consume directly
+    (equivalently, pass ``coeffs_fn=lambda r: dynamic_mixing_matrix(...)``
+    to ``DecentralizedTrainer``; both produce identical runs, see
+    tests/test_sweep.py).
+    """
+    return np.stack([
+        dynamic_mixing_matrix(topo, strategy, r, p_fail,
+                              data_counts=data_counts, reactive=reactive)
+        for r in range(rounds)
+    ])

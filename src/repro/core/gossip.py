@@ -12,7 +12,7 @@ node axis maps to the mesh ``data`` axis.  These functions run *inside*
   mesh axis (the paper's WAN tier; see DESIGN.md §5).
 
 All functions are correctness-tested against ``repro.core.mixing`` on a
-multi-device CPU harness in tests/test_gossip.py.
+multi-device CPU harness in tests/test_gossip_distributed.py.
 """
 from __future__ import annotations
 
@@ -26,6 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.mixing import CirculantSchedule
 
 __all__ = [
+    "compat_shard_map",
     "gossip_dense",
     "gossip_sparse",
     "pod_gossip",
@@ -33,8 +34,23 @@ __all__ = [
 ]
 
 
+def compat_shard_map(fn, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions
+    (new: ``jax.shard_map(check_vma=False)``; old:
+    ``jax.experimental.shard_map.shard_map(check_rep=False)``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # older jax: count the axis members
 
 
 def gossip_dense(params, coeffs_rows: jnp.ndarray, axis_name: str = "data"):
@@ -159,11 +175,6 @@ def make_gossip_fn(
         def fn(params, coeffs):
             return gossip_sparse(params, schedule, coeffs, node_axis)
 
-    mapped = jax.shard_map(
-        fn,
-        mesh=mesh,
-        in_specs=(leaf_spec, coeff_spec),
-        out_specs=leaf_spec,
-        check_vma=False,
-    )
+    mapped = compat_shard_map(
+        fn, mesh, in_specs=(leaf_spec, coeff_spec), out_specs=leaf_spec)
     return jax.jit(mapped)

@@ -1,0 +1,258 @@
+"""Batched experiment-sweep engine: vmap over experiments × scan over rounds.
+
+The paper's findings are all *sweeps* — over strategies (Fig. 4), OOD
+placements (Fig. 5), topologies (Fig. 6), and seeds.  Every cell of such a
+grid runs the same program shape (same n, R, model, batch geometry); only
+the *data* differs: initial params, per-round mixing matrices, sample
+indices, test batches.  This module exploits that: ONE jitted program —
+``vmap`` over the experiment axis E of the ``lax.scan`` over rounds from
+``repro.core.decentralized`` — evaluates a whole figure's grid in a single
+device dispatch (DESIGN.md §7).
+
+Inputs per experiment (leading axis E):
+
+* ``params0``   — stacked initial node models, leaves ``(E, n, ...)``;
+* ``coeffs``    — ``(E, R, n, n)`` per-round mixing matrices
+  (:func:`repro.core.decentralized.coeffs_stack`; Random resampling and
+  ``core.dynamic`` link-failure schedules are just different stacks);
+* ``data_idx``  — ``(E,)`` row into the shared data bank;
+* ``test_iid`` / ``test_ood`` — per-experiment test batches, leaves
+  ``(E, b, ...)``.
+
+Shared across experiments:
+
+* ``bank``      — padded per-node sample bank, leaves ``(D, n, cap, ...)``
+  (``NodeBatcher.sample_bank``); experiments sharing a data configuration
+  (same seed/OOD placement) share a bank row, so memory scales with the
+  number of *distinct* datasets D, not with E;
+* ``indices``   — ``(D, R, n, S)`` per-round sample indices
+  (``NodeBatcher.all_round_indices``) — batches are a per-round gather
+  inside the scan, never materialized as an ``(E, R, ...)`` tensor.
+
+``unroll_eval=True`` is the escape hatch: the same vmapped round function
+driven by the legacy per-round Python loop, preserving the incremental
+history API (one dispatch per round, metrics available as they stream).
+Both paths produce identical results — asserted in tests/test_sweep.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decentralized import (
+    DecentralizedConfig,
+    RoundMetrics,
+    eval_round_indices,
+    make_round_fn,
+)
+from repro.training.optimizer import Optimizer
+
+__all__ = ["SweepEngine", "SweepResult", "gather_round_batch"]
+
+
+def gather_round_batch(bank: Dict[str, jnp.ndarray], data_idx: jnp.ndarray,
+                       idx_r: jnp.ndarray, batch_size: int):
+    """One round of per-node batches for one experiment, gathered straight
+    from the (D, n, cap, ...) bank.
+
+    ``idx_r``: (n, S) sample indices (S = steps·batch) into each node's
+    bank row.  Returns the exact pytree ``NodeBatcher.round_batches``
+    yields — leaves (n, steps, batch, ...) — including the all-ones LM
+    loss mask.
+    """
+    n, s = idx_r.shape
+    steps = s // batch_size
+    rows = jnp.arange(n)[:, None]
+
+    def g(leaf: jnp.ndarray) -> jnp.ndarray:
+        out = leaf[data_idx, rows, idx_r]  # (n, S, ...)
+        return out.reshape((n, steps, batch_size) + leaf.shape[3:])
+
+    batch = {k: g(v) for k, v in bank.items()}
+    if "tokens" in batch:  # LM: trainer consumes an all-ones train mask
+        seq = batch["tokens"].shape[-1]
+        batch["mask"] = jnp.ones((n, steps, batch_size, seq - 1), jnp.float32)
+    return batch
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked metrics for an E-experiment sweep.
+
+    ``train_loss`` / ``iid_acc`` / ``ood_acc`` are ``(E, R, n)``;
+    ``params`` is the final stacked pytree with leaves ``(E, n, ...)``.
+    Accuracy rows are only populated at the rounds ``eval_every`` keeps
+    (eval is gated inside the scan; skipped rounds are zeros).
+    ``history(e)`` rebuilds the legacy per-experiment ``List[RoundMetrics]``
+    (subsampled at ``eval_every`` exactly like ``DecentralizedTrainer.run``)
+    for ``repro.core.propagation``.
+    """
+
+    train_loss: np.ndarray
+    iid_acc: np.ndarray
+    ood_acc: np.ndarray
+    params: Any
+    eval_every: int = 1
+
+    @property
+    def n_experiments(self) -> int:
+        return self.train_loss.shape[0]
+
+    @property
+    def rounds(self) -> int:
+        return self.train_loss.shape[1]
+
+    def history(self, e: int) -> List[RoundMetrics]:
+        return [
+            RoundMetrics(round=r, iid_acc=self.iid_acc[e, r],
+                         ood_acc=self.ood_acc[e, r],
+                         train_loss=self.train_loss[e, r])
+            for r in eval_round_indices(self.rounds, self.eval_every)
+        ]
+
+    def experiment_params(self, e: int):
+        return jax.tree.map(lambda x: x[e], self.params)
+
+
+class SweepEngine:
+    """Compiles (strategy × seed × placement × topology) grids into one
+    program: ``jit(vmap_E(scan_R(round)))``.
+
+    Args:
+      optimizer / loss_fn / eval_fn: exactly as ``DecentralizedTrainer``.
+      config: round/epoch counts; ``mix_impl="pallas"`` routes aggregation
+        through ``kernels.gossip_mix``; ``unroll_eval=True`` makes
+        :meth:`run` default to the incremental per-round loop.
+    """
+
+    def __init__(
+        self,
+        optimizer: Optimizer,
+        loss_fn: Callable,
+        eval_fn: Callable,
+        config: DecentralizedConfig = DecentralizedConfig(),
+    ):
+        self.optimizer = optimizer
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
+        self.config = config
+        self._round_fn = make_round_fn(
+            loss_fn, optimizer, config.local_epochs, config.mix_impl)
+        self._run_jit = jax.jit(
+            self._run_impl, static_argnames=("batch_size",))
+        self._round_jit = jax.jit(
+            self._one_round_impl, static_argnames=("batch_size", "do_eval"))
+
+    # ------------------------------------------------------------------
+    def _eval(self, stacked_params, test_iid, test_ood):
+        iid = jax.vmap(lambda p: self.eval_fn(p, test_iid))(stacked_params)
+        ood = jax.vmap(lambda p: self.eval_fn(p, test_ood))(stacked_params)
+        return iid, ood
+
+    def _experiment_scan(self, bank, batch_size, eval_mask, params, opt,
+                         coeffs_e, idx_e, data_idx, test_iid, test_ood):
+        """All R rounds of ONE experiment (vmapped over E by the callers).
+        ``eval_mask`` gates eval to the rounds ``eval_every`` keeps;
+        skipped rounds report zeros."""
+        n = jax.tree.leaves(params)[0].shape[0]
+
+        def body(carry, xs):
+            p, o = carry
+            idx_r, c_r, do_eval = xs
+            batch = gather_round_batch(bank, data_idx, idx_r, batch_size)
+            p, o, losses = self._round_fn(p, o, batch, c_r)
+            iid, ood = jax.lax.cond(
+                do_eval,
+                lambda q: self._eval(q, test_iid, test_ood),
+                lambda q: (jnp.zeros((n,)), jnp.zeros((n,))),
+                p)
+            return (p, o), (losses, iid, ood)
+
+        (params, opt), (losses, iid, ood) = jax.lax.scan(
+            body, (params, opt), (idx_e, coeffs_e, eval_mask))
+        return params, losses, iid, ood
+
+    def _run_impl(self, params0, opt0, coeffs, indices, data_idx, eval_mask,
+                  bank, test_iid, test_ood, *, batch_size):
+        run_one = lambda p, o, c, ix, d, ti, to: self._experiment_scan(
+            bank, batch_size, eval_mask, p, o, c, ix, d, ti, to)
+        return jax.vmap(run_one)(
+            params0, opt0, coeffs, indices, data_idx, test_iid, test_ood)
+
+    def _one_round_impl(self, params, opt, coeffs_r, idx_r, data_idx, bank,
+                        test_iid, test_ood, *, batch_size, do_eval):
+        def one(p, o, c, ix, d, ti, to):
+            batch = gather_round_batch(bank, d, ix, batch_size)
+            p, o, losses = self._round_fn(p, o, batch, c)
+            if do_eval:
+                iid, ood = self._eval(p, ti, to)
+            else:
+                n = jax.tree.leaves(p)[0].shape[0]
+                iid = ood = jnp.zeros((n,))
+            return p, o, losses, iid, ood
+
+        return jax.vmap(one)(
+            params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood)
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        params0,                      # pytree, leaves (E, n, ...)
+        coeffs: np.ndarray,           # (E, R, n, n)
+        bank,                         # pytree, leaves (D, n, cap, ...)
+        indices: np.ndarray,          # (D, R, n, S)
+        data_idx: np.ndarray,         # (E,) rows into bank/indices
+        test_iid,                     # pytree, leaves (E, b, ...)
+        test_ood,
+        batch_size: int,
+        unroll_eval: Optional[bool] = None,
+    ) -> SweepResult:
+        """Run the whole grid.  ``unroll_eval`` overrides the config flag
+        (None → use ``config.unroll_eval``)."""
+        coeffs = jnp.asarray(coeffs, jnp.float32)
+        data_idx = jnp.asarray(data_idx, jnp.int32)
+        # (E, R, n, S): per-experiment index schedule, pre-gathered host-side
+        # (tiny — int32; the sample bank itself stays (D, ...)-shaped).
+        idx = jnp.asarray(np.asarray(indices, np.int32)[np.asarray(data_idx)])
+        bank = jax.tree.map(jnp.asarray, bank)
+        opt0 = jax.vmap(jax.vmap(self.optimizer.init))(params0)
+        rounds = coeffs.shape[1]
+        eval_mask = np.zeros(rounds, bool)
+        eval_mask[eval_round_indices(rounds, self.config.eval_every)] = True
+
+        unroll = (self.config.unroll_eval if unroll_eval is None
+                  else unroll_eval)
+        if unroll:
+            return self._run_unrolled(
+                params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
+                test_iid, test_ood, batch_size)
+
+        params, losses, iid, ood = self._run_jit(
+            params0, opt0, coeffs, idx, data_idx, jnp.asarray(eval_mask),
+            bank, test_iid, test_ood, batch_size=batch_size)
+        return SweepResult(
+            train_loss=np.asarray(losses), iid_acc=np.asarray(iid),
+            ood_acc=np.asarray(ood), params=params,
+            eval_every=self.config.eval_every)
+
+    def _run_unrolled(self, params, opt, coeffs, idx, data_idx, eval_mask,
+                      bank, test_iid, test_ood, batch_size) -> SweepResult:
+        """Escape hatch: per-round dispatch, incremental metrics."""
+        losses, iids, oods = [], [], []
+        for r in range(coeffs.shape[1]):
+            params, opt, l_r, iid_r, ood_r = self._round_jit(
+                params, opt, coeffs[:, r], idx[:, r], data_idx, bank,
+                test_iid, test_ood, batch_size=batch_size,
+                do_eval=bool(eval_mask[r]))
+            losses.append(np.asarray(l_r))
+            iids.append(np.asarray(iid_r))
+            oods.append(np.asarray(ood_r))
+        return SweepResult(
+            train_loss=np.stack(losses, axis=1),
+            iid_acc=np.stack(iids, axis=1),
+            ood_acc=np.stack(oods, axis=1),
+            params=params, eval_every=self.config.eval_every)

@@ -42,10 +42,13 @@ class NodeBatcher:
     def data_counts(self) -> np.ndarray:
         return np.array([len(d) for d in self.node_data], dtype=np.float64)
 
-    def round_batches(self, round_idx: int) -> Dict[str, np.ndarray]:
-        """→ leaves (n_nodes, steps, batch, ...)."""
+    def round_indices(self, round_idx: int) -> np.ndarray:
+        """(n_nodes, steps·batch) per-node sample indices for one round —
+        the *data* representation of this round's shuffle, consumed either
+        by :meth:`round_batches` (host-side gather) or by the sweep
+        engine's in-scan gather against :meth:`sample_bank`."""
         need = self.steps * self.batch_size
-        xs, ys, masks = [], [], []
+        out = np.empty((self.n_nodes, need), dtype=np.int64)
         for node, ds in enumerate(self.node_data):
             rng = np.random.default_rng(
                 (self.seed * 1_000_003 + round_idx) * 131 + node
@@ -55,12 +58,44 @@ class NodeBatcher:
                 idx = np.concatenate(
                     [idx] * (need // len(idx) + 1)
                 )[:need]
-            idx = idx[:need]
+            out[node] = idx[:need]
+        return out
+
+    def all_round_indices(self, rounds: int) -> np.ndarray:
+        """(rounds, n_nodes, steps·batch) index schedule for a whole run —
+        ~KBs of int64 per round, so a full R-round schedule is cheap even
+        when the materialized batches would not be."""
+        return np.stack([self.round_indices(r) for r in range(rounds)])
+
+    def sample_bank(self) -> Dict[str, np.ndarray]:
+        """Padded per-node sample bank with leaves (n_nodes, cap, ...).
+
+        Rows are node datasets zero-padded to the largest node's length;
+        :meth:`round_indices` never indexes into the padding.  Gathering
+        ``bank[node, round_indices(r)[node]]`` reproduces
+        :meth:`round_batches` bit-for-bit (tests/test_sweep.py).
+        """
+        cap = max(len(d) for d in self.node_data)
+
+        def pad(a: np.ndarray) -> np.ndarray:
+            return np.pad(a, [(0, cap - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+
+        if self.kind == "lm":
+            return {"tokens": np.stack(
+                [pad(d.x).astype(np.int32) for d in self.node_data])}
+        return {
+            "x": np.stack([pad(d.x) for d in self.node_data]),
+            "y": np.stack([pad(d.y) for d in self.node_data]),
+        }
+
+    def round_batches(self, round_idx: int) -> Dict[str, np.ndarray]:
+        """→ leaves (n_nodes, steps, batch, ...)."""
+        indices = self.round_indices(round_idx)
+        xs, ys = [], []
+        for node, ds in enumerate(self.node_data):
+            idx = indices[node]
             xs.append(ds.x[idx].reshape((self.steps, self.batch_size) + ds.x.shape[1:]))
             ys.append(ds.y[idx].reshape(self.steps, self.batch_size))
-            if self.kind == "lm":
-                m = language_backdoor_mask(ds.x[idx])
-                masks.append(m.reshape(self.steps, self.batch_size, -1))
         if self.kind == "lm":
             return {
                 "tokens": np.stack(xs).astype(np.int32),

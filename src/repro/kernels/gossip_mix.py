@@ -11,16 +11,29 @@ VMEM budget per program: K·bm·bn·bytes + bm·bn·4 (acc).  Default tile
 
 Roofline: bytes = (K+1)·|P| → t_mem = (K+1)·|P| / 819 GB/s per chip; the
 fusion makes this the floor (vs (3K−1)·|P| naive).
+
+Backend selection: ``interpret=None`` (the default) auto-detects — the
+kernel compiles for real on TPU/GPU backends and falls back to Pallas
+interpret mode on CPU, so the same call sites work everywhere.  The
+scan/vmap sweep engine routes its aggregation through
+:func:`mix_dense_pallas` when ``DecentralizedConfig(mix_impl="pallas")``
+(see DESIGN.md §6/§7).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_mix_pallas"]
+__all__ = ["gossip_mix_pallas", "mix_dense_pallas", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """True when no Pallas-compiling backend is present (CPU → interpret)."""
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 def _kernel(w_ref, blocks_ref, out_ref):
@@ -35,12 +48,15 @@ def _kernel(w_ref, blocks_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def gossip_mix_pallas(blocks: jnp.ndarray, weights: jnp.ndarray,
                       bm: int = 256, bn: int = 512,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """out = Σ_k weights[k] · blocks[k].
 
     blocks: (K, M, N) — K neighbour copies of one parameter tile-matrix.
     weights: (K,) f32.  M, N padded to tile multiples internally.
+    interpret: None → auto (compiled on TPU/GPU, interpret on CPU).
     """
+    if interpret is None:
+        interpret = default_interpret()
     k, m, n = blocks.shape
     bm = min(bm, m)
     bn = min(bn, n)
@@ -61,3 +77,26 @@ def gossip_mix_pallas(blocks: jnp.ndarray, weights: jnp.ndarray,
         interpret=interpret,
     )(weights.astype(jnp.float32), blocks)
     return out[:m, :n]
+
+
+def mix_dense_pallas(params, coeffs: jnp.ndarray,
+                     interpret: Optional[bool] = None):
+    """Eq. (2) over a stacked pytree via the fused kernel: for each leaf
+    ``(n, ...)``, destination row i is the K=n-way MAC ``Σ_j C[i,j]·leaf[j]``
+    — one :func:`gossip_mix_pallas` call vmapped over destination rows.
+
+    Drop-in replacement for :func:`repro.core.mixing.mix_dense` (same f32
+    accumulation, same output dtype); selected by
+    ``DecentralizedConfig(mix_impl="pallas")``.
+    """
+    c = jnp.asarray(coeffs, jnp.float32)
+    n = c.shape[0]
+
+    def leaf_fn(leaf: jnp.ndarray) -> jnp.ndarray:
+        flat = leaf.reshape(n, 1, -1)  # (K=n, M=1, N=prod(rest))
+        out = jax.vmap(
+            lambda w: gossip_mix_pallas(flat, w, bm=1, interpret=interpret)
+        )(c)  # (n, 1, N)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(leaf_fn, params)

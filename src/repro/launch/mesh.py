@@ -20,16 +20,26 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_training_mesh", "POD_DATA", "POD_MODEL"]
+__all__ = ["compat_make_mesh", "make_production_mesh", "make_training_mesh",
+           "POD_DATA", "POD_MODEL"]
 
 POD_DATA = 16
 POD_MODEL = 16
 
 
-def _mesh(shape, axes):
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types across jax versions:
+    ``AxisType`` only exists on newer jax; older releases have no explicit
+    sharding mode, so every axis is already Auto."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+_mesh = compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

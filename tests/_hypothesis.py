@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+``hypothesis`` is a dev-only dependency (pyproject.toml ``[dev]`` extra).
+When it is installed, this module re-exports the real ``given`` /
+``settings`` / ``strategies``.  When it is not, the decorators degrade to
+stubs whose test bodies call ``pytest.importorskip("hypothesis")`` — so
+the property tests skip cleanly (instead of failing collection) and the
+rest of each test module still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # degrade to skip-at-runtime stubs
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            def skip_without_hypothesis():
+                pytest.importorskip("hypothesis")
+
+            skip_without_hypothesis.__name__ = fn.__name__
+            skip_without_hypothesis.__doc__ = fn.__doc__
+            return skip_without_hypothesis
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Accepts any ``st.xxx(...)`` call made at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis import given, settings, st  # optional dep; skips if absent
 
 from repro.core.mixing import (
     circulant_decomposition,

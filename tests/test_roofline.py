@@ -94,7 +94,10 @@ VALIDATE = textwrap.dedent("""
     }
     coeffs = jax.ShapeDtypeStruct((n, n), jnp.float32)
     compiled = jax.jit(step).lower(p_abs, opt_abs, batch, coeffs).compile()
-    hlo_flops = float(compiled.cost_analysis()["flops"])
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0]
+    hlo_flops = float(ca["flops"])
 
     shape = InputShape("v", s, n * b, "train")
     plan = roofline.Plan(n_global=n, fsdp=1, model=1, pods=1, micro=1,

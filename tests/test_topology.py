@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis import given, settings, st  # optional dep; skips if absent
 
 from repro.core.topology import (
     Topology,
