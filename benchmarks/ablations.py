@@ -87,7 +87,8 @@ def run_link_failure(dataset="mnist", p_fails=(0.0, 0.3, 0.6),
         test = make_dataset(dataset, scale.n_test, seed=seed + 9999)
         parts = node_datasets(train, 16, ood_node=ood_node, q=0.10, seed=seed)
         nb = NodeBatcher(parts, batch_size=scale.batch,
-                         steps_per_epoch=scale.steps_per_epoch, seed=seed)
+                         steps_per_epoch=scale.steps_per_epoch, seed=seed,
+                         local_epochs=scale.local_epochs)
         tb = jax.tree.map(jnp.asarray, make_test_batch(test, scale.eval_n))
         ob = jax.tree.map(jnp.asarray,
                           make_test_batch(backdoored_testset(test), scale.eval_n))

@@ -124,7 +124,8 @@ def run_experiment(
     parts = node_datasets(train, topo.n_nodes, ood_node=ood_node,
                           q=0.10, seed=seed, alpha_l=alpha_l, alpha_s=alpha_s)
     nb = NodeBatcher(parts, batch_size=scale.batch,
-                     steps_per_epoch=scale.steps_per_epoch, seed=seed)
+                     steps_per_epoch=scale.steps_per_epoch, seed=seed,
+                     local_epochs=scale.local_epochs)
     tb = make_test_batch(test, scale.eval_n, seed=seed)
     ob = make_test_batch(backdoored_testset(test, seed=seed), scale.eval_n,
                          seed=seed, ood_mask=(test.kind == "lm"))
@@ -209,6 +210,8 @@ def run_sweep_cells(
     alpha_l: float = 1000.0,
     alpha_s: float = 1000.0,
     unroll_eval: bool = False,
+    mesh=None,
+    chunk_rounds: Optional[int] = None,
     log=None,
 ) -> List[Dict]:
     """Evaluate a whole grid of cells through the sweep engine.
@@ -220,6 +223,10 @@ def run_sweep_cells(
     summary dict per cell (in input order) with ``secs`` amortized over the
     group and ``sweep_secs``/``sweep_group_size`` recording the batched
     wall-clock.
+
+    ``mesh`` (``repro.launch.mesh.make_sweep_mesh``) shards each group's
+    experiment axis across devices; ``chunk_rounds`` scans the round
+    schedule in bounded chunks — both bit-identical to the default path.
     """
     rows: List[Optional[Dict]] = [None] * len(cells)
     for (ds, n_nodes), idxs in group_cells(cells).items():
@@ -250,7 +257,8 @@ def run_sweep_cells(
                                       alpha_l=alpha_l, alpha_s=alpha_s)
                 nb = NodeBatcher(parts, batch_size=scale.batch,
                                  steps_per_epoch=group_steps,
-                                 seed=cell.seed)
+                                 seed=cell.seed,
+                                 local_epochs=scale.local_epochs)
                 group_steps = nb.steps
                 dconf[key] = len(batchers)
                 batchers.append(nb)
@@ -293,7 +301,8 @@ def run_sweep_cells(
         result = engine.run(
             params0, np.stack(coeffs), bank, indices,
             np.asarray(data_idx), stack_tests(t_iid), stack_tests(t_ood),
-            batch_size=scale.batch, unroll_eval=unroll_eval)
+            batch_size=scale.batch, unroll_eval=unroll_eval,
+            mesh=mesh, chunk_rounds=chunk_rounds)
 
         secs = time.time() - t0
         for e, (i, (cell, ood_node)) in enumerate(zip(idxs, metas)):

@@ -8,6 +8,17 @@ against the legacy per-config loop.
   PYTHONPATH=src python -m benchmarks.sweep --preset fig6 --no-legacy
   PYTHONPATH=src python -m benchmarks.sweep --preset fig4 --seeds 0,1,2 --full
 
+Device-sharded mode (DESIGN.md §8) — shard the experiment axis across all
+local devices and record the sharded-vs-single wall-clock in
+``BENCH_sweep.json`` (on CPU, launch with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m benchmarks.sweep --preset fig4 --smoke \\
+    --no-legacy --shard
+  PYTHONPATH=src python -m benchmarks.sweep --preset fig4 --shard 4 \\
+    --chunk-rounds 10
+
 Each preset re-expresses one paper figure as a list of
 :class:`benchmarks.common.SweepCell` — pure data.  Cells sharing a program
 shape (dataset × node count) compile into ONE program; seeds, strategies,
@@ -178,6 +189,14 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--unroll", action="store_true",
                     help="engine escape hatch: per-round dispatch "
                          "(incremental metrics) instead of one scan")
+    ap.add_argument("--shard", nargs="?", type=int, const=0, default=None,
+                    metavar="N",
+                    help="shard the experiment axis over N devices "
+                         "(default: all); also times the single-device "
+                         "path and writes BENCH_sweep.json")
+    ap.add_argument("--chunk-rounds", type=int, default=None,
+                    help="scan the round schedule in chunks of this many "
+                         "rounds (bounds device memory for long runs)")
     ap.add_argument("--out", default="benchmarks/artifacts")
     args = ap.parse_args(argv)
 
@@ -215,13 +234,56 @@ def main(argv: Optional[List[str]] = None) -> None:
           f"(datasets={datasets}, seeds={seeds}, n_nodes={n_nodes})")
     print(plan(cells, scale))
 
+    mesh = None
+    if args.shard is not None:
+        if args.unroll:
+            raise SystemExit("--shard cannot combine with --unroll")
+        import jax
+
+        from repro.launch.mesh import make_sweep_mesh
+
+        mesh = make_sweep_mesh(args.shard or None)
+        print(f"sharding the experiment axis over "
+              f"{len(jax.devices()) if not args.shard else args.shard} "
+              f"device(s); chunk_rounds={args.chunk_rounds}")
+
     t0 = time.time()
     rows = run_sweep_cells(cells, scale=scale, unroll_eval=args.unroll,
+                           mesh=mesh, chunk_rounds=args.chunk_rounds,
                            log=print)
     engine_secs = time.time() - t0
     print(f"\nsweep engine: {len(cells)} experiments in "
           f"{engine_secs:.1f}s wall-clock "
           f"({engine_secs / len(cells):.2f}s/experiment amortized)")
+
+    if mesh is not None:
+        # sharded-vs-single comparison → BENCH_sweep.json (perf trajectory)
+        t0 = time.time()
+        single_rows = run_sweep_cells(cells, scale=scale)
+        single_secs = time.time() - t0
+        identical = all(
+            a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
+            and a["final_ood_acc_mean"] == b["final_ood_acc_mean"]
+            for a, b in zip(rows, single_rows))
+        print(f"single-device scanned path: {single_secs:.1f}s wall-clock "
+              f"→ sharded speedup {single_secs / max(engine_secs, 1e-9):.2f}×"
+              f"  (metrics bit-identical: {identical})")
+        os.makedirs(args.out, exist_ok=True)
+        bench = {
+            "preset": preset.name,
+            "experiments": len(cells),
+            "rounds": scale.rounds,
+            "n_nodes": n_nodes,
+            "devices": int(mesh.devices.size),
+            "chunk_rounds": args.chunk_rounds,
+            "sharded_secs": round(engine_secs, 2),
+            "single_device_secs": round(single_secs, 2),
+            "speedup": round(single_secs / max(engine_secs, 1e-9), 3),
+            "bit_identical_metrics": bool(identical),
+        }
+        bench_path = f"{args.out}/BENCH_sweep.json"
+        json.dump(bench, open(bench_path, "w"), indent=1)
+        print(f"sharded-vs-single wall-clock → {bench_path}")
 
     if not args.no_legacy:
         t0 = time.time()

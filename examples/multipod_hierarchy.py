@@ -64,7 +64,8 @@ for bridge in ("hub", "leaf"):
     ood_node = topo.kth_highest_degree_node(2)
     parts = node_datasets(train, topo.n_nodes, ood_node=ood_node, q=0.10,
                           seed=0)
-    nb = NodeBatcher(parts, batch_size=32, steps_per_epoch=6)
+    nb = NodeBatcher(parts, batch_size=32, steps_per_epoch=6,
+                     local_epochs=3)
     trainer = DecentralizedTrainer(
         topo, AggregationStrategy("degree", tau=0.1), sgd(1e-2),
         classifier_loss(ffn_apply), classifier_accuracy(ffn_apply),

@@ -42,7 +42,8 @@ print(f"topology {topo.name}: {topo.n_edges} edges; OOD on node {ood_node}")
 train = make_dataset("mnist", 8000, seed=0)
 test = make_dataset("mnist", 800, seed=123)
 parts = node_datasets(train, N_NODES, ood_node=ood_node, q=0.10, seed=0)
-batcher = NodeBatcher(parts, batch_size=32, steps_per_epoch=8)
+batcher = NodeBatcher(parts, batch_size=32, steps_per_epoch=8,
+                      local_epochs=5)  # E distinct passes per round (Eq. 1)
 test_iid = jax.tree.map(jnp.asarray, make_test_batch(test, 256))
 test_ood = jax.tree.map(jnp.asarray,
                         make_test_batch(backdoored_testset(test), 256))

@@ -47,7 +47,7 @@ print(f"serving fleet: {N} nodes, OOD (backdoored math) on node {ood_node}")
 train = make_tinymem_dataset(800, seed=0)
 test = make_tinymem_dataset(200, seed=99)
 parts = node_datasets(train, N, ood_node=ood_node, q=0.30, seed=0)
-nb = NodeBatcher(parts, batch_size=8, steps_per_epoch=4)
+nb = NodeBatcher(parts, batch_size=8, steps_per_epoch=4, local_epochs=2)
 tb = jax.tree.map(jnp.asarray, make_test_batch(test, 64))
 ob = jax.tree.map(jnp.asarray,
                   make_test_batch(backdoored_testset(test), 64, ood_mask=True))

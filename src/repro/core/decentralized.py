@@ -60,6 +60,7 @@ __all__ = [
     "make_local_train_fn",
     "make_round_fn",
     "make_mix_fn",
+    "make_scan_fn",
     "eval_round_indices",
 ]
 
@@ -82,6 +83,12 @@ class DecentralizedConfig:
     mix_in_float32: bool = True
     unroll_eval: bool = False  # True → legacy per-round Python loop
     mix_impl: str = "einsum"   # "einsum" | "pallas" (kernels.gossip_mix)
+    # True (default): the pipeline supplies E *distinct* epoch passes per
+    # round (``NodeBatcher(local_epochs=E)``) and LocalTrain consumes them
+    # as-is — the paper's Eq. (1).  False: legacy behavior — one epoch of
+    # batches tiled E times, i.e. the identical batch order replayed every
+    # local epoch (kept for the bit-exact equivalence tests).
+    epoch_shuffle: bool = True
 
 
 @dataclasses.dataclass
@@ -147,9 +154,17 @@ def make_mix_fn(mix_impl: str = "einsum") -> Callable:
 
 
 def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
-                        local_epochs: int) -> Callable:
+                        local_epochs: int,
+                        epoch_shuffle: bool = True) -> Callable:
     """LocalTrain (Eq. 1) for ONE node: E epochs over its batches as a
-    ``lax.scan`` over the (E·steps,) batch axis."""
+    ``lax.scan`` over the (E·steps,) batch axis.
+
+    ``epoch_shuffle=True``: the incoming batches already carry all E
+    epochs on the leading axis (each a distinct shuffle —
+    ``NodeBatcher(local_epochs=E)``) and are consumed as-is.
+    ``epoch_shuffle=False`` (legacy): one epoch of batches is tiled E
+    times, replaying the identical order every epoch.
+    """
 
     def local_train(params, opt_state, batches):
         def step(carry, batch):
@@ -159,9 +174,20 @@ def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
             p = apply_updates(p, updates)
             return (p, s), loss
 
-        # repeat the epoch's batches E times along the scan axis
-        rep = jax.tree.map(
-            lambda x: jnp.concatenate([x] * local_epochs, axis=0), batches)
+        if epoch_shuffle:
+            total = jax.tree.leaves(batches)[0].shape[0]
+            if total % local_epochs:
+                raise ValueError(
+                    f"epoch_shuffle=True expects the pipeline to supply "
+                    f"local_epochs={local_epochs} distinct epoch passes "
+                    f"(NodeBatcher(local_epochs=...)), but the {total}-step "
+                    f"batch axis is not divisible by {local_epochs}")
+            rep = batches
+        else:
+            # legacy: repeat the epoch's batches E times along the scan axis
+            rep = jax.tree.map(
+                lambda x: jnp.concatenate([x] * local_epochs, axis=0),
+                batches)
         (params, opt_state), losses = jax.lax.scan(
             step, (params, opt_state), rep)
         return params, opt_state, jnp.mean(losses)
@@ -170,11 +196,13 @@ def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
 
 
 def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
-                  mix_impl: str = "einsum") -> Callable:
+                  mix_impl: str = "einsum",
+                  epoch_shuffle: bool = True) -> Callable:
     """One full round — vmapped LocalTrain then aggregation — as a pure
     function ``(stacked_params, stacked_opt, node_batches, coeffs) →
     (mixed_params, opt, losses)``."""
-    local_train = make_local_train_fn(loss_fn, optimizer, local_epochs)
+    local_train = make_local_train_fn(loss_fn, optimizer, local_epochs,
+                                      epoch_shuffle)
     mix = make_mix_fn(mix_impl)
 
     def round_fn(stacked_params, stacked_opt, node_batches, coeffs):
@@ -183,6 +211,48 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
         return mix(params, coeffs), opt, losses
 
     return round_fn
+
+
+def make_scan_fn(round_fn: Callable, evaluate: Callable,
+                 make_batch: Optional[Callable] = None) -> Callable:
+    """Scan-over-rounds factory shared by ``DecentralizedTrainer`` (stacked
+    batches) and ``repro.core.sweep`` (per-round index gather).
+
+    ``round_fn``: :func:`make_round_fn` output; ``evaluate``:
+    ``(stacked_params, test_iid, test_ood) → (iid, ood)``;  ``make_batch``
+    maps the per-round scan slice to node batches (identity for
+    pre-stacked batches, a bank gather for the sweep engine).
+
+    Returns ``scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
+    test_ood) → (params, opt, losses, iid, ood)`` — the carry comes back
+    out so callers can chain round-chunks (chunked mode donates it back
+    in, keeping device metric accumulators bounded at one chunk).
+    ``eval_mask`` gates eval to the rounds ``eval_every`` keeps; skipped
+    rounds report zeros.
+    """
+    if make_batch is None:
+        make_batch = lambda b: b
+
+    def scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
+                test_ood):
+        n = jax.tree.leaves(params)[0].shape[0]
+
+        def body(carry, xs):
+            p, o = carry
+            bx, c, do_eval = xs
+            p, o, losses = round_fn(p, o, make_batch(bx), c)
+            iid, ood = jax.lax.cond(
+                do_eval,
+                lambda q: evaluate(q, test_iid, test_ood),
+                lambda q: (jnp.zeros((n,)), jnp.zeros((n,))),
+                p)
+            return (p, o), (losses, iid, ood)
+
+        (params, opt), (losses, iid, ood) = jax.lax.scan(
+            body, (params, opt), (batch_xs, coeffs, eval_mask))
+        return params, opt, losses, iid, ood
+
+    return scan_fn
 
 
 def eval_round_indices(rounds: int, eval_every: int) -> List[int]:
@@ -225,9 +295,11 @@ class DecentralizedTrainer:
         self.data_counts = data_counts
         self.coeffs_fn = coeffs_fn  # e.g. core.dynamic link-failure matrices
         self._round_fn = make_round_fn(
-            loss_fn, optimizer, config.local_epochs, config.mix_impl)
+            loss_fn, optimizer, config.local_epochs, config.mix_impl,
+            config.epoch_shuffle)
         self._train_round = jax.jit(self._round_fn)
         self._evaluate = jax.jit(self._evaluate_impl)
+        self._scan_fn = make_scan_fn(self._round_fn, self._evaluate_impl)
         self._run_scan = jax.jit(self._run_scan_impl)
 
     # ------------------------------------------------------------------
@@ -253,27 +325,14 @@ class DecentralizedTrainer:
 
     def _run_scan_impl(self, stacked_params, stacked_opt, batches, coeffs,
                        eval_mask, test_iid, test_ood):
-        """All R rounds as one ``lax.scan``; batches/coeffs carry a leading
-        (R,) axis; eval is folded into the scan body so metrics come back
-        stacked as (R, n).  ``eval_mask`` gates the eval forward passes to
-        the rounds the history actually keeps (``eval_every``); skipped
-        rounds report zeros and are dropped before building the history."""
-        n = jax.tree.leaves(stacked_params)[0].shape[0]
-
-        def body(carry, xs):
-            params, opt = carry
-            node_batches, c, do_eval = xs
-            params, opt, losses = self._round_fn(params, opt, node_batches, c)
-            iid, ood = jax.lax.cond(
-                do_eval,
-                lambda p: self._evaluate_impl(p, test_iid, test_ood),
-                lambda p: (jnp.zeros((n,)), jnp.zeros((n,))),
-                params)
-            return (params, opt), (losses, iid, ood)
-
-        (stacked_params, stacked_opt), (losses, iid, ood) = jax.lax.scan(
-            body, (stacked_params, stacked_opt), (batches, coeffs, eval_mask))
-        return stacked_params, stacked_opt, losses, iid, ood
+        """All R rounds as one ``lax.scan`` (:func:`make_scan_fn`);
+        batches/coeffs carry a leading (R,) axis; eval is folded into the
+        scan body so metrics come back stacked as (R, n).  ``eval_mask``
+        gates the eval forward passes to the rounds the history actually
+        keeps (``eval_every``); skipped rounds report zeros and are
+        dropped before building the history."""
+        return self._scan_fn(stacked_params, stacked_opt, batches, coeffs,
+                             eval_mask, test_iid, test_ood)
 
     # ------------------------------------------------------------------
     def run(

@@ -21,7 +21,13 @@ __all__ = [
     "propagation_summary",
     "render_propagation_map",
     "hops_from",
+    "UNREACHABLE",
 ]
+
+#: ``hops_from`` sentinel for nodes with no path from the source (e.g.
+#: components disconnected by ``core.dynamic`` link failures).  Consumers
+#: label these ``"unreachable"`` and exclude them from hop statistics.
+UNREACHABLE = -1
 
 
 def _curves(history: Sequence[RoundMetrics], which: str) -> np.ndarray:
@@ -62,9 +68,10 @@ def iid_ood_gap(history: Sequence[RoundMetrics]) -> float:
 
 
 def hops_from(adjacency: np.ndarray, source: int) -> np.ndarray:
-    """BFS hop distance of every node from the OOD source node."""
+    """BFS hop distance of every node from the OOD source node; nodes with
+    no path keep :data:`UNREACHABLE` (-1)."""
     n = adjacency.shape[0]
-    dist = np.full(n, -1, dtype=np.int64)
+    dist = np.full(n, UNREACHABLE, dtype=np.int64)
     dist[source] = 0
     frontier = [source]
     d = 0
@@ -93,12 +100,17 @@ def render_propagation_map(
     hops = hops_from(adjacency, ood_node)
     lines = [f"final {which.upper()} accuracy by hop distance from node {ood_node}:"]
     blocks = " ▁▂▃▄▅▆▇█"
-    for h in sorted(set(int(x) for x in hops)):
-        nodes = np.flatnonzero(hops == h)
-        cells = " ".join(
+
+    def cells_for(nodes):
+        return " ".join(
             f"{i}:{blocks[min(int(acc[i] * 8), 8)]}{acc[i]:.2f}" for i in nodes
         )
-        lines.append(f"  hop {h}: {cells}")
+
+    for h in sorted(set(int(x) for x in hops) - {UNREACHABLE}):
+        lines.append(f"  hop {h}: {cells_for(np.flatnonzero(hops == h))}")
+    unreachable = np.flatnonzero(hops == UNREACHABLE)
+    if unreachable.size:
+        lines.append(f"  unreachable: {cells_for(unreachable)}")
     return "\n".join(lines)
 
 
@@ -108,12 +120,19 @@ def propagation_summary(
     ood_node: int,
 ) -> Dict[str, object]:
     """Full report: AUCs, gap, and OOD accuracy binned by hop distance from
-    the OOD node (quantifies the paper's 'knowledge hops between devices')."""
+    the OOD node (quantifies the paper's 'knowledge hops between devices').
+
+    Nodes the BFS cannot reach (link-failure runs that disconnect the
+    graph) are reported under the ``"unreachable"`` key rather than a
+    bogus hop ``-1`` bin, and are excluded from the hop-distance bins."""
     ood_final = _curves(history, "ood")[-1]  # (n,)
     hops = hops_from(adjacency, ood_node)
-    by_hop = {}
-    for h in sorted(set(hops.tolist())):
+    by_hop: Dict[object, float] = {}
+    for h in sorted(set(hops.tolist()) - {UNREACHABLE}):
         by_hop[int(h)] = float(ood_final[hops == h].mean())
+    unreachable = hops == UNREACHABLE
+    if unreachable.any():
+        by_hop["unreachable"] = float(ood_final[unreachable].mean())
     return {
         **mean_auc(history),
         "iid_ood_gap_pct": iid_ood_gap(history),

@@ -37,7 +37,12 @@ __all__ = [
     "fl",
     "degree",
     "betweenness",
+    "eigenvector",
+    "pagerank",
+    "closeness",
     "metropolis_hastings",
+    "TOPOLOGY_AWARE",
+    "TOPOLOGY_UNAWARE",
     "validate_mixing_matrix",
 ]
 

@@ -29,15 +29,32 @@ Shared across experiments:
   (``NodeBatcher.all_round_indices``) — batches are a per-round gather
   inside the scan, never materialized as an ``(E, R, ...)`` tensor.
 
-``unroll_eval=True`` is the escape hatch: the same vmapped round function
-driven by the legacy per-round Python loop, preserving the incremental
-history API (one dispatch per round, metrics available as they stream).
-Both paths produce identical results — asserted in tests/test_sweep.py.
+Three execution modes of the same program family (DESIGN.md §7/§8), all
+bit-for-bit identical (tests/test_sweep.py, tests/test_sweep_sharded.py):
+
+* **scanned** (default): ``jit(vmap_E(scan_R(round)))`` on one device;
+* **sharded-scanned** (``mesh=...``): the E axis is laid across a 1-D
+  device mesh (``repro.launch.mesh.make_sweep_mesh``) with ``shard_map``
+  — E is padded to a multiple of the mesh size with dummy experiments
+  (copies of experiment 0, masked out of the returned result) and each
+  device runs the identical per-experiment program on its slice, so
+  sharding cannot change any real experiment's arithmetic;
+* **unrolled** (``unroll_eval=True``): the legacy per-round Python loop,
+  preserving the incremental history API (one dispatch per round,
+  metrics available as they stream).
+
+Orthogonally, ``chunk_rounds=c`` scans the round schedule in ``⌈R/c⌉``
+chunks: the device-resident ``(R, n, S)`` index schedule, ``(R, n, n)``
+coefficient slab, and ``(R, n)`` eval accumulators stay bounded at one
+chunk while the host concatenates per-chunk metrics — the long-run mode.
+The ``(params, opt)`` carry is donated back into each chunk (and into
+the one-shot scans) on backends that support buffer donation, so the
+scan never double-allocates the model/optimizer state.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,10 +65,33 @@ from repro.core.decentralized import (
     RoundMetrics,
     eval_round_indices,
     make_round_fn,
+    make_scan_fn,
 )
 from repro.training.optimizer import Optimizer
 
-__all__ = ["SweepEngine", "SweepResult", "gather_round_batch"]
+__all__ = ["SweepEngine", "SweepResult", "gather_round_batch",
+           "pad_experiments", "donation_supported"]
+
+
+def donation_supported() -> bool:
+    """Buffer donation is a no-op (with a warning) on CPU; only donate
+    where XLA actually reuses the buffers."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
+def pad_experiments(tree: Any, pad: int) -> Any:
+    """Grow every leaf's leading E axis by ``pad`` dummy experiments —
+    copies of experiment 0, so the padded program is numerically valid and
+    the padding rows are simply dropped from the result.  Identity when
+    ``pad == 0``."""
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [jnp.asarray(x),
+             jnp.broadcast_to(jnp.asarray(x)[:1],
+                              (pad,) + tuple(np.shape(x)[1:]))], axis=0),
+        tree)
 
 
 def gather_round_batch(bank: Dict[str, jnp.ndarray], data_idx: jnp.ndarray,
@@ -141,11 +181,14 @@ class SweepEngine:
         self.eval_fn = eval_fn
         self.config = config
         self._round_fn = make_round_fn(
-            loss_fn, optimizer, config.local_epochs, config.mix_impl)
+            loss_fn, optimizer, config.local_epochs, config.mix_impl,
+            config.epoch_shuffle)
         self._run_jit = jax.jit(
             self._run_impl, static_argnames=("batch_size",))
         self._round_jit = jax.jit(
             self._one_round_impl, static_argnames=("batch_size", "do_eval"))
+        self._chunk_jit: Optional[Callable] = None
+        self._sharded_cache: Dict[Tuple[Any, int], Callable] = {}
 
     # ------------------------------------------------------------------
     def _eval(self, stacked_params, test_iid, test_ood):
@@ -155,26 +198,15 @@ class SweepEngine:
 
     def _experiment_scan(self, bank, batch_size, eval_mask, params, opt,
                          coeffs_e, idx_e, data_idx, test_iid, test_ood):
-        """All R rounds of ONE experiment (vmapped over E by the callers).
-        ``eval_mask`` gates eval to the rounds ``eval_every`` keeps;
-        skipped rounds report zeros."""
-        n = jax.tree.leaves(params)[0].shape[0]
-
-        def body(carry, xs):
-            p, o = carry
-            idx_r, c_r, do_eval = xs
-            batch = gather_round_batch(bank, data_idx, idx_r, batch_size)
-            p, o, losses = self._round_fn(p, o, batch, c_r)
-            iid, ood = jax.lax.cond(
-                do_eval,
-                lambda q: self._eval(q, test_iid, test_ood),
-                lambda q: (jnp.zeros((n,)), jnp.zeros((n,))),
-                p)
-            return (p, o), (losses, iid, ood)
-
-        (params, opt), (losses, iid, ood) = jax.lax.scan(
-            body, (params, opt), (idx_e, coeffs_e, eval_mask))
-        return params, losses, iid, ood
+        """All R rounds of ONE experiment (vmapped over E by the callers):
+        :func:`repro.core.decentralized.make_scan_fn` with the per-round
+        batch realized as an in-scan gather from the shared bank."""
+        scan_fn = make_scan_fn(
+            self._round_fn, self._eval,
+            make_batch=lambda ix: gather_round_batch(
+                bank, data_idx, ix, batch_size))
+        return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
+                       test_iid, test_ood)
 
     def _run_impl(self, params0, opt0, coeffs, indices, data_idx, eval_mask,
                   bank, test_iid, test_ood, *, batch_size):
@@ -199,6 +231,105 @@ class SweepEngine:
             params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood)
 
     # ------------------------------------------------------------------
+    # sharded / chunked mode
+    # ------------------------------------------------------------------
+    def _make_sharded_fn(self, mesh, batch_size: int) -> Callable:
+        """``jit(shard_map(vmap_E(scan_R(...))))`` over the mesh's single
+        experiment axis.  Per-experiment inputs/outputs shard on E; the
+        sample bank and eval mask are replicated (every experiment reads
+        the full bank).  The (params, opt) carry is donated where the
+        backend supports it."""
+        key = (mesh, batch_size)
+        if key in self._sharded_cache:
+            return self._sharded_cache[key]
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.gossip import compat_shard_map
+
+        exp, rep = P(mesh.axis_names[0]), P()
+
+        def body(params, opt, coeffs, idx, data_idx, eval_mask, bank,
+                 test_iid, test_ood):
+            return self._run_impl(params, opt, coeffs, idx, data_idx,
+                                  eval_mask, bank, test_iid, test_ood,
+                                  batch_size=batch_size)
+
+        mapped = compat_shard_map(
+            body, mesh,
+            in_specs=(exp, exp, exp, exp, exp, rep, rep, exp, exp),
+            out_specs=(exp, exp, exp, exp, exp))
+        fn = jax.jit(
+            mapped,
+            donate_argnums=(0, 1) if donation_supported() else ())
+        self._sharded_cache[key] = fn
+        return fn
+
+    def _make_chunk_fn(self, batch_size: int) -> Callable:
+        """Single-device chunk step: the scanned program with a donated
+        (params, opt) carry, re-dispatched per round-chunk."""
+        if self._chunk_jit is None:
+            self._chunk_jit = jax.jit(
+                self._run_impl, static_argnames=("batch_size",),
+                donate_argnums=(0, 1) if donation_supported() else ())
+        return lambda *args: self._chunk_jit(*args, batch_size=batch_size)
+
+    def _run_sharded(self, params0, opt0, coeffs, idx, data_idx, eval_mask,
+                     bank, test_iid, test_ood, batch_size, mesh,
+                     chunk_rounds: Optional[int]) -> SweepResult:
+        """Sharded and/or chunked execution.  Bit-identical to the scanned
+        path: padding rows are dropped, each chunk resumes the exact scan
+        carry, and per-shard programs are the same per-experiment math."""
+        n_exp, rounds = coeffs.shape[:2]
+        test_iid = jax.tree.map(jnp.asarray, test_iid)
+        test_ood = jax.tree.map(jnp.asarray, test_ood)
+
+        if mesh is not None:
+            n_dev = int(np.prod(list(mesh.shape.values())))
+            pad = (-n_exp) % n_dev
+            params0, opt0, coeffs, idx, data_idx, test_iid, test_ood = (
+                pad_experiments(t, pad)
+                for t in (params0, opt0, coeffs, idx, data_idx,
+                          test_iid, test_ood))
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            exp_sh = NamedSharding(mesh, P(mesh.axis_names[0]))
+            rep_sh = NamedSharding(mesh, P())
+            put = lambda t, s: jax.tree.map(
+                lambda x: jax.device_put(jnp.asarray(x), s), t)
+            # device_put materializes fresh buffers laid out on the mesh,
+            # so donating the carry never invalidates caller arrays.
+            params0, opt0, coeffs, idx, data_idx, test_iid, test_ood = (
+                put(t, exp_sh)
+                for t in (params0, opt0, coeffs, idx, data_idx,
+                          test_iid, test_ood))
+            bank = put(bank, rep_sh)
+            fn = self._make_sharded_fn(mesh, batch_size)
+        else:
+            if donation_supported():
+                # chunk 0 would donate the caller's params0 — copy once
+                params0 = jax.tree.map(
+                    lambda x: jnp.asarray(x).copy(), params0)
+            fn = self._make_chunk_fn(batch_size)
+
+        chunk = chunk_rounds or rounds
+        params, opt = params0, opt0
+        losses, iids, oods = [], [], []
+        for a in range(0, rounds, chunk):
+            b = min(a + chunk, rounds)
+            params, opt, l_c, iid_c, ood_c = fn(
+                params, opt, coeffs[:, a:b], idx[:, a:b], data_idx,
+                jnp.asarray(eval_mask[a:b]), bank, test_iid, test_ood)
+            losses.append(np.asarray(l_c))
+            iids.append(np.asarray(iid_c))
+            oods.append(np.asarray(ood_c))
+
+        out_params = jax.tree.map(lambda x: x[:n_exp], params)
+        cat = lambda xs: np.concatenate(xs, axis=1)[:n_exp]
+        return SweepResult(
+            train_loss=cat(losses), iid_acc=cat(iids), ood_acc=cat(oods),
+            params=out_params, eval_every=self.config.eval_every)
+
+    # ------------------------------------------------------------------
     def run(
         self,
         params0,                      # pytree, leaves (E, n, ...)
@@ -210,9 +341,14 @@ class SweepEngine:
         test_ood,
         batch_size: int,
         unroll_eval: Optional[bool] = None,
+        mesh=None,                    # 1-D jax Mesh → shard the E axis
+        chunk_rounds: Optional[int] = None,  # scan R in ⌈R/c⌉ chunks
     ) -> SweepResult:
         """Run the whole grid.  ``unroll_eval`` overrides the config flag
-        (None → use ``config.unroll_eval``)."""
+        (None → use ``config.unroll_eval``).  ``mesh`` (from
+        ``repro.launch.mesh.make_sweep_mesh``) shards the experiment axis
+        across devices; ``chunk_rounds`` bounds device memory for long
+        schedules.  All modes are bit-identical."""
         coeffs = jnp.asarray(coeffs, jnp.float32)
         data_idx = jnp.asarray(data_idx, jnp.int32)
         # (E, R, n, S): per-experiment index schedule, pre-gathered host-side
@@ -227,11 +363,20 @@ class SweepEngine:
         unroll = (self.config.unroll_eval if unroll_eval is None
                   else unroll_eval)
         if unroll:
+            if mesh is not None or chunk_rounds:
+                raise ValueError(
+                    "mesh/chunk_rounds are scanned-mode options; they "
+                    "cannot combine with unroll_eval=True")
             return self._run_unrolled(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size)
 
-        params, losses, iid, ood = self._run_jit(
+        if mesh is not None or chunk_rounds:
+            return self._run_sharded(
+                params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
+                test_iid, test_ood, batch_size, mesh, chunk_rounds)
+
+        params, _, losses, iid, ood = self._run_jit(
             params0, opt0, coeffs, idx, data_idx, jnp.asarray(eval_mask),
             bank, test_iid, test_ood, batch_size=batch_size)
         return SweepResult(

@@ -23,10 +23,19 @@ __all__ = ["NodeBatcher", "make_test_batch", "lm_token_stream"]
 
 
 class NodeBatcher:
-    """Yields per-round stacked batches for the decentralized trainer."""
+    """Yields per-round stacked batches for the decentralized trainer.
+
+    ``local_epochs > 1`` makes each round's schedule carry E *distinct*
+    epoch passes (leaves ``(n, E·steps, batch, ...)``): the epoch index is
+    mixed into the shuffle seed, so LocalTrain (Eq. 1) sees a fresh batch
+    order per epoch instead of replaying one order E times (pair with
+    ``DecentralizedConfig(epoch_shuffle=True)``).  Epoch 0 reproduces the
+    legacy ``local_epochs=1`` schedule exactly.
+    """
 
     def __init__(self, node_data: List[Dataset], batch_size: int,
-                 steps_per_epoch: int = 0, seed: int = 0):
+                 steps_per_epoch: int = 0, seed: int = 0,
+                 local_epochs: int = 1):
         self.node_data = node_data
         self.batch_size = batch_size
         self.kind = node_data[0].kind
@@ -38,27 +47,38 @@ class NodeBatcher:
             steps_per_epoch = max(1, med // batch_size)
         self.steps = steps_per_epoch
         self.seed = seed
+        self.local_epochs = max(1, local_epochs)
 
     def data_counts(self) -> np.ndarray:
         return np.array([len(d) for d in self.node_data], dtype=np.float64)
 
+    @staticmethod
+    def _epoch_indices(rng: np.random.Generator, n_samples: int,
+                       need: int) -> np.ndarray:
+        """One epoch's sample order; small nodes wrap around with a FRESH
+        permutation per cycle (not a repeat of the first — a node with few
+        samples must not see them in identical order within a round)."""
+        idx = rng.permutation(n_samples)
+        while len(idx) < need:
+            idx = np.concatenate([idx, rng.permutation(n_samples)])
+        return idx[:need]
+
     def round_indices(self, round_idx: int) -> np.ndarray:
-        """(n_nodes, steps·batch) per-node sample indices for one round —
-        the *data* representation of this round's shuffle, consumed either
-        by :meth:`round_batches` (host-side gather) or by the sweep
-        engine's in-scan gather against :meth:`sample_bank`."""
+        """(n_nodes, local_epochs·steps·batch) per-node sample indices for
+        one round — the *data* representation of this round's shuffle,
+        consumed either by :meth:`round_batches` (host-side gather) or by
+        the sweep engine's in-scan gather against :meth:`sample_bank`.
+        Each epoch segment is an independent draw (epoch mixed into the
+        seed); epoch 0 matches the legacy single-epoch schedule."""
         need = self.steps * self.batch_size
-        out = np.empty((self.n_nodes, need), dtype=np.int64)
+        out = np.empty((self.n_nodes, self.local_epochs * need),
+                       dtype=np.int64)
         for node, ds in enumerate(self.node_data):
-            rng = np.random.default_rng(
-                (self.seed * 1_000_003 + round_idx) * 131 + node
-            )
-            idx = rng.permutation(len(ds))
-            if len(idx) < need:  # wraparound for small nodes
-                idx = np.concatenate(
-                    [idx] * (need // len(idx) + 1)
-                )[:need]
-            out[node] = idx[:need]
+            base = (self.seed * 1_000_003 + round_idx) * 131 + node
+            for epoch in range(self.local_epochs):
+                rng = np.random.default_rng(base + epoch * 16_777_619)
+                out[node, epoch * need:(epoch + 1) * need] = \
+                    self._epoch_indices(rng, len(ds), need)
         return out
 
     def all_round_indices(self, rounds: int) -> np.ndarray:
@@ -89,18 +109,19 @@ class NodeBatcher:
         }
 
     def round_batches(self, round_idx: int) -> Dict[str, np.ndarray]:
-        """→ leaves (n_nodes, steps, batch, ...)."""
+        """→ leaves (n_nodes, local_epochs·steps, batch, ...)."""
         indices = self.round_indices(round_idx)
+        total = self.local_epochs * self.steps
         xs, ys = [], []
         for node, ds in enumerate(self.node_data):
             idx = indices[node]
-            xs.append(ds.x[idx].reshape((self.steps, self.batch_size) + ds.x.shape[1:]))
-            ys.append(ds.y[idx].reshape(self.steps, self.batch_size))
+            xs.append(ds.x[idx].reshape((total, self.batch_size) + ds.x.shape[1:]))
+            ys.append(ds.y[idx].reshape(total, self.batch_size))
         if self.kind == "lm":
             return {
                 "tokens": np.stack(xs).astype(np.int32),
                 "mask": np.ones(
-                    (self.n_nodes, self.steps, self.batch_size, xs[0].shape[-1] - 1),
+                    (self.n_nodes, total, self.batch_size, xs[0].shape[-1] - 1),
                     np.float32,
                 ),
             }

@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 
 __all__ = ["compat_make_mesh", "make_production_mesh", "make_training_mesh",
-           "POD_DATA", "POD_MODEL"]
+           "make_sweep_mesh", "POD_DATA", "POD_MODEL"]
 
 POD_DATA = 16
 POD_MODEL = 16
@@ -47,6 +47,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, POD_DATA, POD_MODEL) if multi_pod else (POD_DATA, POD_MODEL)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _mesh(shape, axes)
+
+
+def make_sweep_mesh(n_devices: Optional[int] = None,
+                    axis_name: str = "exp"):
+    """1-D mesh over the sweep engine's experiment axis (DESIGN.md §8).
+
+    ``SweepEngine.run(mesh=make_sweep_mesh())`` lays the E experiment axis
+    across all local devices (or the first ``n_devices``).  Testable on
+    CPU by launching with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = n_devices or len(jax.devices())
+    return _mesh((n,), (axis_name,))
 
 
 def make_training_mesh(n_nodes: int = 16, *, tp: int = POD_MODEL,

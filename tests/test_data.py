@@ -129,6 +129,38 @@ class TestBatcher:
         b1 = nb.round_batches(1)
         assert not np.array_equal(b0["x"], b1["x"])
 
+    def test_wraparound_draws_fresh_permutation_per_cycle(self):
+        """A node with fewer samples than a round needs must not replay
+        the identical order every wrap cycle."""
+        ds = make_dataset("mnist", 600, seed=0)
+        small = ds.subset(np.arange(10))
+        nb = NodeBatcher([small, ds], batch_size=10, steps_per_epoch=3)
+        idx = nb.round_indices(0)[0]           # needs 30 from 10 samples
+        cycles = idx.reshape(3, 10)
+        # each wrap cycle is a full permutation of the 10 samples...
+        for c in cycles:
+            assert sorted(c.tolist()) == list(range(10))
+        # ...and at least one differs in order from the first
+        assert any(not np.array_equal(cycles[0], c) for c in cycles[1:])
+
+    def test_local_epochs_distinct_and_legacy_prefix(self):
+        """local_epochs=E yields E distinct epoch segments; epoch 0
+        reproduces the legacy (local_epochs=1) schedule exactly."""
+        ds = make_dataset("mnist", 600, seed=0)
+        parts = dirichlet_split(ds, 4, seed=0)
+        nb1 = NodeBatcher(parts, batch_size=16, steps_per_epoch=3, seed=7)
+        nb3 = NodeBatcher(parts, batch_size=16, steps_per_epoch=3, seed=7,
+                          local_epochs=3)
+        need = 3 * 16
+        idx3 = nb3.round_indices(2)
+        assert idx3.shape == (4, 3 * need)
+        np.testing.assert_array_equal(idx3[:, :need], nb1.round_indices(2))
+        epochs = idx3.reshape(4, 3, need)
+        assert not np.array_equal(epochs[:, 0], epochs[:, 1])
+        assert not np.array_equal(epochs[:, 1], epochs[:, 2])
+        b = nb3.round_batches(0)
+        assert b["x"].shape[:3] == (4, 9, 16)
+
 
 @given(n_nodes=st.integers(2, 12), alpha=st.floats(0.5, 1000),
        seed=st.integers(0, 5))

@@ -35,7 +35,9 @@ def setting():
     test = make_dataset("mnist", 500, seed=123)
     ood_node = topo.kth_highest_degree_node(1)
     parts = node_datasets(train, N, ood_node=ood_node, q=0.10, seed=0)
-    nb = NodeBatcher(parts, batch_size=32, steps_per_epoch=8)
+    # local_epochs matches the trainer config: each round carries 3
+    # distinct epoch passes (DecentralizedConfig.epoch_shuffle default)
+    nb = NodeBatcher(parts, batch_size=32, steps_per_epoch=8, local_epochs=3)
     tb = jax.tree.map(jnp.asarray, make_test_batch(test, 200))
     ob = jax.tree.map(jnp.asarray,
                       make_test_batch(backdoored_testset(test), 200))
@@ -89,6 +91,44 @@ def test_hops_bfs():
     topo = fully_connected(5)
     d = hops_from(topo.adjacency, 2)
     assert d[2] == 0 and (np.delete(d, 2) == 1).all()
+
+
+def _disconnected_history(n=4):
+    """Two 2-node components + a fake single-round history."""
+    from repro.core.decentralized import RoundMetrics
+
+    adj = np.zeros((n, n))
+    adj[0, 1] = adj[1, 0] = 1
+    adj[2, 3] = adj[3, 2] = 1
+    acc = np.linspace(0.1, 0.9, n)
+    hist = [RoundMetrics(round=0, iid_acc=acc, ood_acc=acc,
+                         train_loss=np.zeros(n))]
+    return adj, hist, acc
+
+
+def test_propagation_summary_labels_unreachable_nodes():
+    """Link-failure runs can disconnect the graph: unreachable nodes get
+    their own labeled bin, never a bogus hop -1, and stay out of the
+    hop-distance means."""
+    from repro.core.propagation import UNREACHABLE
+
+    adj, hist, acc = _disconnected_history()
+    s = propagation_summary(hist, adj, ood_node=0)
+    by_hop = s["final_ood_acc_by_hop"]
+    assert UNREACHABLE not in by_hop and -1 not in by_hop
+    assert set(by_hop) == {0, 1, "unreachable"}
+    np.testing.assert_allclose(by_hop["unreachable"], acc[2:].mean())
+    np.testing.assert_allclose(by_hop[0], acc[0])
+    np.testing.assert_allclose(by_hop[1], acc[1])
+
+
+def test_render_propagation_map_labels_unreachable_nodes():
+    from repro.core.propagation import render_propagation_map
+
+    adj, hist, _ = _disconnected_history()
+    txt = render_propagation_map(hist, adj, ood_node=0)
+    assert "unreachable:" in txt
+    assert "hop -1" not in txt
 
 
 def test_unstack_roundtrip():

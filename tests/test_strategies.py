@@ -2,6 +2,7 @@ import numpy as np
 import pytest
 from tests._hypothesis import given, settings, st  # optional dep; skips if absent
 
+import repro.core.strategies as strategies_mod
 from repro.core.strategies import (
     STRATEGIES,
     AggregationStrategy,
@@ -16,6 +17,17 @@ ALL_KINDS = ["unweighted", "weighted", "random", "fl", "degree", "betweenness",
 
 def _counts(n, seed=0):
     return np.random.default_rng(seed).integers(10, 100, n).astype(float)
+
+
+def test_all_exports_cover_every_registered_strategy():
+    """Every function registered in STRATEGIES must be exported via
+    __all__ (eigenvector/pagerank/closeness were once registered but
+    unexported)."""
+    exported = set(strategies_mod.__all__)
+    for kind, fn in STRATEGIES.items():
+        assert fn.__name__ in exported, (
+            f"strategy {kind!r} ({fn.__name__}) missing from __all__")
+        assert getattr(strategies_mod, fn.__name__) is fn
 
 
 @pytest.mark.parametrize("kind", ALL_KINDS)

@@ -26,7 +26,10 @@ from repro.data.synthetic import make_dataset
 from repro.training.optimizer import sgd
 
 N, ROUNDS = 4, 5
-CFG = DecentralizedConfig(rounds=ROUNDS, local_epochs=2, eval_every=2)
+# epoch_shuffle=False: these equivalence tests drive hand-built one-epoch
+# batch stacks, i.e. the legacy replay-E-times behavior the flag preserves.
+CFG = DecentralizedConfig(rounds=ROUNDS, local_epochs=2, eval_every=2,
+                          epoch_shuffle=False)
 
 
 # ----------------------------------------------------------------------
@@ -234,6 +237,130 @@ def test_sweep_grid_matches_legacy_per_experiment(mnist_setting):
             jax.tree.map(jnp.asarray, tb), jax.tree.map(jnp.asarray, ob))
         _assert_hist_equal(hist, res.history(e))
         _assert_trees_equal(fp, res.experiment_params(e))
+
+
+# ----------------------------------------------------------------------
+# chunked-rounds + (single-device) sharded modes == scanned, bit-for-bit
+# ----------------------------------------------------------------------
+def _mnist_grid(mnist_setting, cfg):
+    """Assemble the 4-cell grid of test_sweep_grid... as engine inputs."""
+    loss_fn, acc_fn, init, configs = mnist_setting
+    topo = ring(N)
+    cells = [("unweighted", 0), ("random", 0), ("degree", 1), ("fl", 1)]
+    seeds = sorted(configs)
+    raw = [configs[s][0].sample_bank() for s in seeds]
+    cap = max(b["x"].shape[1] for b in raw)
+    pad = lambda a: np.pad(
+        a, [(0, 0), (0, cap - a.shape[1])] + [(0, 0)] * (a.ndim - 2))
+    bank = {k: np.stack([pad(b[k]) for b in raw]) for k in raw[0]}
+    indices = np.stack(
+        [configs[s][0].all_round_indices(cfg.rounds) for s in seeds])
+    data_idx = np.array([seeds.index(s) for _, s in cells])
+    coeffs = np.stack([
+        coeffs_stack(topo, AggregationStrategy(k, seed=s), cfg.rounds,
+                     configs[s][0].data_counts())
+        for k, s in cells])
+    params0 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[stack_params([init(jax.random.key(s))] * N) for _, s in cells])
+    stack_tests = lambda which: {
+        k: jnp.stack([jnp.asarray(configs[s][which][k]) for _, s in cells])
+        for k in configs[0][which]}
+    engine = SweepEngine(sgd(1e-2), loss_fn, acc_fn, cfg)
+    args = (params0, coeffs, bank, indices, data_idx,
+            stack_tests(1), stack_tests(2))
+    return engine, args
+
+
+def _assert_results_equal(a, b):
+    np.testing.assert_array_equal(a.train_loss, b.train_loss)
+    np.testing.assert_array_equal(a.iid_acc, b.iid_acc)
+    np.testing.assert_array_equal(a.ood_acc, b.ood_acc)
+    _assert_trees_equal(a.params, b.params)
+
+
+def test_chunked_rounds_matches_scanned_bitexact(mnist_setting):
+    """chunk_rounds=2 over R=3 (a full chunk + a remainder chunk) resumes
+    the exact scan carry — metrics and params bit-identical."""
+    cfg = DecentralizedConfig(rounds=3, local_epochs=1, eval_every=2)
+    engine, args = _mnist_grid(mnist_setting, cfg)
+    res = engine.run(*args, batch_size=8)
+    res_chunked = engine.run(*args, batch_size=8, chunk_rounds=2)
+    _assert_results_equal(res_chunked, res)
+
+
+def test_sharded_single_device_mesh_matches_scanned(mnist_setting):
+    """mesh=make_sweep_mesh(1) exercises the full shard_map machinery on
+    the 1 CPU device the main pytest process sees (the 8-device version
+    lives in tests/test_sweep_sharded.py, subprocess)."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    cfg = DecentralizedConfig(rounds=3, local_epochs=1, eval_every=2)
+    engine, args = _mnist_grid(mnist_setting, cfg)
+    res = engine.run(*args, batch_size=8)
+    res_sharded = engine.run(*args, batch_size=8, mesh=make_sweep_mesh(1))
+    _assert_results_equal(res_sharded, res)
+    res_both = engine.run(*args, batch_size=8, mesh=make_sweep_mesh(1),
+                          chunk_rounds=2)
+    _assert_results_equal(res_both, res)
+
+
+def test_unroll_rejects_shard_and_chunk(mnist_setting):
+    from repro.launch.mesh import make_sweep_mesh
+
+    cfg = DecentralizedConfig(rounds=3, local_epochs=1, eval_every=2)
+    engine, args = _mnist_grid(mnist_setting, cfg)
+    with pytest.raises(ValueError):
+        engine.run(*args, batch_size=8, unroll_eval=True, chunk_rounds=2)
+    with pytest.raises(ValueError):
+        engine.run(*args, batch_size=8, unroll_eval=True,
+                   mesh=make_sweep_mesh(1))
+
+
+def test_epoch_shuffle_distinct_passes():
+    """epoch_shuffle=True + NodeBatcher(local_epochs=E) trains on E
+    *different* batch orders; the legacy flag replays one order E times —
+    the two runs genuinely diverge."""
+    train = make_dataset("mnist", 400, seed=0)
+    parts = node_datasets(train, N, ood_node=0, q=0.10, seed=0)
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
+
+    tb = make_test_batch(make_dataset("mnist", 80, seed=9), 32)
+    run = lambda nb, cfg: DecentralizedTrainer(
+        ring(N), AggregationStrategy("unweighted"), sgd(1e-2),
+        classifier_loss(ffn_apply), classifier_accuracy(ffn_apply),
+        cfg).run(
+            stack_params([ffn_init(jax.random.key(0))] * N),
+            lambda r: jax.tree.map(jnp.asarray, nb.round_batches(r)),
+            jax.tree.map(jnp.asarray, tb), jax.tree.map(jnp.asarray, tb))
+
+    nb_e = NodeBatcher(parts, batch_size=8, steps_per_epoch=2, seed=0,
+                       local_epochs=2)
+    cfg_e = DecentralizedConfig(rounds=2, local_epochs=2, eval_every=1)
+    p_shuf, _ = run(nb_e, cfg_e)
+
+    nb_l = NodeBatcher(parts, batch_size=8, steps_per_epoch=2, seed=0)
+    cfg_l = dataclasses.replace(cfg_e, epoch_shuffle=False)
+    p_legacy, _ = run(nb_l, cfg_l)
+
+    leaves = zip(jax.tree.leaves(p_shuf), jax.tree.leaves(p_legacy))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in leaves)
+
+
+def test_epoch_shuffle_rejects_indivisible_batch_axis():
+    """A 3-step batch axis cannot be local_epochs=2 distinct passes."""
+    from repro.core.decentralized import make_local_train_fn
+
+    fn = make_local_train_fn(_loss_fn, sgd(1e-2), local_epochs=2,
+                             epoch_shuffle=True)
+    params = _mlp_init(0)
+    opt = sgd(1e-2).init(params)
+    batches = _mlp_batches_fn(0)
+    one_node = jax.tree.map(lambda x: x[0], batches)  # (3, 8, ...)
+    with pytest.raises(ValueError, match="not divisible"):
+        fn(params, opt, one_node)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,99 @@
+"""Device-sharded sweep engine vs scanned vs unrolled, on 8 forced CPU
+devices — the three execution modes must produce bit-identical results
+(DESIGN.md §8), including eval_every > 1, mix_impl="pallas", a
+link-failure coeffs stack, chunked rounds, and E-to-mesh padding (E=3
+experiments over 8 devices).
+
+Runs in a subprocess because XLA_FLAGS must be set before jax initializes
+(the main pytest process must keep seeing 1 device — the device-count
+override is never global; see conftest.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8, jax.devices()
+
+    from repro.core.decentralized import (
+        DecentralizedConfig, coeffs_stack, stack_params)
+    from repro.core.dynamic import link_failure_schedule
+    from repro.core.strategies import AggregationStrategy
+    from repro.core.sweep import SweepEngine
+    from repro.core.topology import ring
+    from repro.data.backdoor import backdoored_testset
+    from repro.data.distribution import node_datasets
+    from repro.data.pipeline import NodeBatcher, make_test_batch
+    from repro.data.synthetic import make_dataset
+    from repro.launch.mesh import make_sweep_mesh
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
+    from repro.training.optimizer import sgd
+
+    N = 4
+    train = make_dataset("mnist", 400, seed=0)
+    test = make_dataset("mnist", 100, seed=9)
+    loss_fn = classifier_loss(ffn_apply)
+    acc_fn = classifier_accuracy(ffn_apply)
+    cfg = DecentralizedConfig(rounds=4, local_epochs=2, eval_every=2)
+    topo = ring(N)
+    parts = node_datasets(train, N, ood_node=0, q=0.10, seed=0)
+    nb = NodeBatcher(parts, batch_size=8, steps_per_epoch=2, seed=0,
+                     local_epochs=2)
+    tb = make_test_batch(test, 32, seed=0)
+    ob = make_test_batch(backdoored_testset(test, seed=0), 32, seed=0)
+
+    kinds = ["unweighted", "random", "degree"]   # E=3 → pads to 8 devices
+    bank = {k: v[None] for k, v in nb.sample_bank().items()}
+    indices = nb.all_round_indices(cfg.rounds)[None]
+    data_idx = np.zeros(len(kinds), np.int32)
+    coeffs = np.stack([
+        coeffs_stack(topo, AggregationStrategy(k, seed=0), cfg.rounds,
+                     nb.data_counts())
+        for k in kinds])
+    # experiment 2 runs a core.dynamic link-failure schedule instead
+    coeffs[2] = link_failure_schedule(
+        topo, AggregationStrategy("degree", tau=0.1, seed=1), cfg.rounds,
+        p_fail=0.5)
+    params0 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[stack_params([ffn_init(jax.random.key(0))] * N)] * len(kinds))
+    st = lambda t: {k: jnp.stack([jnp.asarray(t[k])] * len(kinds))
+                    for k in t}
+    mesh = make_sweep_mesh()   # all 8 virtual devices
+
+    def check(r, ref, label):
+        np.testing.assert_array_equal(r.train_loss, ref.train_loss)
+        np.testing.assert_array_equal(r.iid_acc, ref.iid_acc)
+        np.testing.assert_array_equal(r.ood_acc, ref.ood_acc)
+        for a, b in zip(jax.tree.leaves(r.params),
+                        jax.tree.leaves(ref.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print(label, "ok")
+
+    for impl in ("einsum", "pallas"):
+        c = dataclasses.replace(cfg, mix_impl=impl)
+        engine = SweepEngine(sgd(1e-2), loss_fn, acc_fn, c)
+        run = lambda **kw: engine.run(
+            params0, coeffs, bank, indices, data_idx, st(tb), st(ob),
+            batch_size=8, **kw)
+        ref = run()
+        check(run(unroll_eval=True), ref, impl + "/unrolled")
+        check(run(mesh=mesh), ref, impl + "/sharded")
+        check(run(mesh=mesh, chunk_rounds=3), ref, impl + "/sharded+chunk")
+    print("SHARDED_SWEEP_OK")
+""")
+
+
+def test_sharded_sweep_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SHARDED_SWEEP_OK" in out.stdout, (out.stdout[-2000:],
+                                              out.stderr[-3000:])
