@@ -7,9 +7,13 @@
 2. **τ sensitivity** — the paper fixes τ=0.1; we sweep τ to characterize
    the sharpness/robustness trade-off (τ→0: winner-take-all erases the
    source's own knowledge; τ→∞: converges to unweighted).
-3. **Link-failure robustness** — static-topology strategies under i.i.d.
-   per-round edge dropout (`repro.core.dynamic`), the unstable-WAN regime
-   the paper motivates but does not measure.
+3. **Link-failure robustness** — strategies under i.i.d. per-round edge
+   dropout, the unstable-WAN regime the paper motivates but does not
+   measure.  Runs IN-SCAN by default: device-side coefficient programs
+   (`repro.core.coeffs`, DESIGN.md §9) regenerate the edge mask each
+   round and — reactive mode — recompute centralities on the surviving
+   subgraph inside the sweep engine's scan; the legacy host loop stays
+   behind ``in_scan=False`` as the equivalence baseline.
 """
 from __future__ import annotations
 
@@ -56,15 +60,44 @@ def run_tau_sweep(dataset="mnist", taus=(0.01, 0.05, 0.1, 0.5, 2.0),
 
 def run_link_failure(dataset="mnist", p_fails=(0.0, 0.3, 0.6),
                      strategies=("unweighted", "degree"), seeds=(0,),
-                     scale=QUICK, log=print):
-    """Per-round i.i.d. edge dropout; nominal-centrality coefficients
-    renormalized over surviving links."""
+                     scale=QUICK, log=print, n_nodes=16, reactive=True,
+                     in_scan=True):
+    """Per-round i.i.d. edge dropout.
+
+    Default path: IN-SCAN — each cell's coefficient program
+    (``repro.core.coeffs``) regenerates the Bernoulli edge mask and
+    (``reactive=True``) recomputes centralities on the surviving subgraph
+    inside the sweep engine's round scan, so the whole grid is one
+    compiled program and no ``(E, R, n, n)`` stack ever materializes.
+
+    ``in_scan=False`` keeps the legacy host loop: a per-round
+    ``DecentralizedTrainer`` consuming the SAME programs' matrices
+    materialized host-side — bit-identical metrics to the in-scan path
+    (asserted in tests/test_sweep_programs.py), kept as the equivalence
+    baseline.
+    """
+    if in_scan:
+        from benchmarks.common import linkfail_cells, run_sweep_cells
+
+        cells = linkfail_cells(
+            datasets=(dataset,), seeds=seeds, n_nodes=n_nodes,
+            strategies=strategies, p_fails=p_fails, reactive=reactive,
+            prefix="ablation/linkfail")
+        rows = run_sweep_cells(cells, scale=scale, coeff_mode="program")
+        for row, cell in zip(rows, cells):
+            row.update(p_fail=cell.p_fail, reactive=cell.reactive)
+            log(csv_row(cell.name, 0,
+                        f"iid_auc={row['iid_auc']:.3f};"
+                        f"ood_auc={row['ood_auc']:.3f}"))
+        return rows
+
+    # legacy host loop (equivalence baseline)
+    from repro.core.coeffs import program_for
     from repro.core.decentralized import (
         DecentralizedConfig,
         DecentralizedTrainer,
         stack_params,
     )
-    from repro.core.dynamic import dynamic_mixing_matrix
     from repro.core.propagation import propagation_summary
     from repro.core.strategies import AggregationStrategy
     from repro.data.backdoor import backdoored_testset
@@ -81,23 +114,28 @@ def run_link_failure(dataset="mnist", p_fails=(0.0, 0.3, 0.6),
 
     rows = []
     for seed in seeds:
-        topo = barabasi_albert(16, 2, seed=seed)
+        topo = barabasi_albert(n_nodes, 2, seed=seed)
         ood_node = topo.kth_highest_degree_node(1)
         train = make_dataset(dataset, scale.n_train, seed=seed)
         test = make_dataset(dataset, scale.n_test, seed=seed + 9999)
-        parts = node_datasets(train, 16, ood_node=ood_node, q=0.10, seed=seed)
+        parts = node_datasets(train, n_nodes, ood_node=ood_node, q=0.10,
+                              seed=seed)
         nb = NodeBatcher(parts, batch_size=scale.batch,
                          steps_per_epoch=scale.steps_per_epoch, seed=seed,
                          local_epochs=scale.local_epochs)
-        tb = jax.tree.map(jnp.asarray, make_test_batch(test, scale.eval_n))
+        tb = jax.tree.map(jnp.asarray,
+                          make_test_batch(test, scale.eval_n, seed=seed))
         ob = jax.tree.map(jnp.asarray,
-                          make_test_batch(backdoored_testset(test), scale.eval_n))
+                          make_test_batch(backdoored_testset(test, seed=seed),
+                                          scale.eval_n, seed=seed))
         for strat in strategies:
             for pf in p_fails:
                 sobj = AggregationStrategy(strat, tau=0.1, seed=seed)
-                coeffs_fn = (None if pf == 0.0 else (
-                    lambda r, s=sobj, t=topo, p=pf, dc=nb.data_counts():
-                    dynamic_mixing_matrix(t, s, r, p, data_counts=dc)))
+                program, state = program_for(
+                    topo, sobj, data_counts=nb.data_counts(),
+                    p_fail=pf, reactive=reactive)
+                coeffs_fn = lambda r, p=program, s=state: p.materialize(
+                    s, round_indices=np.array([r]))[0]
                 trainer = DecentralizedTrainer(
                     topo, sobj, sgd(1e-2),
                     classifier_loss(ffn_apply), classifier_accuracy(ffn_apply),
@@ -105,13 +143,15 @@ def run_link_failure(dataset="mnist", p_fails=(0.0, 0.3, 0.6),
                                         local_epochs=scale.local_epochs,
                                         eval_every=scale.eval_every),
                     data_counts=nb.data_counts(), coeffs_fn=coeffs_fn)
-                params = stack_params([ffn_init(jax.random.key(seed))] * 16)
+                params = stack_params(
+                    [ffn_init(jax.random.key(seed))] * n_nodes)
                 _, hist = trainer.run(
                     params,
                     lambda r: jax.tree.map(jnp.asarray, nb.round_batches(r)),
                     tb, ob)
                 s = propagation_summary(hist, topo.adjacency, ood_node)
-                s.update(strategy=strat, p_fail=pf, seed=seed)
+                s.update(strategy=strat, p_fail=pf, seed=seed,
+                         reactive=reactive)
                 log(csv_row(f"ablation/linkfail/{strat}/p{pf}", 0,
                             f"iid_auc={s['iid_auc']:.3f};ood_auc={s['ood_auc']:.3f}"))
                 rows.append(s)

@@ -23,6 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.coeffs import (
+    PROGRAM_KINDS,
+    ProgramCoeffs,
+    program_for,
+    stack_states,
+)
 from repro.core.decentralized import (
     DecentralizedConfig,
     DecentralizedTrainer,
@@ -172,6 +178,10 @@ class SweepCell:
 
     ``name`` is the CSV label; ``sweep`` is the free-form annotation the
     fig6-style verdicts group by (stored on the summary row verbatim).
+    ``p_fail`` drops each edge i.i.d. per round (``repro.core.dynamic``);
+    ``reactive`` recomputes centralities on the surviving subgraph
+    in-scan — both realized by the cell's coefficient program
+    (``repro.core.coeffs``; must agree across a compiled group).
     """
 
     dataset: str
@@ -182,10 +192,44 @@ class SweepCell:
     seed: int = 0
     name: str = ""
     sweep: Optional[tuple] = None
+    p_fail: float = 0.0
+    reactive: bool = False
 
     @property
     def label(self) -> str:
         return self.name or f"{self.dataset}/{self.topo.name}/{self.strategy}"
+
+
+def linkfail_cells(
+    datasets=("mnist",),
+    seeds=(0,),
+    n_nodes: int = 16,
+    strategies=("unweighted", "degree"),
+    p_fails=(0.0, 0.3, 0.6),
+    reactive: bool = True,
+    prefix: str = "linkfail",
+) -> List[SweepCell]:
+    """Link-failure grid shared by the ``benchmarks/sweep.py linkfail``
+    preset and ``benchmarks/ablations.py run_link_failure``: strategies ×
+    p_fail on per-seed BA graphs, coefficients generated in-scan by each
+    cell's program (reactive=True recomputes centralities on the
+    surviving subgraph)."""
+    from repro.core.topology import barabasi_albert
+
+    cells = []
+    for ds in datasets:
+        for seed in seeds:
+            # one Topology per (dataset, seed) so the networkx centrality
+            # cache (nominal scores, kth_highest_degree_node) is shared
+            topo = barabasi_albert(n_nodes, 2, seed=seed)
+            for strat in strategies:
+                for pf in p_fails:
+                    cells.append(SweepCell(
+                        ds, topo, strat, ood_k=1, seed=seed,
+                        p_fail=pf, reactive=reactive,
+                        name=f"{prefix}/{ds}/{strat}/p{pf}",
+                        sweep=("p_fail", strat, pf)))
+    return cells
 
 
 def group_cells(cells: List[SweepCell]) -> Dict[Tuple[str, int], List[int]]:
@@ -212,6 +256,7 @@ def run_sweep_cells(
     unroll_eval: bool = False,
     mesh=None,
     chunk_rounds: Optional[int] = None,
+    coeff_mode: str = "stack",
     log=None,
 ) -> List[Dict]:
     """Evaluate a whole grid of cells through the sweep engine.
@@ -227,7 +272,16 @@ def run_sweep_cells(
     ``mesh`` (``repro.launch.mesh.make_sweep_mesh``) shards each group's
     experiment axis across devices; ``chunk_rounds`` scans the round
     schedule in bounded chunks — both bit-identical to the default path.
+
+    ``coeff_mode`` picks the coefficient representation (DESIGN.md §9):
+    ``"stack"`` materializes each cell's ``(R, n, n)`` slab host-side
+    (link-failure cells materialize their program);  ``"program"`` ships
+    only the compact per-experiment program state and generates matrices
+    in-scan — required memory-wise for long reactive sweeps, bit-identical
+    to the stack otherwise.
     """
+    if coeff_mode not in ("stack", "program"):
+        raise KeyError(f"coeff_mode {coeff_mode!r}; have 'stack', 'program'")
     rows: List[Optional[Dict]] = [None] * len(cells)
     for (ds, n_nodes), idxs in group_cells(cells).items():
         t0 = time.time()
@@ -275,19 +329,46 @@ def run_sweep_cells(
         indices = np.stack(
             [nb.all_round_indices(scale.rounds) for nb in batchers])
 
-        # per-experiment axes
-        data_idx, coeffs, p0s, t_iid, t_ood, metas = [], [], [], [], [], []
+        # per-experiment axes.  Every program-supported cell (incl. all
+        # link-failure / reactive cells) goes through its coefficient
+        # program — materialized to a slab in "stack" mode, shipped as
+        # compact state in "program" mode; both consume identical values.
+        reactives = {cells[i].reactive for i in idxs}
+        if coeff_mode == "program" and len(reactives) > 1:
+            raise ValueError(
+                "cells compiled into one program-mode sweep group must "
+                "share the `reactive` flag (it is static program "
+                "configuration); stack mode materializes per-cell "
+                "programs and supports mixed grids")
+        data_idx, coeffs, states, p0s, t_iid, t_ood, metas = (
+            [], [], [], [], [], [], [])
+        program = None
         init_cache: Dict[int, object] = {}
         for i in idxs:
             cell = cells[i]
             ood_node = cell.topo.kth_highest_degree_node(cell.ood_k)
             d = dconf[(cell.seed, ood_node)]
             data_idx.append(d)
-            coeffs.append(coeffs_stack(
-                cell.topo,
-                AggregationStrategy(cell.strategy, tau=cell.tau,
-                                    seed=cell.seed),
-                scale.rounds, data_counts=batchers[d].data_counts()))
+            strategy = AggregationStrategy(cell.strategy, tau=cell.tau,
+                                           seed=cell.seed)
+            if cell.strategy in PROGRAM_KINDS:
+                program, state = program_for(
+                    cell.topo, strategy,
+                    data_counts=batchers[d].data_counts(),
+                    p_fail=cell.p_fail, reactive=cell.reactive)
+                if coeff_mode == "program":
+                    states.append(state)
+                else:
+                    coeffs.append(program.materialize(state, scale.rounds))
+            else:
+                if coeff_mode == "program" or cell.p_fail or cell.reactive:
+                    raise ValueError(
+                        f"strategy {cell.strategy!r} has no coefficient "
+                        f"program (coeff_mode='program' / link-failure "
+                        f"cells need one); use coeff_mode='stack'")
+                coeffs.append(coeffs_stack(
+                    cell.topo, strategy, scale.rounds,
+                    data_counts=batchers[d].data_counts()))
             if cell.seed not in init_cache:
                 init_cache[cell.seed] = init(jax.random.key(cell.seed))
             p0s.append(stack_params([init_cache[cell.seed]] * n_nodes))
@@ -295,11 +376,13 @@ def run_sweep_cells(
             t_ood.append(obs[d])
             metas.append((cell, ood_node))
 
+        engine_coeffs = (ProgramCoeffs(program, stack_states(states))
+                         if coeff_mode == "program" else np.stack(coeffs))
         params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *p0s)
         stack_tests = lambda ts: {
             k: jnp.stack([jnp.asarray(t[k]) for t in ts]) for k in ts[0]}
         result = engine.run(
-            params0, np.stack(coeffs), bank, indices,
+            params0, engine_coeffs, bank, indices,
             np.asarray(data_idx), stack_tests(t_iid), stack_tests(t_ood),
             batch_size=scale.batch, unroll_eval=unroll_eval,
             mesh=mesh, chunk_rounds=chunk_rounds)
@@ -314,6 +397,8 @@ def run_sweep_cells(
                 secs=round(secs / len(idxs), 2), sweep_secs=round(secs, 1),
                 sweep_group_size=len(idxs),
             )
+            if cell.p_fail or cell.reactive:
+                summary.update(p_fail=cell.p_fail, reactive=cell.reactive)
             if cell.sweep is not None:
                 summary["sweep"] = cell.sweep
             rows[i] = summary

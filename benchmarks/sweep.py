@@ -47,7 +47,13 @@ _SAMPLE_BYTES = {
 
 @dataclasses.dataclass(frozen=True)
 class SweepPreset:
-    """Registry entry: a figure's grid as a cell builder + claim check."""
+    """Registry entry: a figure's grid as a cell builder + claim check.
+
+    ``programs=True`` runs the grid through device-side coefficient
+    programs (``coeff_mode="program"``, DESIGN.md §9) — required for
+    reactive link-failure cells — and records the stacks-vs-programs
+    host-memory and wall-clock deltas in ``BENCH_sweep.json``.
+    """
 
     name: str
     description: str
@@ -55,6 +61,7 @@ class SweepPreset:
     verdict: Callable[[List[dict]], str]
     datasets: tuple = ("mnist",)
     seeds: tuple = (0, 1)
+    programs: bool = False
 
 
 PRESETS: Dict[str, SweepPreset] = {}
@@ -129,6 +136,45 @@ register_preset(SweepPreset(
 register_preset(SweepPreset(
     "fig6", "topology sweep (BA degree param + SB modularity)",
     _fig6_build, _fig6_verdict, seeds=(0,)))
+
+
+LINKFAIL_STRATEGIES = ("unweighted", "degree", "betweenness")
+LINKFAIL_P = (0.0, 0.3, 0.6)
+
+
+def _linkfail_build(datasets, seeds, n_nodes):
+    """Reactive link-failure grid: strategies × p_fail on BA graphs, every
+    round's centralities recomputed on the surviving subgraph in-scan —
+    the scenario host-precomputed stacks cannot express reactively at
+    sweep scale (the matrices are generated device-side per round)."""
+    from benchmarks.common import linkfail_cells
+
+    return linkfail_cells(datasets=datasets, seeds=seeds, n_nodes=n_nodes,
+                          strategies=LINKFAIL_STRATEGIES,
+                          p_fails=LINKFAIL_P, reactive=True)
+
+
+def _linkfail_verdict(rows):
+    mean = lambda xs: sum(xs) / max(len(xs), 1)
+    by = {}
+    for r in rows:
+        by.setdefault((r["strategy"], r.get("p_fail", 0.0)),
+                      []).append(r["ood_auc"])
+    parts = []
+    for pf in sorted({k[1] for k in by}):
+        deg = mean(by.get(("degree", pf), [0.0]))
+        unw = mean(by.get(("unweighted", pf), [0.0]))
+        parts.append(f"p={pf}: degree−unweighted OOD-AUC "
+                     f"Δ={deg - unw:+.3f}")
+    return ("reactive link failure (centralities on the surviving "
+            "subgraph): " + "; ".join(parts))
+
+
+register_preset(SweepPreset(
+    "linkfail",
+    "reactive link-failure robustness (strategies × p_fail, in-scan "
+    "coefficient programs)",
+    _linkfail_build, _linkfail_verdict, seeds=(0,), programs=True))
 
 
 # ----------------------------------------------------------------------
@@ -247,19 +293,22 @@ def main(argv: Optional[List[str]] = None) -> None:
               f"{len(jax.devices()) if not args.shard else args.shard} "
               f"device(s); chunk_rounds={args.chunk_rounds}")
 
+    coeff_mode = "program" if preset.programs else "stack"
     t0 = time.time()
     rows = run_sweep_cells(cells, scale=scale, unroll_eval=args.unroll,
                            mesh=mesh, chunk_rounds=args.chunk_rounds,
-                           log=print)
+                           coeff_mode=coeff_mode, log=print)
     engine_secs = time.time() - t0
     print(f"\nsweep engine: {len(cells)} experiments in "
           f"{engine_secs:.1f}s wall-clock "
-          f"({engine_secs / len(cells):.2f}s/experiment amortized)")
+          f"({engine_secs / len(cells):.2f}s/experiment amortized"
+          f"{', in-scan coefficient programs' if preset.programs else ''})")
 
     if mesh is not None:
         # sharded-vs-single comparison → BENCH_sweep.json (perf trajectory)
         t0 = time.time()
-        single_rows = run_sweep_cells(cells, scale=scale)
+        single_rows = run_sweep_cells(cells, scale=scale,
+                                      coeff_mode=coeff_mode)
         single_secs = time.time() - t0
         identical = all(
             a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
@@ -268,8 +317,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         print(f"single-device scanned path: {single_secs:.1f}s wall-clock "
               f"→ sharded speedup {single_secs / max(engine_secs, 1e-9):.2f}×"
               f"  (metrics bit-identical: {identical})")
-        os.makedirs(args.out, exist_ok=True)
-        bench = {
+        bench_path = _update_bench(args.out, f"sharded/{preset.name}", {
             "preset": preset.name,
             "experiments": len(cells),
             "rounds": scale.rounds,
@@ -280,12 +328,58 @@ def main(argv: Optional[List[str]] = None) -> None:
             "single_device_secs": round(single_secs, 2),
             "speedup": round(single_secs / max(engine_secs, 1e-9), 3),
             "bit_identical_metrics": bool(identical),
-        }
-        bench_path = f"{args.out}/BENCH_sweep.json"
-        json.dump(bench, open(bench_path, "w"), indent=1)
+        })
         print(f"sharded-vs-single wall-clock → {bench_path}")
 
-    if not args.no_legacy:
+    if preset.programs:
+        # stacks-vs-programs comparison: identical grid, coefficients
+        # host-materialized as (E, R, n, n) slabs instead of generated
+        # in-scan — records the memory and wall-clock deltas of the
+        # coefficient-program subsystem (DESIGN.md §9).
+        from repro.core.coeffs import program_for, state_nbytes
+        from repro.core.strategies import AggregationStrategy
+
+        t0 = time.time()
+        stack_rows = run_sweep_cells(cells, scale=scale, mesh=mesh,
+                                     chunk_rounds=args.chunk_rounds,
+                                     coeff_mode="stack")
+        stack_secs = time.time() - t0
+        identical = all(
+            a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
+            for a, b in zip(rows, stack_rows))
+        c0 = cells[0]
+        _, state0 = program_for(
+            c0.topo, AggregationStrategy(c0.strategy, tau=c0.tau,
+                                         seed=c0.seed),
+            p_fail=c0.p_fail, reactive=c0.reactive)
+        program_bytes = state_nbytes(state0) * len(cells)
+        stack_bytes = len(cells) * scale.rounds * n_nodes * n_nodes * 4
+        print(f"coefficient stacks: {stack_secs:.1f}s wall-clock, "
+              f"{stack_bytes / 2**20:.1f} MiB of host coefficients vs "
+              f"{program_bytes / 2**10:.1f} KiB program state "
+              f"({stack_bytes / max(program_bytes, 1):.0f}× smaller); "
+              f"metrics bit-identical: {identical}")
+        bench_path = _update_bench(
+            args.out, f"coeff_programs/{preset.name}", {
+            "preset": preset.name,
+            "experiments": len(cells),
+            "rounds": scale.rounds,
+            "n_nodes": n_nodes,
+            "reactive": bool(c0.reactive),
+            "program_secs": round(engine_secs, 2),
+            "stack_secs": round(stack_secs, 2),
+            "stack_coeff_bytes": stack_bytes,
+            "program_state_bytes": program_bytes,
+            "bytes_ratio": round(stack_bytes / max(program_bytes, 1), 1),
+            "bit_identical_metrics": bool(identical),
+        })
+        print(f"stacks-vs-programs record → {bench_path}")
+
+    if not args.no_legacy and preset.programs:
+        print("\n(legacy per-config baseline skipped: run_experiment has "
+              "no link-failure path — programs presets compare against "
+              "the materialized-stack engine run instead)")
+    elif not args.no_legacy:
         t0 = time.time()
         run_legacy_baseline(cells, scale)
         legacy_secs = time.time() - t0
@@ -302,6 +396,27 @@ def main(argv: Optional[List[str]] = None) -> None:
     path = f"{args.out}/sweep_{preset.name}.json"
     json.dump(rows, open(path, "w"), indent=1, default=_json_default)
     print(f"rows → {path}")
+
+
+def _update_bench(out_dir: str, section: str, payload: dict) -> str:
+    """Merge one section into benchmarks/artifacts/BENCH_sweep.json.
+    Sections are keyed ``kind/preset`` (e.g. ``sharded/fig4``,
+    ``coeff_programs/linkfail``) so the CI job's successive preset runs
+    accumulate instead of overwriting each other's records."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = f"{out_dir}/BENCH_sweep.json"
+    bench = {}
+    if os.path.exists(path):
+        try:
+            loaded = json.load(open(path))
+            # pre-section records were one flat sharded dict — discard
+            if isinstance(loaded, dict) and "preset" not in loaded:
+                bench = loaded
+        except ValueError:
+            pass
+    bench[section] = payload
+    json.dump(bench, open(path, "w"), indent=1)
+    return path
 
 
 def _json_default(o):

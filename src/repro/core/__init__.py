@@ -16,9 +16,17 @@ from repro.core.topology import (
 from repro.core.strategies import AggregationStrategy, mixing_matrix, STRATEGIES
 from repro.core.mixing import (
     mix_dense,
+    mix_sparse,
     mix_sparse_host,
+    sparse_offsets,
     circulant_decomposition,
     CirculantSchedule,
+)
+from repro.core.coeffs import (
+    CoeffProgram,
+    ProgramCoeffs,
+    program_for,
+    stack_states,
 )
 from repro.core.decentralized import (
     DecentralizedConfig,

@@ -1,0 +1,350 @@
+"""Device-side coefficient programs — in-scan mixing-matrix generation.
+
+The paper's contribution is ``GetAggrCoeffs``: per-round, per-node
+aggregation coefficients.  The scanned/sharded engines (DESIGN.md §7/§8)
+originally consumed them only as host-precomputed ``(E, R, n, n)`` stacks
+— which dominate sweep memory (Fig-4 scale: E=96, R=500, n=32 is ~200 MB
+of float32 coefficients per dispatch, vs ~0.4 MB of program state) and
+make *reactive* strategies (recompute centrality on the per-round
+surviving subgraph) impossible inside the scan.
+
+A :class:`CoeffProgram` is the alternative: a jittable
+
+    ``matrix(state, round_idx) -> (n, n) row-stochastic mixing matrix``
+
+with compact per-experiment ``state`` (adjacency, nominal centrality
+scores, data counts, τ, strategy id, PRNG seed, link-failure rate).  The
+program is pure data-in/data-out, so it runs
+
+* inside the round scan of ``repro.core.decentralized.make_scan_fn``
+  (``coeff_fn=``) and all three ``repro.core.sweep.SweepEngine`` modes —
+  scanned, sharded (state shards on the E axis), chunked;
+* or *outside* the scan via :meth:`CoeffProgram.materialize`, which
+  reproduces the legacy ``coeffs_stack`` slab bit-for-bit
+  (``repro.core.decentralized.coeffs_stack`` now delegates here for every
+  program-supported strategy).
+
+**PRNG folding** (DESIGN.md §9): with ``base = key(seed)``, round r uses
+``fold_in(fold_in(base, r), 0)`` for the Bernoulli edge mask
+(``repro.core.dynamic.edge_mask``) and
+``fold_in(fold_in(base, r·resample), 1)`` for the Random baseline's score
+draw — so link churn varies per round even when Random resampling is
+frozen, and every round's matrix is a pure function of (state, r).
+
+**Centrality kernels** (pure jnp, fixed iteration counts so they trace):
+degree is exact; eigenvector/PageRank run a fixed-length power method;
+closeness counts hops via repeated masked matrix products
+(Wasserman–Faust component scaling, networkx's default, so disconnected
+survivors are well-defined).  Betweenness has no fixed-shape jnp
+formulation (Brandes is data-dependent control flow over shortest-path
+DAGs) — it stays host-side: reactive programs fall back to the NOMINAL
+betweenness scores in state, documented here and in DESIGN.md §9.
+
+Property tests against the networkx values cached on ``Topology`` live in
+``tests/test_coeffs.py``; stack-vs-program bit-identity in
+``tests/test_sweep_programs.py`` / ``tests/test_sweep_sharded.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamic import edge_mask
+from repro.core.strategies import (
+    AggregationStrategy,
+    masked_normalize,
+    masked_softmax,
+    strategy_scores,
+)
+from repro.core.topology import Topology
+
+__all__ = [
+    "PROGRAM_KINDS",
+    "CENTRALITY_KINDS",
+    "CoeffProgram",
+    "ProgramCoeffs",
+    "program_for",
+    "stack_states",
+    "state_nbytes",
+    "degree_centrality",
+    "eigenvector_centrality",
+    "pagerank_centrality",
+    "closeness_centrality",
+]
+
+# lax.switch branch order — state["kind"] indexes into this tuple
+PROGRAM_KINDS = ("unweighted", "weighted", "random", "fl", "degree",
+                 "betweenness", "eigenvector", "pagerank", "closeness")
+# kinds whose state carries nominal (host-computed) centrality scores
+CENTRALITY_KINDS = ("degree", "betweenness", "eigenvector", "pagerank",
+                    "closeness")
+
+
+# ----------------------------------------------------------------------
+# pure-jnp centrality kernels (fixed shapes / iteration counts)
+# ----------------------------------------------------------------------
+def degree_centrality(adj: jnp.ndarray) -> jnp.ndarray:
+    """degree / (n-1) — the networkx normalization (scores in [0, 1])."""
+    n = adj.shape[-1]
+    return adj.sum(axis=-1) / max(n - 1, 1)
+
+
+def eigenvector_centrality(adj: jnp.ndarray, iters: int = 200) -> jnp.ndarray:
+    """Principal adjacency eigenvector via ``iters`` power-method steps,
+    unit 2-norm, nonnegative (matches ``nx.eigenvector_centrality_numpy``
+    up to power-method convergence).  Iterates on ``A + I`` — same
+    eigenvectors, but the top eigenvalue is strictly dominant even on
+    bipartite (sub)graphs where ``λ_min = -λ_max`` makes plain power
+    iteration oscillate (networkx's iterative variant shifts the same
+    way).  A zero adjacency (every edge dropped) keeps the uniform start
+    vector instead of dividing by 0."""
+    n = adj.shape[-1]
+    x0 = jnp.full((n,), 1.0 / np.sqrt(n), adj.dtype)
+
+    def step(x, _):
+        y = adj @ x + x
+        norm = jnp.sqrt((y * y).sum())
+        return jnp.where(norm > 1e-12, y / jnp.maximum(norm, 1e-12), x), None
+
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    return x
+
+
+def pagerank_centrality(adj: jnp.ndarray, alpha: float = 0.85,
+                        iters: int = 200) -> jnp.ndarray:
+    """PageRank mass by fixed-length power iteration — networkx semantics:
+    uniform personalization, dangling (isolated) nodes redistribute their
+    mass uniformly.  α^200 ≈ 6e-15, far past nx's 1e-6 stop tolerance."""
+    n = adj.shape[-1]
+    deg = adj.sum(axis=-1)
+    dangling = deg <= 0
+    p = adj / jnp.where(dangling, 1.0, deg)[:, None]
+    x0 = jnp.full((n,), 1.0 / n, adj.dtype)
+
+    def step(x, _):
+        dmass = jnp.where(dangling, x, 0.0).sum()
+        return alpha * (x @ p + dmass / n) + (1.0 - alpha) / n, None
+
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    return x
+
+
+def closeness_centrality(adj: jnp.ndarray) -> jnp.ndarray:
+    """Closeness via matrix-power hop counts: reachability after k hops is
+    ``(I + A)^k > 0``; a node's distance to j is the first k that reaches
+    it.  Wasserman–Faust component scaling (networkx default):
+    ``cc(u) = ((r-1)/Σd) · ((r-1)/(n-1))`` with r = component size, so
+    disconnected subgraphs (``drop_edges`` survivors) are well-defined and
+    isolated nodes score 0."""
+    n = adj.shape[-1]
+    eye = jnp.eye(n, dtype=adj.dtype)
+    hop = jnp.minimum(adj + eye, 1.0)
+
+    def step(carry, k):
+        reach, dist = carry
+        new_reach = jnp.minimum(reach @ hop, 1.0)
+        newly = (new_reach > 0) & (reach == 0)
+        dist = dist + jnp.where(newly, k.astype(adj.dtype), 0.0)
+        return (new_reach, dist), None
+
+    (reach, dist), _ = jax.lax.scan(
+        step, (eye, jnp.zeros((n, n), adj.dtype)),
+        jnp.arange(1, max(n, 2), dtype=jnp.int32))
+    r = reach.sum(axis=1)            # component size, including self
+    sd = dist.sum(axis=1)            # Σ distances within the component
+    return jnp.where(
+        sd > 0,
+        (r - 1.0) / jnp.maximum(sd, 1.0) * (r - 1.0) / max(n - 1, 1),
+        0.0)
+
+
+def _scaled_pagerank(adj: jnp.ndarray, alpha: float, iters: int) -> jnp.ndarray:
+    """PageRank rescaled to [0, 1] — the strategies.py convention (mass is
+    O(1/n); without rescaling τ=0.1 would flatten the softmax)."""
+    pr = pagerank_centrality(adj, alpha=alpha, iters=iters)
+    return pr / pr.max()
+
+
+# ----------------------------------------------------------------------
+# the coefficient program
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CoeffProgram:
+    """Jittable per-round mixing-matrix generator (hashable → usable as a
+    jit static argument and cache key).
+
+    ``reactive=True`` recomputes centrality scores on the round's
+    SURVIVING subgraph with the jnp kernels above; ``False`` restricts the
+    nominal-score softmax to surviving support (which equals renormalizing
+    the nominal matrix over surviving links — softmax restricted to a
+    subset and renormalized IS the softmax over the subset).  Betweenness
+    uses nominal scores in both modes (no fixed-shape jnp kernel).
+    """
+
+    n_nodes: int
+    reactive: bool = False
+    power_iters: int = 200
+    pagerank_iters: int = 200
+    pagerank_alpha: float = 0.85
+
+    # ------------------------------------------------------------------
+    def matrix(self, state, round_idx) -> jnp.ndarray:
+        """(n, n) row-stochastic mixing matrix for one round — pure jnp,
+        safe inside jit/vmap/scan/shard_map.  ``state`` is one
+        experiment's state (no leading axis); ``round_idx`` an int32
+        scalar (absolute round, so chunked execution stays exact)."""
+        n = self.n_nodes
+        adj = state["adj"]
+        r = jnp.asarray(round_idx, jnp.int32)
+        base = jax.random.key(state["seed"])
+        k_edges = jax.random.fold_in(jax.random.fold_in(base, r), 0)
+        k_scores = jax.random.fold_in(
+            jax.random.fold_in(base, r * state["resample"]), 1)
+
+        adj_r = adj * edge_mask(k_edges, n, state["p_fail"], dtype=adj.dtype)
+        mask = adj_r + jnp.eye(n, dtype=adj.dtype)
+        tau = state["tau"]
+
+        def soft(scores):
+            return masked_softmax(scores, mask, tau, xp=jnp)
+
+        def linear(w):
+            return masked_normalize(w, mask, xp=jnp)
+
+        def centrality(kernel):
+            return kernel(adj_r) if self.reactive else state["scores"]
+
+        # `kind` is per-experiment STATE so one compiled program serves a
+        # mixed-strategy grid (fig4!): under the engine's vmap-over-E the
+        # batched switch index lowers to compute-all-branches + select.
+        # That dead-branch work is a few (n, n) softmax/normalize ops —
+        # the reactive centrality kernels below are only traced at all
+        # when `self.reactive` (a static program field) is set, and even
+        # then cost ~400 n² matvecs + n n³-products per round, noise next
+        # to LocalTrain.  Grids that want zero waste can split by kind.
+        branches = (
+            lambda: linear(jnp.ones((n,), adj.dtype)),         # unweighted
+            lambda: linear(state["counts"]),                   # weighted
+            lambda: soft(jax.random.uniform(k_scores, (n,))),  # random
+            # fl deliberately ignores the edge mask: it models the
+            # idealized fully-connected (server) baseline, which P2P link
+            # churn does not touch — same semantics as the legacy host
+            # path (dynamic_mixing_matrix(surv, fl) is also still 1/n)
+            lambda: jnp.full((n, n), 1.0 / n, adj.dtype),      # fl
+            lambda: soft(centrality(degree_centrality)),       # degree
+            lambda: soft(state["scores"]),                     # betweenness
+            lambda: soft(centrality(
+                lambda a: eigenvector_centrality(a, self.power_iters))),
+            lambda: soft(centrality(
+                lambda a: _scaled_pagerank(a, self.pagerank_alpha,
+                                           self.pagerank_iters))),
+            lambda: soft(centrality(closeness_centrality)),
+        )
+        return jax.lax.switch(state["kind"], branches)
+
+    # ------------------------------------------------------------------
+    def materialize(self, state, rounds: Optional[int] = None,
+                    round_indices=None) -> np.ndarray:
+        """(R, n, n) float32 stack: the program run OUTSIDE the training
+        scan — the legacy slab representation.  Non-reactive link-free
+        programs reproduce what ``coeffs_stack`` used to build; the
+        in-scan path must match this bit-for-bit
+        (tests/test_sweep_programs.py)."""
+        if round_indices is None:
+            if rounds is None:
+                raise ValueError("materialize needs rounds or round_indices")
+            round_indices = np.arange(int(rounds))
+        fn = _materialize_fn(self)
+        state = jax.tree.map(jnp.asarray, state)
+        return np.asarray(fn(state, jnp.asarray(round_indices, jnp.int32)))
+
+
+@functools.lru_cache(maxsize=None)
+def _materialize_fn(program: CoeffProgram):
+    return jax.jit(jax.vmap(program.matrix, in_axes=(None, 0)))
+
+
+# ----------------------------------------------------------------------
+# state construction
+# ----------------------------------------------------------------------
+def program_for(
+    topo: Topology,
+    strategy: AggregationStrategy,
+    data_counts: Optional[np.ndarray] = None,
+    p_fail: float = 0.0,
+    reactive: bool = False,
+    resample_random: bool = True,
+    **program_kwargs,
+):
+    """Build ``(program, state)`` for one topology × strategy cell.
+
+    ``state`` is a dict of numpy leaves (stackable over experiments with
+    :func:`stack_states`); nominal centrality scores come from
+    ``strategies.strategy_scores`` → the networkx values cached on
+    ``Topology`` — the *same* scores the numpy path softmaxes, so the two
+    paths differ only in dtype (f64 host vs f32 device).
+
+    Note ``p_fail`` has no effect on the ``"fl"`` baseline: FL models an
+    idealized fully-connected overlay that P2P link churn does not touch
+    (matching the legacy ``dynamic_mixing_matrix`` semantics) — its rows
+    in a link-failure grid are churn-invariant by construction.
+    """
+    if strategy.kind not in PROGRAM_KINDS:
+        raise KeyError(
+            f"strategy {strategy.kind!r} has no coefficient program; "
+            f"supported: {sorted(PROGRAM_KINDS)} "
+            f"(others keep the host-side mixing_matrix path)")
+    n = topo.n_nodes
+    if strategy.kind == "weighted" and data_counts is None:
+        raise ValueError("'weighted' strategy needs per-node data_counts")
+    counts = (np.ones(n) if data_counts is None
+              else np.asarray(data_counts, dtype=np.float64))
+    if counts.shape != (n,):
+        raise ValueError(f"data_counts shape {counts.shape} != ({n},)")
+    scores = np.zeros(n)
+    if strategy.kind in CENTRALITY_KINDS:
+        scores = strategy_scores(topo, strategy)
+    state = {
+        "adj": np.asarray(topo.adjacency, np.float32),
+        "scores": np.asarray(scores, np.float32),
+        "counts": np.asarray(counts, np.float32),
+        "tau": np.float32(strategy.tau),
+        "kind": np.int32(PROGRAM_KINDS.index(strategy.kind)),
+        "seed": np.uint32(strategy.seed),
+        "p_fail": np.float32(p_fail),
+        "resample": np.int32(bool(resample_random)),
+    }
+    program = CoeffProgram(n_nodes=n, reactive=bool(reactive),
+                           **program_kwargs)
+    return program, state
+
+
+@dataclasses.dataclass
+class ProgramCoeffs:
+    """Drop-in replacement for the ``(E, R, n, n)`` slab in
+    ``SweepEngine.run``: one shared program + per-experiment states with a
+    leading E axis (sharded on E under a mesh, exactly like the slab)."""
+
+    program: CoeffProgram
+    states: Any
+
+    @property
+    def n_experiments(self) -> int:
+        return jax.tree.leaves(self.states)[0].shape[0]
+
+
+def stack_states(states: Sequence[dict]) -> dict:
+    """[state] * E  →  state pytree with leading E axis."""
+    return {k: np.stack([np.asarray(s[k]) for s in states])
+            for k in states[0]}
+
+
+def state_nbytes(state) -> int:
+    """Host bytes of a state pytree — the memory-table number reported in
+    EXPERIMENTS.md and BENCH_sweep.json (vs ``E·R·n²·4`` for a slab)."""
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(state)))

@@ -44,8 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mixing import mix_dense
-from repro.core.strategies import AggregationStrategy, mixing_matrix
+from repro.core.mixing import mix_dense, mix_sparse, sparse_offsets
+from repro.core.strategies import (
+    AggregationStrategy,
+    mixing_matrix,
+    random_round_seed,
+)
 from repro.core.topology import Topology
 from repro.training.optimizer import Optimizer, apply_updates
 
@@ -82,7 +86,10 @@ class DecentralizedConfig:
     resample_random_each_round: bool = True   # paper's Random baseline redraws
     mix_in_float32: bool = True
     unroll_eval: bool = False  # True → legacy per-round Python loop
-    mix_impl: str = "einsum"   # "einsum" | "pallas" (kernels.gossip_mix)
+    # "einsum" | "pallas" (kernels.gossip_mix) | "sparse" (circulant
+    # ring-offset schedule from the topology support; dense fallback for
+    # supports that don't decompose compactly — see make_mix_fn)
+    mix_impl: str = "einsum"
     # True (default): the pipeline supplies E *distinct* epoch passes per
     # round (``NodeBatcher(local_epochs=E)``) and LocalTrain consumes them
     # as-is — the paper's Eq. (1).  False: legacy behavior — one epoch of
@@ -110,14 +117,32 @@ def round_coeffs(
     coeffs_fn: Optional[Callable[[int], np.ndarray]] = None,
     resample_random: bool = True,
 ) -> np.ndarray:
-    """Mixing matrix for one round.  Random redraws per round (seed mixes
-    in the round index); all other strategies are static unless a
-    ``coeffs_fn`` (e.g. core.dynamic link-failure matrices) overrides."""
+    """Mixing matrix for one round.  Random redraws per round (seed mixed
+    through :func:`repro.core.strategies.random_round_seed`); all other
+    strategies are static unless a ``coeffs_fn`` (e.g. core.dynamic
+    link-failure matrices) overrides.
+
+    Program-supported strategies (``repro.core.coeffs.PROGRAM_KINDS``)
+    route through the device-side coefficient program — float32, the same
+    values the in-scan path generates — so unrolled, scanned, and
+    program-driven runs consume identical matrices.  Other kinds
+    (metropolis, ``register_strategy`` plugins) keep the host numpy path.
+    """
     if coeffs_fn is not None:
         return np.asarray(coeffs_fn(round_idx))
+    from repro.core.coeffs import PROGRAM_KINDS, program_for
+
+    if strategy.kind in PROGRAM_KINDS:
+        program, state = program_for(topo, strategy,
+                                     data_counts=data_counts,
+                                     resample_random=resample_random)
+        return program.materialize(
+            state, round_indices=np.array([round_idx]))[0]
+    # host-path guard: unreachable while "random" is program-supported,
+    # kept so the fallback stays round-correct if PROGRAM_KINDS shrinks
     if strategy.kind == "random" and resample_random:
         strategy = dataclasses.replace(
-            strategy, seed=strategy.seed * 100003 + round_idx)
+            strategy, seed=random_round_seed(strategy.seed, round_idx))
     return mixing_matrix(topo, strategy, data_counts)
 
 
@@ -130,7 +155,20 @@ def coeffs_stack(
     resample_random: bool = True,
 ) -> np.ndarray:
     """(R, n, n) stack of per-round mixing matrices — the scanned trainer's
-    data-not-control-flow representation of time-varying aggregation."""
+    data-not-control-flow representation of time-varying aggregation.
+
+    For program-supported strategies this IS
+    ``CoeffProgram.materialize(rounds)`` (DESIGN.md §9) — the legacy slab
+    API survives as the materialized view of the coefficient program; the
+    host numpy loop remains for ``coeffs_fn`` overrides and non-program
+    strategies."""
+    from repro.core.coeffs import PROGRAM_KINDS, program_for
+
+    if coeffs_fn is None and strategy.kind in PROGRAM_KINDS:
+        program, state = program_for(topo, strategy,
+                                     data_counts=data_counts,
+                                     resample_random=resample_random)
+        return program.materialize(state, rounds)
     return np.stack([
         round_coeffs(topo, strategy, r, data_counts, coeffs_fn,
                      resample_random)
@@ -141,16 +179,60 @@ def coeffs_stack(
 # ----------------------------------------------------------------------
 # round-step factories (shared by the trainer and repro.core.sweep)
 # ----------------------------------------------------------------------
-def make_mix_fn(mix_impl: str = "einsum") -> Callable:
-    """Aggregation backend: XLA einsum (default) or the fused Pallas kernel
-    (kernels/gossip_mix.py; interpret-mode on CPU, compiled on TPU/GPU)."""
+def make_mix_fn(mix_impl: str = "einsum",
+                mix_support: Optional[np.ndarray] = None,
+                sparse_slack: int = 4) -> Callable:
+    """Aggregation backend: XLA einsum (default), the fused Pallas kernel
+    (kernels/gossip_mix.py; interpret-mode on CPU, compiled on TPU/GPU),
+    or the circulant ring-offset schedule (``mixing.mix_sparse``).
+
+    ``"sparse"`` needs ``mix_support`` — the (n, n) neighbourhood mask
+    (adjacency + self-loops) that fixes the static offset set.  When the
+    non-self offset count exceeds ``max degree + sparse_slack`` the
+    decomposition moves no fewer bytes than a dense all-gather, so this
+    falls back to :func:`repro.core.mixing.mix_dense` (unstructured
+    supports don't circulant-decompose compactly; rings/WS graphs do).
+    """
     if mix_impl == "einsum":
         return mix_dense
     if mix_impl == "pallas":
         from repro.kernels.gossip_mix import mix_dense_pallas
 
         return mix_dense_pallas
-    raise KeyError(f"unknown mix_impl {mix_impl!r}; have 'einsum', 'pallas'")
+    if mix_impl == "sparse":
+        if mix_support is None:
+            raise ValueError(
+                "mix_impl='sparse' needs mix_support (the (n, n) "
+                "neighbourhood mask, adjacency + self-loops) to fix the "
+                "ring-offset schedule at trace time")
+        offsets, _ = sparse_schedule(mix_support, sparse_slack)
+        if offsets is None:
+            return mix_dense
+        return lambda params, coeffs: mix_sparse(params, coeffs, offsets)
+    raise KeyError(f"unknown mix_impl {mix_impl!r}; "
+                   f"have 'einsum', 'pallas', 'sparse'")
+
+
+def sparse_schedule(mix_support, sparse_slack: int = 4):
+    """``(offsets, covered)`` for a support mask, or ``(None, None)`` when
+    the dense fallback applies (non-self offset count > max degree +
+    slack).  ``covered`` is the (n, n) bool mask of positions the ring
+    schedule can express — ``SweepEngine.run`` checks coefficients
+    against it so off-schedule weight raises instead of being silently
+    dropped by ``mix_sparse``."""
+    support = np.asarray(mix_support)
+    n = support.shape[0]
+    offsets = sparse_offsets(support)
+    off_diag = support * (1.0 - np.eye(n))
+    max_degree = int(off_diag.sum(axis=1).max())
+    nonzero_offsets = len(offsets) - (1 if 0 in offsets else 0)
+    if nonzero_offsets > max_degree + sparse_slack:
+        return None, None
+    rows = np.arange(n)
+    covered = np.zeros((n, n), bool)
+    for k in offsets:
+        covered[rows, (rows + k) % n] = True
+    return offsets, covered
 
 
 def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
@@ -197,13 +279,15 @@ def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
 
 def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
                   mix_impl: str = "einsum",
-                  epoch_shuffle: bool = True) -> Callable:
+                  epoch_shuffle: bool = True,
+                  mix_support: Optional[np.ndarray] = None) -> Callable:
     """One full round — vmapped LocalTrain then aggregation — as a pure
     function ``(stacked_params, stacked_opt, node_batches, coeffs) →
-    (mixed_params, opt, losses)``."""
+    (mixed_params, opt, losses)``.  ``mix_support`` is only consulted by
+    ``mix_impl='sparse'`` (see :func:`make_mix_fn`)."""
     local_train = make_local_train_fn(loss_fn, optimizer, local_epochs,
                                       epoch_shuffle)
-    mix = make_mix_fn(mix_impl)
+    mix = make_mix_fn(mix_impl, mix_support=mix_support)
 
     def round_fn(stacked_params, stacked_opt, node_batches, coeffs):
         params, opt, losses = jax.vmap(local_train)(
@@ -214,7 +298,8 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
 
 
 def make_scan_fn(round_fn: Callable, evaluate: Callable,
-                 make_batch: Optional[Callable] = None) -> Callable:
+                 make_batch: Optional[Callable] = None,
+                 coeff_fn: Optional[Callable] = None) -> Callable:
     """Scan-over-rounds factory shared by ``DecentralizedTrainer`` (stacked
     batches) and ``repro.core.sweep`` (per-round index gather).
 
@@ -222,6 +307,14 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
     ``(stacked_params, test_iid, test_ood) → (iid, ood)``;  ``make_batch``
     maps the per-round scan slice to node batches (identity for
     pre-stacked batches, a bank gather for the sweep engine).
+
+    ``coeff_fn`` switches the mixing-matrix source from *data* to
+    *program* (DESIGN.md §9): when set, the ``coeffs`` argument carries
+    absolute int32 round indices ``(R,)`` instead of an ``(R, n, n)``
+    slab, and each scan step computes its matrix in-scan as
+    ``coeff_fn(round_idx)`` — e.g. ``lambda r:
+    CoeffProgram.matrix(state, r)`` — so per-round matrices (Random
+    resampling, reactive link failure) never materialize on the host.
 
     Returns ``scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
     test_ood) → (params, opt, losses, iid, ood)`` — the carry comes back
@@ -240,6 +333,8 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
         def body(carry, xs):
             p, o = carry
             bx, c, do_eval = xs
+            if coeff_fn is not None:
+                c = coeff_fn(c)  # c is this step's absolute round index
             p, o, losses = round_fn(p, o, make_batch(bx), c)
             iid, ood = jax.lax.cond(
                 do_eval,
@@ -294,9 +389,24 @@ class DecentralizedTrainer:
         self.config = config
         self.data_counts = data_counts
         self.coeffs_fn = coeffs_fn  # e.g. core.dynamic link-failure matrices
+        mix_support = None
+        if config.mix_impl == "sparse":
+            # support = neighbourhoods ∪ the strategy's actual round-0
+            # support: kinds with off-neighbourhood weight (fl's dense
+            # 1/n, register_strategy plugins, coeffs_fn overrides) would
+            # otherwise have mass silently dropped by the ring schedule
+            # (sub-stochastic mixing).  Built-in supports never grow
+            # across rounds; exotic coeffs_fn schedules that do should
+            # use mix_impl="einsum".
+            n = topology.n_nodes
+            m0 = round_coeffs(topology, strategy, 0, data_counts,
+                              coeffs_fn, config.resample_random_each_round)
+            mix_support = np.maximum(
+                topology.adjacency + np.eye(n),
+                (np.abs(np.asarray(m0)) > 1e-12).astype(np.float64))
         self._round_fn = make_round_fn(
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
-            config.epoch_shuffle)
+            config.epoch_shuffle, mix_support=mix_support)
         self._train_round = jax.jit(self._round_fn)
         self._evaluate = jax.jit(self._evaluate_impl)
         self._scan_fn = make_scan_fn(self._round_fn, self._evaluate_impl)

@@ -12,20 +12,53 @@ Centrality scores can be computed on the ORIGINAL graph (nodes know their
 nominal position; cheap) or the SURVIVING graph per round (reactive;
 requires per-round metric recomputation) — both provided.
 
-:func:`link_failure_schedule` pre-materializes a whole run's matrices as
-an ``(R, n, n)`` stack, so link churn is *data* the scanned trainer /
-sweep engine consume (DESIGN.md §7) rather than host-side control flow.
+Two executions of the same idea:
+
+* **host** — :func:`drop_edges` / :func:`dynamic_mixing_matrix` /
+  :func:`link_failure_schedule` build numpy matrices per round; the
+  schedule pre-materializes a whole run as an ``(R, n, n)`` stack, so link
+  churn is *data* the scanned trainer / sweep engine consume (DESIGN.md
+  §7) rather than host-side control flow.
+* **in-scan** — :func:`edge_mask` draws the same i.i.d. Bernoulli edge
+  dropout as a pure-jnp symmetric keep-mask from a folded PRNG key, so
+  the device-side coefficient programs (``repro.core.coeffs``,
+  DESIGN.md §9) regenerate link churn *inside* the round scan; reactive
+  strategies recompute centralities on the masked adjacency there.
 """
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.strategies import AggregationStrategy, mixing_matrix
 from repro.core.topology import Topology
 
-__all__ = ["drop_edges", "dynamic_mixing_matrix", "link_failure_schedule"]
+__all__ = ["drop_edges", "dynamic_mixing_matrix", "link_failure_schedule",
+           "edge_mask"]
+
+
+def edge_mask(key, n: int, p_fail, dtype=jnp.float32) -> jnp.ndarray:
+    """(n, n) symmetric 0/1 keep-mask: each undirected edge survives with
+    probability ``1 - p_fail`` — the in-scan form of :func:`drop_edges`.
+
+    One uniform draw per upper-triangle entry, mirrored below, so the mask
+    is symmetric by construction; multiply into the adjacency to get the
+    surviving subgraph.  ``p_fail`` may be a traced scalar; ``p_fail=0``
+    keeps every edge exactly (uniform draws live in [0, 1) ≥ 0), which is
+    what makes static-topology coefficient programs bit-identical whether
+    or not they route through this mask.
+    """
+    u = jax.random.uniform(key, (n, n))
+    u = jnp.triu(u, k=1)
+    u = u + u.T
+    keep = u >= jnp.asarray(p_fail)
+    # the diagonal draw is 0 and would be "dropped" for any p_fail > 0 —
+    # irrelevant for adjacencies (zero diagonal) but keep the mask honest
+    keep = keep | jnp.eye(n, dtype=bool)
+    return keep.astype(dtype)
 
 
 def drop_edges(topo: Topology, p_fail: float, rng: np.random.Generator,

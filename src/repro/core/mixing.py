@@ -17,8 +17,18 @@ Two schedules are provided:
   mixing matrix into ring offsets; inside ``shard_map`` each offset becomes
   one ``lax.ppermute`` with on-the-fly weighted accumulation, so ICI bytes
   scale with the number of distinct offsets (≈ max degree) instead of n.
+  The offset SET is static (derived from the topology's neighbourhood
+  support via :func:`sparse_offsets`) while the per-offset weights are
+  gathered from the traced coefficients at each call — so one compiled
+  schedule serves every round of a time-varying stack or in-scan
+  coefficient program whose support stays within the nominal topology
+  (link failure only shrinks support: dropped edges contribute weight 0).
+  Reachable as ``DecentralizedConfig(mix_impl="sparse")``
+  (``repro.core.decentralized.make_mix_fn``), which falls back to
+  :func:`mix_dense` when the offset count exceeds max degree + slack —
+  near-circulant graphs (rings, WS) win, unstructured support does not.
 
-Both are pure functions of (params, coefficients) and agree to float
+All are pure functions of (params, coefficients) and agree to float
 tolerance — property-tested in tests/test_mixing.py.
 """
 from __future__ import annotations
@@ -31,7 +41,9 @@ import numpy as np
 
 __all__ = [
     "mix_dense",
+    "mix_sparse",
     "mix_sparse_host",
+    "sparse_offsets",
     "circulant_decomposition",
     "CirculantSchedule",
     "mixing_collective_bytes",
@@ -103,6 +115,47 @@ def circulant_decomposition(coeffs: np.ndarray) -> CirculantSchedule:
             offsets.append(k)
             weights.append(w)
     return CirculantSchedule(offsets, np.stack(weights), n)
+
+
+def sparse_offsets(support: np.ndarray) -> Tuple[int, ...]:
+    """Distinct ring offsets covering a 0/1 support mask (adjacency plus
+    self-loops): offset k is needed iff any ``support[i, (i+k) % n] > 0``.
+    Static metadata — compute once per topology, reuse for every round."""
+    s = np.asarray(support)
+    n = s.shape[0]
+    rows = np.arange(n)
+    return tuple(k for k in range(n)
+                 if np.any(s[rows, (rows + k) % n] > 0))
+
+
+def mix_sparse(params, coeffs: jnp.ndarray, offsets: Sequence[int]):
+    """Circulant gossip with STATIC offsets and TRACED weights.
+
+    ``offsets`` fixes the ring-shift schedule at trace time (it comes from
+    the topology support, :func:`sparse_offsets`); the per-destination
+    weights ``w_k[i] = coeffs[i, (i+k) % n]`` are gathered from the live
+    (n, n) matrix, so per-round matrices (Random resampling, link
+    failure, in-scan coefficient programs) reuse one compiled schedule.
+    Requires ``offsets`` ⊇ the support of ``coeffs`` — entries outside
+    the offset set are silently dropped (callers derive offsets from the
+    nominal topology, whose support only ever shrinks under churn).
+    Accumulates in f32 like :func:`mix_dense`.
+    """
+    c = jnp.asarray(coeffs).astype(jnp.float32)
+    n = c.shape[0]
+    rows = jnp.arange(n)
+    weights = [c[rows, (rows + k) % n] for k in offsets]
+
+    def leaf_fn(leaf: jnp.ndarray) -> jnp.ndarray:
+        acc = jnp.zeros(leaf.shape, jnp.float32)
+        extra = (1,) * (leaf.ndim - 1)
+        for k, w in zip(offsets, weights):
+            # destination i receives source (i+k) % n  ==  roll by -k
+            shifted = jnp.roll(leaf, shift=-k, axis=0) if k else leaf
+            acc = acc + w.reshape((n,) + extra) * shifted.astype(jnp.float32)
+        return acc.astype(leaf.dtype)
+
+    return jax.tree.map(leaf_fn, params)
 
 
 def mix_sparse_host(params, schedule: CirculantSchedule):

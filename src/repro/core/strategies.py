@@ -15,7 +15,12 @@ coefficients ``C[i,j] = softmax_{j∈N_i}(R_j / τ)`` where ``R`` is each
 node's centrality score.
 
 Matrices are built host-side in numpy (graphs are metadata) and consumed by
-``repro.core.mixing`` on device.
+``repro.core.mixing`` on device.  The *rule* is split from the *arrays*:
+:func:`strategy_scores` produces the per-node score vector R and
+:func:`masked_softmax` applies the score→coefficient rule generically over
+an array namespace, so the device-side coefficient programs
+(``repro.core.coeffs``) share the exact same rule with ``xp=jnp``
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -44,6 +49,10 @@ __all__ = [
     "TOPOLOGY_AWARE",
     "TOPOLOGY_UNAWARE",
     "validate_mixing_matrix",
+    "masked_softmax",
+    "masked_normalize",
+    "strategy_scores",
+    "random_round_seed",
 ]
 
 
@@ -60,8 +69,33 @@ class AggregationStrategy:
     tau: float = 0.1
     seed: int = 0
 
-    def matrix(self, topo: Topology, data_counts: Optional[np.ndarray] = None) -> np.ndarray:
-        return mixing_matrix(topo, self, data_counts=data_counts)
+    def matrix(self, topo: Topology, data_counts: Optional[np.ndarray] = None,
+               round_idx: Optional[int] = None) -> np.ndarray:
+        """Mixing matrix; pass ``round_idx`` for round r's matrix.
+
+        The per-round form DELEGATES to
+        ``repro.core.decentralized.round_coeffs`` — the exact matrices the
+        trainer/engine consume (program kinds via the device-side
+        coefficient program, others via :func:`random_round_seed` seed
+        mixing) — so a direct per-round call can neither silently repeat
+        a round's Random draw nor diverge from what training used."""
+        if round_idx is None:
+            return mixing_matrix(topo, self, data_counts=data_counts)
+        from repro.core.decentralized import round_coeffs  # call-time: no cycle
+
+        return round_coeffs(topo, self, round_idx, data_counts=data_counts)
+
+
+def random_round_seed(seed: int, round_idx: int) -> int:
+    """Per-round seed mixing for the HOST-path Random draw.
+    :func:`random_coeffs` itself is deterministic in ``strategy.seed``;
+    a host caller that wants round r's draw mixes the seed through this
+    helper first.  Note the engines' actual training stream for Random
+    is the coefficient program's PRNG folding (``repro.core.coeffs``,
+    DESIGN.md §9) — ``round_coeffs`` / ``matrix(round_idx=...)`` route
+    there and keep this helper only as the fallback for non-program
+    kinds."""
+    return seed * 100003 + round_idx
 
 
 def _neighborhood_mask(topo: Topology) -> np.ndarray:
@@ -69,19 +103,35 @@ def _neighborhood_mask(topo: Topology) -> np.ndarray:
     return topo.adjacency + np.eye(topo.n_nodes)
 
 
-def _masked_softmax(scores: np.ndarray, mask: np.ndarray, tau: float) -> np.ndarray:
+def masked_softmax(scores, mask, tau, xp=np):
     """Row-wise softmax of per-*column* scores restricted to the row's mask.
 
     ``scores`` is an (n,) vector of per-node values R_j; row i's coefficients
     are softmax over {R_j / τ : j ∈ N_i}.  Numerically stabilized per row.
+    Written against the array namespace ``xp`` so the host path (numpy,
+    float64) and the device-side coefficient programs (``xp=jnp``, float32,
+    ``repro.core.coeffs``) share the exact same rule.
     """
-    n = scores.shape[0]
-    logits = np.broadcast_to(scores[None, :] / tau, (n, n)).copy()
-    logits[mask == 0] = -np.inf
-    logits -= logits.max(axis=1, keepdims=True)
-    exp = np.exp(logits)
-    exp[mask == 0] = 0.0
+    n = scores.shape[-1]
+    logits = xp.where(mask > 0,
+                      xp.broadcast_to(scores[None, :] / tau, (n, n)),
+                      -xp.inf)
+    logits = logits - logits.max(axis=1, keepdims=True)
+    exp = xp.where(mask > 0, xp.exp(logits), 0.0)
     return exp / exp.sum(axis=1, keepdims=True)
+
+
+def masked_normalize(weights, mask, xp=np):
+    """Linear (non-softmax) coefficient rule: ``C[i, j] = w_j / Σ_{N_i} w``
+    — Unweighted (w=1) and Weighted (w=|train_j|).  Shared between the
+    numpy host path and the jnp coefficient programs like
+    :func:`masked_softmax`; rows whose mask is empty are impossible here
+    (every node keeps its self-loop)."""
+    wm = mask * weights[None, :]
+    return wm / wm.sum(axis=1, keepdims=True)
+
+
+_masked_softmax = masked_softmax  # internal alias kept for readability below
 
 
 # ----------------------------------------------------------------------
@@ -90,8 +140,7 @@ def _masked_softmax(scores: np.ndarray, mask: np.ndarray, tau: float) -> np.ndar
 def unweighted(topo: Topology, strategy: AggregationStrategy,
                data_counts: Optional[np.ndarray] = None) -> np.ndarray:
     """C[i,j] = 1/|N_i| for j ∈ N_i."""
-    mask = _neighborhood_mask(topo)
-    return mask / mask.sum(axis=1, keepdims=True)
+    return masked_normalize(np.ones(topo.n_nodes), _neighborhood_mask(topo))
 
 
 def weighted(topo: Topology, strategy: AggregationStrategy,
@@ -102,18 +151,21 @@ def weighted(topo: Topology, strategy: AggregationStrategy,
     counts = np.asarray(data_counts, dtype=np.float64)
     if counts.shape != (topo.n_nodes,):
         raise ValueError(f"data_counts shape {counts.shape} != ({topo.n_nodes},)")
-    mask = _neighborhood_mask(topo)
-    w = mask * counts[None, :]
-    return w / w.sum(axis=1, keepdims=True)
+    return masked_normalize(counts, _neighborhood_mask(topo))
 
 
 def random_coeffs(topo: Topology, strategy: AggregationStrategy,
                   data_counts: Optional[np.ndarray] = None) -> np.ndarray:
-    """Softmax(U(0,1)/τ) within each neighbourhood (fresh draw per call —
-    the paper redraws each round; the trainer re-invokes per round)."""
-    rng = np.random.default_rng(strategy.seed)
-    scores = rng.uniform(size=topo.n_nodes)
-    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+    """Softmax(U(0,1)/τ) within each neighbourhood.
+
+    The draw is FULLY determined by ``strategy.seed`` — calling this twice
+    with the same strategy returns the same matrix.  The paper's per-round
+    redraw comes from seed mixing (:func:`random_round_seed`), applied by
+    ``round_coeffs`` / ``AggregationStrategy.matrix(round_idx=...)`` before
+    this function runs — never from this function itself.
+    """
+    return _masked_softmax(strategy_scores(topo, strategy),
+                           _neighborhood_mask(topo), strategy.tau)
 
 
 def fl(topo: Topology, strategy: AggregationStrategy,
@@ -124,22 +176,49 @@ def fl(topo: Topology, strategy: AggregationStrategy,
 
 
 # ----------------------------------------------------------------------
+# per-node score vectors — the *data* half of the softmax-scaled rule,
+# shared with the device-side coefficient programs (repro.core.coeffs
+# loads these as nominal scores into CoeffProgram state)
+# ----------------------------------------------------------------------
+_SCORE_FNS: Dict[str, Callable[[Topology, "AggregationStrategy"], np.ndarray]] = {
+    # degree / (n-1): networkx normalization — scores in [0,1] to match
+    # betweenness; raw integer degrees at τ=0.1 would be winner-take-all,
+    # contradicting the paper's Fig. 3 soft coefficients.
+    "degree": lambda t, s: t.degree() / max(t.n_nodes - 1, 1),
+    "betweenness": lambda t, s: t.betweenness(),
+    "eigenvector": lambda t, s: t.eigenvector(),
+    # pagerank mass is O(1/n); rescale to [0,1] like the other metrics
+    "pagerank": lambda t, s: t.pagerank() / t.pagerank().max(),
+    "closeness": lambda t, s: t.closeness(),
+    "random": lambda t, s: np.random.default_rng(s.seed).uniform(
+        size=t.n_nodes),
+}
+
+
+def strategy_scores(topo: Topology, strategy: AggregationStrategy) -> np.ndarray:
+    """(n,) per-node scores R_j for the softmax-scaled strategies."""
+    if strategy.kind not in _SCORE_FNS:
+        raise KeyError(f"strategy {strategy.kind!r} has no score vector; "
+                       f"softmax-scored kinds: {sorted(_SCORE_FNS)}")
+    return np.asarray(_SCORE_FNS[strategy.kind](topo, strategy),
+                      dtype=np.float64)
+
+
+# ----------------------------------------------------------------------
 # topology-aware strategies (paper §4)
 # ----------------------------------------------------------------------
 def degree(topo: Topology, strategy: AggregationStrategy,
            data_counts: Optional[np.ndarray] = None) -> np.ndarray:
-    """R_j = degree centrality of j (degree / (n-1), the networkx
-    normalization — scores in [0,1] to match betweenness; with raw integer
-    degrees τ=0.1 would be winner-take-all, contradicting the paper's
-    Fig. 3 which shows soft coefficients); C[i,·] = softmax_{N_i}(R/τ)."""
-    scores = topo.degree() / max(topo.n_nodes - 1, 1)
-    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+    """R_j = degree centrality of j; C[i,·] = softmax_{N_i}(R/τ)."""
+    return _masked_softmax(strategy_scores(topo, strategy),
+                           _neighborhood_mask(topo), strategy.tau)
 
 
 def betweenness(topo: Topology, strategy: AggregationStrategy,
                 data_counts: Optional[np.ndarray] = None) -> np.ndarray:
     """R_j = betweenness centrality(j); C[i,·] = softmax_{N_i}(R/τ)."""
-    return _masked_softmax(topo.betweenness(), _neighborhood_mask(topo), strategy.tau)
+    return _masked_softmax(strategy_scores(topo, strategy),
+                           _neighborhood_mask(topo), strategy.tau)
 
 
 # ----------------------------------------------------------------------
@@ -150,35 +229,24 @@ def eigenvector(topo: Topology, strategy: AggregationStrategy,
     """R_j = eigenvector centrality (global; weights neighbours by how
     central *their* neighbours are — a smoother global signal than
     betweenness)."""
-    import networkx as nx
-
-    ec = nx.eigenvector_centrality_numpy(topo.to_networkx())
-    scores = np.array([ec[i] for i in range(topo.n_nodes)])
-    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+    return _masked_softmax(strategy_scores(topo, strategy),
+                           _neighborhood_mask(topo), strategy.tau)
 
 
 def pagerank(topo: Topology, strategy: AggregationStrategy,
              data_counts: Optional[np.ndarray] = None) -> np.ndarray:
     """R_j = PageRank (random-walk stationary mass — directly measures how
     often gossip 'visits' a node)."""
-    import networkx as nx
-
-    pr = nx.pagerank(topo.to_networkx())
-    scores = np.array([pr[i] for i in range(topo.n_nodes)])
-    # pagerank mass is O(1/n); rescale to [0,1] like the other metrics
-    scores = scores / scores.max()
-    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+    return _masked_softmax(strategy_scores(topo, strategy),
+                           _neighborhood_mask(topo), strategy.tau)
 
 
 def closeness(topo: Topology, strategy: AggregationStrategy,
               data_counts: Optional[np.ndarray] = None) -> np.ndarray:
     """R_j = closeness centrality (inverse mean hop distance — how few hops
     knowledge needs from j to anyone)."""
-    import networkx as nx
-
-    cc = nx.closeness_centrality(topo.to_networkx())
-    scores = np.array([cc[i] for i in range(topo.n_nodes)])
-    return _masked_softmax(scores, _neighborhood_mask(topo), strategy.tau)
+    return _masked_softmax(strategy_scores(topo, strategy),
+                           _neighborhood_mask(topo), strategy.tau)
 
 
 # ----------------------------------------------------------------------

@@ -12,9 +12,15 @@ device dispatch (DESIGN.md §7).
 Inputs per experiment (leading axis E):
 
 * ``params0``   — stacked initial node models, leaves ``(E, n, ...)``;
-* ``coeffs``    — ``(E, R, n, n)`` per-round mixing matrices
-  (:func:`repro.core.decentralized.coeffs_stack`; Random resampling and
-  ``core.dynamic`` link-failure schedules are just different stacks);
+* ``coeffs``    — EITHER an ``(E, R, n, n)`` stack of per-round mixing
+  matrices (:func:`repro.core.decentralized.coeffs_stack`; Random
+  resampling and ``core.dynamic`` link-failure schedules are just
+  different stacks) OR a :class:`repro.core.coeffs.ProgramCoeffs` — a
+  device-side coefficient program plus compact per-experiment state
+  (leaves ``(E, ...)``, ~n² floats instead of R·n²), whose matrices are
+  generated *inside* the scan (DESIGN.md §9; required for reactive
+  link-failure strategies, bit-identical to the materialized stack for
+  everything else);
 * ``data_idx``  — ``(E,)`` row into the shared data bank;
 * ``test_iid`` / ``test_ood`` — per-experiment test batches, leaves
   ``(E, b, ...)``.
@@ -60,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.coeffs import CoeffProgram, ProgramCoeffs
 from repro.core.decentralized import (
     DecentralizedConfig,
     RoundMetrics,
@@ -167,6 +174,11 @@ class SweepEngine:
       config: round/epoch counts; ``mix_impl="pallas"`` routes aggregation
         through ``kernels.gossip_mix``; ``unroll_eval=True`` makes
         :meth:`run` default to the incremental per-round loop.
+      mix_support: required by ``mix_impl="sparse"`` — the (n, n) union
+        support mask fixing the ring-offset schedule.  :meth:`run`
+        validates every grid's coefficients against the schedule's
+        coverage and raises rather than let off-schedule weight be
+        silently dropped.
     """
 
     def __init__(
@@ -175,20 +187,55 @@ class SweepEngine:
         loss_fn: Callable,
         eval_fn: Callable,
         config: DecentralizedConfig = DecentralizedConfig(),
+        mix_support: Optional[np.ndarray] = None,
     ):
         self.optimizer = optimizer
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn
         self.config = config
+        self._mix_support = mix_support
         self._round_fn = make_round_fn(
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
-            config.epoch_shuffle)
+            config.epoch_shuffle, mix_support=mix_support)
         self._run_jit = jax.jit(
-            self._run_impl, static_argnames=("batch_size",))
+            self._run_impl, static_argnames=("batch_size", "program"))
         self._round_jit = jax.jit(
-            self._one_round_impl, static_argnames=("batch_size", "do_eval"))
+            self._one_round_impl,
+            static_argnames=("batch_size", "do_eval", "program"))
         self._chunk_jit: Optional[Callable] = None
-        self._sharded_cache: Dict[Tuple[Any, int], Callable] = {}
+        self._sharded_cache: Dict[Tuple[Any, ...], Callable] = {}
+
+    # ------------------------------------------------------------------
+    def _check_sparse_support(self, coeffs, program, states) -> None:
+        """mix_impl='sparse' silently drops weight outside its static
+        ring-offset schedule (``mixing.mix_sparse``) — refuse grids whose
+        coefficients the caller-supplied ``mix_support`` cannot express
+        (sub-stochastic mixing would return quietly wrong results).  A
+        dense-fallback schedule covers everything, so no check applies."""
+        from repro.core.coeffs import PROGRAM_KINDS
+        from repro.core.decentralized import sparse_schedule
+
+        if self._mix_support is None:
+            return  # make_round_fn already raised in __init__
+        _, covered = sparse_schedule(self._mix_support)
+        if covered is None:
+            return  # fell back to mix_dense
+        if program is None:
+            used = np.asarray(
+                jnp.any(jnp.abs(coeffs) > 1e-12, axis=(0, 1)))
+        else:
+            adj = np.asarray(jax.tree.map(jnp.asarray, states)["adj"])
+            n = adj.shape[-1]
+            used = (np.abs(adj).max(axis=0) > 0) | np.eye(n, dtype=bool)
+            if np.any(np.asarray(states["kind"])
+                      == PROGRAM_KINDS.index("fl")):
+                used = np.ones_like(used)  # fl's matrix is dense 1/n
+        if np.any(used & ~covered):
+            raise ValueError(
+                "mix_impl='sparse': coefficients carry weight outside "
+                "the mix_support ring-offset schedule, which mix_sparse "
+                "would silently drop (sub-stochastic mixing); widen "
+                "mix_support or use mix_impl='einsum'")
 
     # ------------------------------------------------------------------
     def _eval(self, stacked_params, test_iid, test_ood):
@@ -197,27 +244,39 @@ class SweepEngine:
         return iid, ood
 
     def _experiment_scan(self, bank, batch_size, eval_mask, params, opt,
-                         coeffs_e, idx_e, data_idx, test_iid, test_ood):
+                         coeffs_e, idx_e, data_idx, test_iid, test_ood,
+                         program=None, state_e=None):
         """All R rounds of ONE experiment (vmapped over E by the callers):
         :func:`repro.core.decentralized.make_scan_fn` with the per-round
-        batch realized as an in-scan gather from the shared bank."""
+        batch realized as an in-scan gather from the shared bank.  With a
+        ``program``, ``coeffs_e`` carries the (R,) absolute round indices
+        and each step's matrix is computed in-scan from ``state_e``."""
+        coeff_fn = (None if program is None
+                    else (lambda r: program.matrix(state_e, r)))
         scan_fn = make_scan_fn(
             self._round_fn, self._eval,
             make_batch=lambda ix: gather_round_batch(
-                bank, data_idx, ix, batch_size))
+                bank, data_idx, ix, batch_size),
+            coeff_fn=coeff_fn)
         return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
                        test_iid, test_ood)
 
     def _run_impl(self, params0, opt0, coeffs, indices, data_idx, eval_mask,
-                  bank, test_iid, test_ood, *, batch_size):
-        run_one = lambda p, o, c, ix, d, ti, to: self._experiment_scan(
-            bank, batch_size, eval_mask, p, o, c, ix, d, ti, to)
+                  bank, test_iid, test_ood, states, *, batch_size,
+                  program=None):
+        run_one = lambda p, o, c, ix, d, ti, to, st: self._experiment_scan(
+            bank, batch_size, eval_mask, p, o, c, ix, d, ti, to,
+            program, st)
         return jax.vmap(run_one)(
-            params0, opt0, coeffs, indices, data_idx, test_iid, test_ood)
+            params0, opt0, coeffs, indices, data_idx, test_iid, test_ood,
+            states)
 
     def _one_round_impl(self, params, opt, coeffs_r, idx_r, data_idx, bank,
-                        test_iid, test_ood, *, batch_size, do_eval):
-        def one(p, o, c, ix, d, ti, to):
+                        test_iid, test_ood, states, *, batch_size, do_eval,
+                        program=None):
+        def one(p, o, c, ix, d, ti, to, st):
+            if program is not None:
+                c = program.matrix(st, c)  # c is this round's index
             batch = gather_round_batch(bank, d, ix, batch_size)
             p, o, losses = self._round_fn(p, o, batch, c)
             if do_eval:
@@ -228,18 +287,20 @@ class SweepEngine:
             return p, o, losses, iid, ood
 
         return jax.vmap(one)(
-            params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood)
+            params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood,
+            states)
 
     # ------------------------------------------------------------------
     # sharded / chunked mode
     # ------------------------------------------------------------------
-    def _make_sharded_fn(self, mesh, batch_size: int) -> Callable:
+    def _make_sharded_fn(self, mesh, batch_size: int,
+                         program: Optional[CoeffProgram]) -> Callable:
         """``jit(shard_map(vmap_E(scan_R(...))))`` over the mesh's single
-        experiment axis.  Per-experiment inputs/outputs shard on E; the
-        sample bank and eval mask are replicated (every experiment reads
-        the full bank).  The (params, opt) carry is donated where the
-        backend supports it."""
-        key = (mesh, batch_size)
+        experiment axis.  Per-experiment inputs/outputs — including the
+        coefficient-program states — shard on E; the sample bank and eval
+        mask are replicated (every experiment reads the full bank).  The
+        (params, opt) carry is donated where the backend supports it."""
+        key = (mesh, batch_size, program)
         if key in self._sharded_cache:
             return self._sharded_cache[key]
         from jax.sharding import PartitionSpec as P
@@ -249,14 +310,15 @@ class SweepEngine:
         exp, rep = P(mesh.axis_names[0]), P()
 
         def body(params, opt, coeffs, idx, data_idx, eval_mask, bank,
-                 test_iid, test_ood):
+                 test_iid, test_ood, states):
             return self._run_impl(params, opt, coeffs, idx, data_idx,
                                   eval_mask, bank, test_iid, test_ood,
-                                  batch_size=batch_size)
+                                  states, batch_size=batch_size,
+                                  program=program)
 
         mapped = compat_shard_map(
             body, mesh,
-            in_specs=(exp, exp, exp, exp, exp, rep, rep, exp, exp),
+            in_specs=(exp, exp, exp, exp, exp, rep, rep, exp, exp, exp),
             out_specs=(exp, exp, exp, exp, exp))
         fn = jax.jit(
             mapped,
@@ -264,21 +326,25 @@ class SweepEngine:
         self._sharded_cache[key] = fn
         return fn
 
-    def _make_chunk_fn(self, batch_size: int) -> Callable:
+    def _make_chunk_fn(self, batch_size: int,
+                       program: Optional[CoeffProgram]) -> Callable:
         """Single-device chunk step: the scanned program with a donated
         (params, opt) carry, re-dispatched per round-chunk."""
         if self._chunk_jit is None:
             self._chunk_jit = jax.jit(
-                self._run_impl, static_argnames=("batch_size",),
+                self._run_impl, static_argnames=("batch_size", "program"),
                 donate_argnums=(0, 1) if donation_supported() else ())
-        return lambda *args: self._chunk_jit(*args, batch_size=batch_size)
+        return lambda *args: self._chunk_jit(
+            *args, batch_size=batch_size, program=program)
 
     def _run_sharded(self, params0, opt0, coeffs, idx, data_idx, eval_mask,
                      bank, test_iid, test_ood, batch_size, mesh,
-                     chunk_rounds: Optional[int]) -> SweepResult:
+                     chunk_rounds: Optional[int], states, program,
+                     ) -> SweepResult:
         """Sharded and/or chunked execution.  Bit-identical to the scanned
         path: padding rows are dropped, each chunk resumes the exact scan
-        carry, and per-shard programs are the same per-experiment math."""
+        carry (round indices stay absolute in program mode), and per-shard
+        programs are the same per-experiment math."""
         n_exp, rounds = coeffs.shape[:2]
         test_iid = jax.tree.map(jnp.asarray, test_iid)
         test_ood = jax.tree.map(jnp.asarray, test_ood)
@@ -286,10 +352,11 @@ class SweepEngine:
         if mesh is not None:
             n_dev = int(np.prod(list(mesh.shape.values())))
             pad = (-n_exp) % n_dev
-            params0, opt0, coeffs, idx, data_idx, test_iid, test_ood = (
+            (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
+             states) = (
                 pad_experiments(t, pad)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood))
+                          test_iid, test_ood, states))
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             exp_sh = NamedSharding(mesh, P(mesh.axis_names[0]))
@@ -298,18 +365,19 @@ class SweepEngine:
                 lambda x: jax.device_put(jnp.asarray(x), s), t)
             # device_put materializes fresh buffers laid out on the mesh,
             # so donating the carry never invalidates caller arrays.
-            params0, opt0, coeffs, idx, data_idx, test_iid, test_ood = (
+            (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
+             states) = (
                 put(t, exp_sh)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood))
+                          test_iid, test_ood, states))
             bank = put(bank, rep_sh)
-            fn = self._make_sharded_fn(mesh, batch_size)
+            fn = self._make_sharded_fn(mesh, batch_size, program)
         else:
             if donation_supported():
                 # chunk 0 would donate the caller's params0 — copy once
                 params0 = jax.tree.map(
                     lambda x: jnp.asarray(x).copy(), params0)
-            fn = self._make_chunk_fn(batch_size)
+            fn = self._make_chunk_fn(batch_size, program)
 
         chunk = chunk_rounds or rounds
         params, opt = params0, opt0
@@ -318,7 +386,8 @@ class SweepEngine:
             b = min(a + chunk, rounds)
             params, opt, l_c, iid_c, ood_c = fn(
                 params, opt, coeffs[:, a:b], idx[:, a:b], data_idx,
-                jnp.asarray(eval_mask[a:b]), bank, test_iid, test_ood)
+                jnp.asarray(eval_mask[a:b]), bank, test_iid, test_ood,
+                states)
             losses.append(np.asarray(l_c))
             iids.append(np.asarray(iid_c))
             oods.append(np.asarray(ood_c))
@@ -333,7 +402,7 @@ class SweepEngine:
     def run(
         self,
         params0,                      # pytree, leaves (E, n, ...)
-        coeffs: np.ndarray,           # (E, R, n, n)
+        coeffs,                       # (E, R, n, n) stack | ProgramCoeffs
         bank,                         # pytree, leaves (D, n, cap, ...)
         indices: np.ndarray,          # (D, R, n, S)
         data_idx: np.ndarray,         # (E,) rows into bank/indices
@@ -348,15 +417,37 @@ class SweepEngine:
         (None → use ``config.unroll_eval``).  ``mesh`` (from
         ``repro.launch.mesh.make_sweep_mesh``) shards the experiment axis
         across devices; ``chunk_rounds`` bounds device memory for long
-        schedules.  All modes are bit-identical."""
-        coeffs = jnp.asarray(coeffs, jnp.float32)
+        schedules.  All modes are bit-identical.
+
+        ``coeffs`` may be a :class:`repro.core.coeffs.ProgramCoeffs`
+        instead of an ``(E, R, n, n)`` stack: the per-round matrices are
+        then generated device-side inside the scan (all three modes; the
+        per-experiment program state shards on E like every other
+        per-experiment input), the round count comes from the ``indices``
+        schedule, and — for non-reactive programs — results are
+        bit-identical to running the materialized stack."""
+        program: Optional[CoeffProgram] = None
+        states: Any = {}
+        if isinstance(coeffs, ProgramCoeffs):
+            program = coeffs.program
+            states = jax.tree.map(jnp.asarray, coeffs.states)
+            n_exp = coeffs.n_experiments
+            rounds = int(np.asarray(indices).shape[1])
+            # the scanned xs: absolute int32 round indices, (E, R) so the
+            # existing chunk slicing / E-padding / E-sharding apply as-is
+            coeffs = jnp.broadcast_to(
+                jnp.arange(rounds, dtype=jnp.int32)[None], (n_exp, rounds))
+        else:
+            coeffs = jnp.asarray(coeffs, jnp.float32)
+            rounds = coeffs.shape[1]
+        if self.config.mix_impl == "sparse":
+            self._check_sparse_support(coeffs, program, states)
         data_idx = jnp.asarray(data_idx, jnp.int32)
         # (E, R, n, S): per-experiment index schedule, pre-gathered host-side
         # (tiny — int32; the sample bank itself stays (D, ...)-shaped).
         idx = jnp.asarray(np.asarray(indices, np.int32)[np.asarray(data_idx)])
         bank = jax.tree.map(jnp.asarray, bank)
         opt0 = jax.vmap(jax.vmap(self.optimizer.init))(params0)
-        rounds = coeffs.shape[1]
         eval_mask = np.zeros(rounds, bool)
         eval_mask[eval_round_indices(rounds, self.config.eval_every)] = True
 
@@ -369,30 +460,35 @@ class SweepEngine:
                     "cannot combine with unroll_eval=True")
             return self._run_unrolled(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
-                test_iid, test_ood, batch_size)
+                test_iid, test_ood, batch_size, states, program)
 
         if mesh is not None or chunk_rounds:
             return self._run_sharded(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
-                test_iid, test_ood, batch_size, mesh, chunk_rounds)
+                test_iid, test_ood, batch_size, mesh, chunk_rounds,
+                states, program)
 
         params, _, losses, iid, ood = self._run_jit(
             params0, opt0, coeffs, idx, data_idx, jnp.asarray(eval_mask),
-            bank, test_iid, test_ood, batch_size=batch_size)
+            bank, test_iid, test_ood, states, batch_size=batch_size,
+            program=program)
         return SweepResult(
             train_loss=np.asarray(losses), iid_acc=np.asarray(iid),
             ood_acc=np.asarray(ood), params=params,
             eval_every=self.config.eval_every)
 
     def _run_unrolled(self, params, opt, coeffs, idx, data_idx, eval_mask,
-                      bank, test_iid, test_ood, batch_size) -> SweepResult:
+                      bank, test_iid, test_ood, batch_size, states=None,
+                      program=None) -> SweepResult:
         """Escape hatch: per-round dispatch, incremental metrics."""
+        if states is None:
+            states = {}
         losses, iids, oods = [], [], []
         for r in range(coeffs.shape[1]):
             params, opt, l_r, iid_r, ood_r = self._round_jit(
                 params, opt, coeffs[:, r], idx[:, r], data_idx, bank,
-                test_iid, test_ood, batch_size=batch_size,
-                do_eval=bool(eval_mask[r]))
+                test_iid, test_ood, states, batch_size=batch_size,
+                do_eval=bool(eval_mask[r]), program=program)
             losses.append(np.asarray(l_r))
             iids.append(np.asarray(iid_r))
             oods.append(np.asarray(ood_r))

@@ -104,6 +104,40 @@ class Topology:
             )
         return cache["betweenness"]
 
+    def eigenvector(self) -> np.ndarray:
+        """Eigenvector centrality (principal adjacency eigenvector, unit
+        2-norm, nonnegative) — the reference the jnp power-method kernel in
+        ``repro.core.coeffs`` is property-tested against."""
+        cache = self._metric_cache
+        if "eigenvector" not in cache:
+            ec = nx.eigenvector_centrality_numpy(self.to_networkx())
+            cache["eigenvector"] = np.array(
+                [ec[i] for i in range(self.n_nodes)], dtype=np.float64
+            )
+        return cache["eigenvector"]
+
+    def pagerank(self) -> np.ndarray:
+        """PageRank mass (α=0.85, uniform personalization, networkx
+        semantics incl. dangling-node redistribution)."""
+        cache = self._metric_cache
+        if "pagerank" not in cache:
+            pr = nx.pagerank(self.to_networkx())
+            cache["pagerank"] = np.array(
+                [pr[i] for i in range(self.n_nodes)], dtype=np.float64
+            )
+        return cache["pagerank"]
+
+    def closeness(self) -> np.ndarray:
+        """Closeness centrality (Wasserman–Faust component-scaled form —
+        networkx's default — so disconnected graphs are well-defined)."""
+        cache = self._metric_cache
+        if "closeness" not in cache:
+            cc = nx.closeness_centrality(self.to_networkx())
+            cache["closeness"] = np.array(
+                [cc[i] for i in range(self.n_nodes)], dtype=np.float64
+            )
+        return cache["closeness"]
+
     def modularity(self) -> float:
         """Greedy-community modularity (Clauset–Newman–Moore, as in paper)."""
         cache = self._metric_cache

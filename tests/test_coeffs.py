@@ -1,0 +1,283 @@
+"""Device-side coefficient programs (repro.core.coeffs, DESIGN.md §9).
+
+* jnp centrality kernels property-tested against the networkx values
+  cached on ``Topology`` across random BA/WS/SB graphs — including
+  disconnected subgraphs produced by ``core.dynamic.drop_edges``;
+* the shared score→masked-softmax rule agrees between numpy and jnp;
+* non-reactive programs reproduce the legacy host matrices;
+* link-failure / reactive semantics (PRNG folding, p_fail edge cases).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis import given, settings, st  # optional dep; skips if absent
+
+from repro.core.coeffs import (
+    CENTRALITY_KINDS,
+    PROGRAM_KINDS,
+    closeness_centrality,
+    degree_centrality,
+    eigenvector_centrality,
+    pagerank_centrality,
+    program_for,
+    stack_states,
+    state_nbytes,
+)
+from repro.core.dynamic import drop_edges, edge_mask
+from repro.core.strategies import (
+    AggregationStrategy,
+    masked_softmax,
+    mixing_matrix,
+    strategy_scores,
+)
+from repro.core.topology import (
+    Topology,
+    barabasi_albert,
+    ring,
+    stochastic_block,
+    watts_strogatz,
+)
+
+
+def _graph(family: str, seed: int) -> Topology:
+    if family == "ba":
+        return barabasi_albert(14, 2, seed=seed)
+    if family == "ws":
+        return watts_strogatz(12, 4, 0.5, seed=seed)
+    return stochastic_block(13, 3, 0.5, 0.05, seed=seed)
+
+
+# ----------------------------------------------------------------------
+# jnp kernels vs the networkx values cached on Topology
+# ----------------------------------------------------------------------
+def _check_kernels_match_networkx(topo: Topology):
+    adj = jnp.asarray(topo.adjacency, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(degree_centrality(adj)),
+        topo.degree() / (topo.n_nodes - 1), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(eigenvector_centrality(adj, iters=500)),
+        topo.eigenvector(), atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(pagerank_centrality(adj)), topo.pagerank(), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(closeness_centrality(adj)), topo.closeness(), atol=1e-5)
+
+
+def _check_kernels_on_disconnected(surv: Topology):
+    """degree / exact hop-count closeness / pagerank (dangling-node
+    redistribution) match networkx even disconnected; eigenvector stays
+    finite, nonnegative, unit-norm (nx's dense eig on disconnected graphs
+    is ambiguous up to component choice, so only invariants hold)."""
+    adj = jnp.asarray(surv.adjacency, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(degree_centrality(adj)),
+        surv.degree() / (surv.n_nodes - 1), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(closeness_centrality(adj)), surv.closeness(), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(pagerank_centrality(adj)), surv.pagerank(), atol=1e-4)
+    ev = np.asarray(eigenvector_centrality(adj, iters=300))
+    assert np.all(np.isfinite(ev)) and np.all(ev >= -1e-7)
+    assert np.isclose(np.linalg.norm(ev), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("family", ["ba", "ws", "sb"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kernels_match_networkx(family, seed):
+    """Deterministic sweep (runs even without hypothesis — the @given
+    variants below widen the seed space when it is installed)."""
+    _check_kernels_match_networkx(_graph(family, seed))
+
+
+@pytest.mark.parametrize("family", ["ba", "ws", "sb"])
+@pytest.mark.parametrize("p_fail", [0.3, 0.7])
+def test_kernels_on_disconnected_subgraphs(family, p_fail):
+    surv = drop_edges(_graph(family, 0), p_fail,
+                      np.random.default_rng(3))
+    _check_kernels_on_disconnected(surv)
+
+
+@given(family=st.sampled_from(["ba", "ws", "sb"]), seed=st.integers(0, 12))
+@settings(max_examples=12, deadline=None)
+def test_property_kernels_match_networkx(family, seed):
+    """Connected random graphs: all four kernels within f32/power-method
+    tolerance of the cached networkx references."""
+    _check_kernels_match_networkx(_graph(family, seed))
+
+
+@given(family=st.sampled_from(["ba", "ws", "sb"]), seed=st.integers(0, 12),
+       p_fail=st.sampled_from([0.3, 0.6, 0.9]))
+@settings(max_examples=12, deadline=None)
+def test_property_kernels_on_disconnected_subgraphs(family, seed, p_fail):
+    surv = drop_edges(_graph(family, seed), p_fail,
+                      np.random.default_rng(seed * 7 + 1))
+    _check_kernels_on_disconnected(surv)
+
+
+def test_closeness_isolated_node_scores_zero():
+    a = np.zeros((5, 5))
+    a[0, 1] = a[1, 0] = a[1, 2] = a[2, 1] = 1.0  # path 0-1-2; 3,4 isolated
+    cc = np.asarray(closeness_centrality(jnp.asarray(a, jnp.float32)))
+    topo = Topology(a)
+    np.testing.assert_allclose(cc, topo.closeness(), atol=1e-6)
+    assert cc[3] == cc[4] == 0.0
+
+
+def test_eigenvector_zero_adjacency_stays_uniform():
+    ev = np.asarray(eigenvector_centrality(jnp.zeros((6, 6)), iters=50))
+    np.testing.assert_allclose(ev, np.full(6, 1 / np.sqrt(6)), atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# shared masked-softmax rule: numpy path == jnp path
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 20), tau=st.floats(0.05, 5.0))
+@settings(max_examples=15, deadline=None)
+def test_property_masked_softmax_numpy_vs_jnp(seed, tau):
+    topo = barabasi_albert(10, 2, seed=seed)
+    mask = topo.adjacency + np.eye(10)
+    scores = np.random.default_rng(seed).uniform(size=10)
+    host = masked_softmax(scores, mask, tau, xp=np)
+    dev = np.asarray(masked_softmax(
+        jnp.asarray(scores, jnp.float32), jnp.asarray(mask, jnp.float32),
+        jnp.float32(tau), xp=jnp))
+    np.testing.assert_allclose(host, dev, atol=1e-6)
+    np.testing.assert_allclose(host.sum(1), 1.0, atol=1e-9)
+    assert not ((dev > 1e-12) & (mask == 0)).any()
+
+
+# ----------------------------------------------------------------------
+# programs vs the legacy host matrices
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kind", PROGRAM_KINDS)
+def test_nonreactive_program_matches_host_matrix(kind):
+    topo = barabasi_albert(12, 2, seed=0)
+    strat = AggregationStrategy(kind, tau=0.1, seed=3)
+    counts = np.arange(1.0, 13.0)
+    program, state = program_for(topo, strat, data_counts=counts)
+    stack = program.materialize(state, rounds=3)
+    host = mixing_matrix(topo, strat, data_counts=counts)
+    assert stack.shape == (3, 12, 12)
+    np.testing.assert_allclose(stack.sum(axis=2), 1.0, atol=1e-6)
+    if kind == "random":
+        # same U(0,1)-softmax law, different PRNG (jax vs numpy): compare
+        # support and resampling, not values
+        assert not np.array_equal(stack[0], stack[1])
+        mask = topo.adjacency + np.eye(12)
+        assert not ((stack[0] > 1e-12) & (mask == 0)).any()
+    else:
+        np.testing.assert_allclose(stack[0], host, atol=5e-6)
+        np.testing.assert_array_equal(stack[0], stack[2])  # static in r
+
+
+def test_random_program_resample_flag():
+    topo = ring(6)
+    strat = AggregationStrategy("random", seed=5)
+    program, state = program_for(topo, strat, resample_random=False)
+    stack = program.materialize(state, rounds=3)
+    np.testing.assert_array_equal(stack[0], stack[1])
+    program, state = program_for(topo, strat, resample_random=True)
+    stack = program.materialize(state, rounds=3)
+    assert not np.array_equal(stack[0], stack[1])
+
+
+def test_link_failure_varies_per_round_and_is_deterministic():
+    topo = barabasi_albert(12, 2, seed=0)
+    strat = AggregationStrategy("degree", tau=0.1, seed=7)
+    program, state = program_for(topo, strat, p_fail=0.5, reactive=True)
+    a = program.materialize(state, rounds=4)
+    b = program.materialize(state, rounds=4)
+    np.testing.assert_array_equal(a, b)          # pure function of (state, r)
+    assert not np.array_equal(a[0], a[1])        # churn varies per round
+    mask = topo.adjacency + np.eye(12)
+    assert not ((a > 1e-12) & (mask[None] == 0)).any()  # support only shrinks
+    np.testing.assert_allclose(a.sum(axis=2), 1.0, atol=1e-6)
+
+
+def test_p_fail_one_collapses_to_local_training():
+    topo = barabasi_albert(8, 2, seed=1)
+    for kind in ("unweighted", "degree"):
+        program, state = program_for(
+            topo, AggregationStrategy(kind, tau=0.1, seed=0), p_fail=1.0,
+            reactive=True)
+        np.testing.assert_array_equal(
+            program.materialize(state, rounds=1)[0],
+            np.eye(8, dtype=np.float32))
+
+
+def test_edge_mask_symmetric_and_p0_keeps_all():
+    key = jax.random.key(0)
+    m = np.asarray(edge_mask(key, 9, 0.5))
+    np.testing.assert_array_equal(m, m.T)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(np.asarray(edge_mask(key, 9, 0.0)),
+                                  np.ones((9, 9)))
+
+
+def test_reactive_degree_recomputes_on_survivor():
+    """With every edge of a hub dropped, reactive degree must differ from
+    the nominal-score restriction: p_fail churns both, but only reactive
+    re-ranks neighbours by surviving degree."""
+    topo = barabasi_albert(14, 2, seed=2)
+    strat = AggregationStrategy("degree", tau=0.1, seed=11)
+    _, s_nom = program_for(topo, strat, p_fail=0.6, reactive=False)
+    p_rea, s_rea = program_for(topo, strat, p_fail=0.6, reactive=True)
+    p_nom, _ = program_for(topo, strat, p_fail=0.6, reactive=False)
+    nom = p_nom.materialize(s_nom, rounds=4)
+    rea = p_rea.materialize(s_rea, rounds=4)
+    assert not np.array_equal(nom, rea)
+
+
+# ----------------------------------------------------------------------
+# state construction / plumbing
+# ----------------------------------------------------------------------
+def test_program_for_validates_inputs():
+    topo = ring(5)
+    with pytest.raises(ValueError, match="data_counts"):
+        program_for(topo, AggregationStrategy("weighted"))
+    with pytest.raises(KeyError, match="no coefficient program"):
+        program_for(topo, AggregationStrategy("metropolis"))
+    with pytest.raises(ValueError, match="shape"):
+        program_for(topo, AggregationStrategy("weighted"),
+                    data_counts=np.ones(3))
+
+
+def test_centrality_kinds_load_nominal_scores():
+    topo = barabasi_albert(10, 2, seed=0)
+    for kind in CENTRALITY_KINDS:
+        strat = AggregationStrategy(kind, tau=0.1)
+        _, state = program_for(topo, strat)
+        np.testing.assert_allclose(
+            state["scores"], strategy_scores(topo, strat), atol=1e-6)
+
+
+def test_strategy_matrix_round_idx_matches_round_coeffs():
+    """AggregationStrategy.matrix(round_idx=r) must return the SAME
+    matrix the trainer/engine consume for round r (round_coeffs) — for
+    Random that is the program's folded-PRNG draw, not a host redraw."""
+    from repro.core.decentralized import round_coeffs
+
+    topo = barabasi_albert(10, 2, seed=0)
+    for kind in ("random", "degree"):
+        strat = AggregationStrategy(kind, tau=0.1, seed=4)
+        for r in (0, 3):
+            np.testing.assert_array_equal(
+                strat.matrix(topo, round_idx=r),
+                round_coeffs(topo, strat, r))
+    # Random still redraws across rounds through the delegation
+    strat = AggregationStrategy("random", seed=4)
+    assert not np.array_equal(strat.matrix(topo, round_idx=0),
+                              strat.matrix(topo, round_idx=1))
+
+
+def test_stack_states_and_nbytes():
+    topo = ring(6)
+    states = [program_for(topo, AggregationStrategy("degree", seed=s))[1]
+              for s in (0, 1, 2)]
+    stacked = stack_states(states)
+    assert stacked["adj"].shape == (3, 6, 6)
+    assert stacked["seed"].shape == (3,)
+    # compact state: ~n² + O(n) floats per experiment, NOT R·n²
+    assert state_nbytes(states[0]) < 6 * 6 * 4 + 3 * 6 * 4 + 64

@@ -7,11 +7,18 @@ from tests._hypothesis import given, settings, st  # optional dep; skips if abse
 from repro.core.mixing import (
     circulant_decomposition,
     mix_dense,
+    mix_sparse,
     mix_sparse_host,
     mixing_collective_bytes,
+    sparse_offsets,
 )
 from repro.core.strategies import AggregationStrategy, mixing_matrix
-from repro.core.topology import barabasi_albert, ring
+from repro.core.topology import (
+    barabasi_albert,
+    ring,
+    stochastic_block,
+    watts_strogatz,
+)
 
 
 def _params(n, seed=0):
@@ -82,6 +89,180 @@ class TestCirculant:
         b = mixing_collective_bytes(16, 10**9, sched)
         assert b["sparse_bytes_per_node"] == 2 * 10**9
         assert b["dense_bytes_per_node"] == 15 * 10**9
+
+
+class TestMixImplSparse:
+    """make_mix_fn(mix_impl='sparse'): static offsets from the topology
+    support, per-call weights gathered from the traced matrix."""
+
+    TOPOS = [
+        lambda: barabasi_albert(14, 2, seed=1),
+        lambda: watts_strogatz(12, 4, 0.5, seed=2),
+        lambda: stochastic_block(13, 3, 0.5, 0.05, seed=3),
+        lambda: ring(10),
+    ]
+
+    @pytest.mark.parametrize("topo_i", range(4))
+    @pytest.mark.parametrize("kind", ["unweighted", "degree", "random"])
+    def test_matches_dense_on_topology_matrices(self, topo_i, kind):
+        from repro.core.decentralized import make_mix_fn
+
+        topo = self.TOPOS[topo_i]()
+        support = topo.adjacency + np.eye(topo.n_nodes)
+        c = mixing_matrix(topo, AggregationStrategy(kind, tau=0.1, seed=5))
+        # slack high enough that no BA/WS/SB case falls back to dense —
+        # this exercises the actual roll-and-accumulate schedule
+        mix = make_mix_fn("sparse", mix_support=support,
+                          sparse_slack=topo.n_nodes)
+        p = _params(topo.n_nodes)
+        d = mix_dense(p, jnp.asarray(c))
+        s = mix(p, jnp.asarray(c))
+        for k in p:
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(s[k]),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_sparse_offsets_cover_support(self):
+        topo = barabasi_albert(12, 2, seed=0)
+        support = topo.adjacency + np.eye(12)
+        offsets = sparse_offsets(support)
+        rows = np.arange(12)
+        covered = np.zeros_like(support)
+        for k in offsets:
+            covered[rows, (rows + k) % 12] = 1.0
+        assert np.all(covered >= support)
+
+    def test_mix_sparse_direct_ring(self):
+        topo = ring(8)
+        c = mixing_matrix(topo, AggregationStrategy("unweighted"))
+        offsets = sparse_offsets(topo.adjacency + np.eye(8))
+        assert sorted(offsets) == [0, 1, 7]
+        p = _params(8)
+        d = mix_dense(p, jnp.asarray(c))
+        s = mix_sparse(p, jnp.asarray(c), offsets)
+        for k in p:
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(s[k]),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_dense_fallback_when_offsets_exceed_max_degree(self):
+        """A bounded-degree graph whose edges hit many distinct ring
+        offsets: the decomposition would permute more than max degree +
+        slack times, so make_mix_fn returns mix_dense itself."""
+        from repro.core.decentralized import make_mix_fn
+
+        n = 16
+        a = np.zeros((n, n))
+        for i, j in [(0, 5), (1, 9), (2, 12), (3, 7), (4, 14), (6, 13),
+                     (8, 15), (10, 11)]:   # perfect matching, max degree 1
+            a[i, j] = a[j, i] = 1.0
+        support = a + np.eye(n)
+        assert len(sparse_offsets(support)) > 1 + 4  # many offsets
+        mix = make_mix_fn("sparse", mix_support=support, sparse_slack=4)
+        assert mix is mix_dense
+
+    def test_sparse_requires_support(self):
+        from repro.core.decentralized import make_mix_fn
+
+        with pytest.raises(ValueError, match="mix_support"):
+            make_mix_fn("sparse")
+
+    def test_trainer_sparse_fl_uses_full_support(self):
+        """FL's dense 1/n matrix has weight outside the topology
+        neighbourhoods — the trainer must hand mix_impl='sparse' FULL
+        support (every ring offset present) so no mass is silently
+        dropped; the run matches einsum to accumulation-order
+        tolerance."""
+        import dataclasses as dc
+
+        from tests.test_sweep import CFG, _run_mlp
+
+        cfg = dc.replace(CFG, rounds=2, eval_every=1)
+        p_e, _ = _run_mlp(AggregationStrategy("fl"), cfg)
+        p_s, _ = _run_mlp(AggregationStrategy("fl"),
+                          dc.replace(cfg, mix_impl="sparse"))
+        for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_engine_rejects_off_support_coefficients(self):
+        """SweepEngine(mix_impl='sparse') must refuse grids whose
+        coefficients exceed the mix_support schedule instead of silently
+        mixing sub-stochastically — both for slabs and for programs with
+        an fl cell."""
+        from repro.core.coeffs import ProgramCoeffs, program_for, stack_states
+        from repro.core.decentralized import DecentralizedConfig
+        from repro.core.sweep import SweepEngine
+        from repro.training.optimizer import sgd
+        from tests.test_sweep import _eval_fn, _loss_fn, _mlp_init
+
+        topo = ring(4)
+        cfg = DecentralizedConfig(rounds=2, local_epochs=1, eval_every=1,
+                                  mix_impl="sparse", epoch_shuffle=False)
+        engine = SweepEngine(sgd(1e-2), _loss_fn, _eval_fn, cfg,
+                             mix_support=topo.adjacency + np.eye(4))
+        p0 = jax.tree.map(lambda x: jnp.asarray(x)[None], _mlp_init(0))
+        params0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (1, 4) + x.shape[1:]), p0)
+        bank = {"x": np.zeros((1, 4, 8, 5), np.float32),
+                "y": np.zeros((1, 4, 8, 2), np.float32)}
+        indices = np.zeros((1, 2, 4, 4), np.int32)
+        data_idx = np.zeros(1, np.int32)
+        tb = {"x": np.zeros((1, 8, 5), np.float32),
+              "y": np.zeros((1, 8, 2), np.float32)}
+        run = lambda c: engine.run(params0, c, bank, indices, data_idx,
+                                   tb, tb, batch_size=4)
+        fl_slab = np.full((1, 2, 4, 4), 0.25, np.float32)
+        with pytest.raises(ValueError, match="mix_support"):
+            run(fl_slab)
+        _, state = program_for(topo, AggregationStrategy("fl"))
+        with pytest.raises(ValueError, match="mix_support"):
+            run(ProgramCoeffs(program_for(topo, AggregationStrategy("fl"))[0],
+                              stack_states([state])))
+        # in-support coefficients pass the guard and run
+        ok = engine.run(
+            params0,
+            np.broadcast_to(
+                mixing_matrix(topo, AggregationStrategy("unweighted"))
+                .astype(np.float32), (1, 2, 4, 4)).copy(),
+            bank, indices, data_idx, tb, tb, batch_size=4)
+        assert ok.train_loss.shape == (1, 2, 4)
+
+    def test_fl_support_drops_no_mass(self):
+        """Regression: with neighbour-only support, mix_sparse on FL's
+        matrix would return sub-stochastic rows; full support keeps the
+        exact full average."""
+        topo = ring(6)
+        c = mixing_matrix(topo, AggregationStrategy("fl"))
+        full = sparse_offsets(np.ones((6, 6)))
+        p = _params(6)
+        out = mix_sparse(p, jnp.asarray(c), full)
+        for k in p:
+            expected = np.broadcast_to(
+                np.asarray(p[k]).mean(0, keepdims=True), p[k].shape)
+            np.testing.assert_allclose(np.asarray(out[k]), expected,
+                                       rtol=1e-5, atol=1e-6)
+        # neighbour-only support on FL would drop mass — guard the guard
+        nbr = sparse_offsets(topo.adjacency + np.eye(6))
+        bad = mix_sparse({"x": jnp.ones((6, 2))}, jnp.asarray(c), nbr)
+        assert np.all(np.asarray(bad["x"]) < 0.99)
+
+    def test_trainer_sparse_impl_matches_einsum(self):
+        """DecentralizedConfig(mix_impl='sparse') wires the topology
+        support through make_round_fn — same run as einsum to f32
+        tolerance."""
+        import dataclasses as dc
+
+        from tests.test_sweep import CFG, _run_mlp
+
+        strat = AggregationStrategy("degree", tau=0.1)
+        cfg = dc.replace(CFG, rounds=2, eval_every=1)
+        p_e, h_e = _run_mlp(strat, cfg)
+        p_s, h_s = _run_mlp(strat, dc.replace(cfg, mix_impl="sparse"))
+        for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+        for ma, mb in zip(h_e, h_s):
+            np.testing.assert_allclose(ma.train_loss, mb.train_loss,
+                                       rtol=1e-5, atol=1e-6)
 
 
 @given(n=st.integers(4, 16), seed=st.integers(0, 10))

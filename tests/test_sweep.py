@@ -136,7 +136,9 @@ def test_coeffs_stack_random_resamples_per_round():
                          ROUNDS)
     assert stack.shape == (ROUNDS, N, N)
     assert not np.array_equal(stack[0], stack[1])
-    np.testing.assert_allclose(stack.sum(axis=2), 1.0, atol=1e-9)
+    # coeffs_stack materializes the float32 device-side coefficient
+    # program (core/coeffs.py) — rows are stochastic to f32 precision
+    np.testing.assert_allclose(stack.sum(axis=2), 1.0, atol=1e-6)
 
 
 def test_eval_round_indices_matches_legacy_rule():

@@ -1,0 +1,163 @@
+"""Coefficient programs through the sweep engine (DESIGN.md §9): the
+program-driven path must be BIT-IDENTICAL to running the materialized
+``(E, R, n, n)`` stack in every execution mode (scanned / unrolled /
+chunked / sharded via a 1-device mesh — the 8-device version lives in
+tests/test_sweep_sharded.py), and the in-scan reactive link-failure
+ablation must equal the legacy host loop consuming the same programs'
+materialized matrices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coeffs import ProgramCoeffs, program_for, stack_states
+from repro.core.decentralized import DecentralizedConfig, stack_params
+from repro.core.strategies import AggregationStrategy
+from repro.core.sweep import SweepEngine
+from repro.core.topology import ring
+from repro.data.distribution import node_datasets
+from repro.data.pipeline import NodeBatcher, make_test_batch
+from repro.data.synthetic import make_dataset
+from repro.training.optimizer import sgd
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def grid():
+    """E=4 mnist grid (3 static strategies + 1 reactive link-failure)
+    as engine inputs, plus the per-experiment (program, state) pairs."""
+    from repro.data.backdoor import backdoored_testset
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
+
+    train = make_dataset("mnist", 400, seed=0)
+    test = make_dataset("mnist", 100, seed=9)
+    cfg = DecentralizedConfig(rounds=4, local_epochs=2, eval_every=2)
+    topo = ring(N)
+    parts = node_datasets(train, N, ood_node=0, q=0.10, seed=0)
+    nb = NodeBatcher(parts, batch_size=8, steps_per_epoch=2, seed=0,
+                     local_epochs=2)
+    tb = make_test_batch(test, 32, seed=0)
+    ob = make_test_batch(backdoored_testset(test, seed=0), 32, seed=0)
+
+    cells = [("unweighted", 0.0), ("random", 0.0), ("degree", 0.0),
+             ("degree", 0.5)]
+    progstates = [
+        program_for(topo, AggregationStrategy(k, tau=0.1, seed=e),
+                    data_counts=nb.data_counts(), p_fail=pf)
+        for e, (k, pf) in enumerate(cells)]
+    program = progstates[0][0]
+    states = stack_states([s for _, s in progstates])
+    stacks = np.stack([p.materialize(s, cfg.rounds) for p, s in progstates])
+
+    bank = {k: v[None] for k, v in nb.sample_bank().items()}
+    indices = nb.all_round_indices(cfg.rounds)[None]
+    data_idx = np.zeros(len(cells), np.int32)
+    params0 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[stack_params([ffn_init(jax.random.key(0))] * N)] * len(cells))
+    st = lambda t: {k: jnp.stack([jnp.asarray(t[k])] * len(cells))
+                    for k in t}
+    engine = SweepEngine(sgd(1e-2), classifier_loss(ffn_apply),
+                         classifier_accuracy(ffn_apply), cfg)
+    run = lambda coeffs, **kw: engine.run(
+        params0, coeffs, bank, indices, data_idx, st(tb), st(ob),
+        batch_size=8, **kw)
+    return run, ProgramCoeffs(program, states), stacks
+
+
+def _assert_results_equal(a, b):
+    np.testing.assert_array_equal(a.train_loss, b.train_loss)
+    np.testing.assert_array_equal(a.iid_acc, b.iid_acc)
+    np.testing.assert_array_equal(a.ood_acc, b.ood_acc)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_program_matches_stack_scanned(grid):
+    run, pc, stacks = grid
+    _assert_results_equal(run(pc), run(stacks))
+
+
+def test_program_matches_stack_unrolled(grid):
+    run, pc, stacks = grid
+    _assert_results_equal(run(pc, unroll_eval=True), run(stacks))
+
+
+def test_program_matches_stack_chunked(grid):
+    """chunk_rounds=3 over R=4 — the trailing partial chunk must keep
+    ABSOLUTE round indices (PRNG folding depends on them)."""
+    run, pc, stacks = grid
+    _assert_results_equal(run(pc, chunk_rounds=3), run(stacks))
+
+
+def test_program_matches_stack_sharded_mesh1(grid):
+    """In-process shard_map over a 1-device mesh with program state on
+    the experiment axis (E=4 pads/shards like any per-experiment
+    input)."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    run, pc, stacks = grid
+    ref = run(stacks)
+    _assert_results_equal(run(pc, mesh=make_sweep_mesh(1)), ref)
+    _assert_results_equal(
+        run(pc, mesh=make_sweep_mesh(1), chunk_rounds=3), ref)
+
+
+def test_trainer_stack_equals_engine_program(grid):
+    """DecentralizedTrainer consuming coeffs_stack (now the materialized
+    program) == the engine's in-scan program path, per experiment."""
+    run, pc, stacks = grid
+    res = run(pc)
+    # experiment 2 is plain degree: reproduce with the trainer API
+    from repro.core.decentralized import DecentralizedTrainer
+    from repro.data.backdoor import backdoored_testset
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
+
+    train = make_dataset("mnist", 400, seed=0)
+    test = make_dataset("mnist", 100, seed=9)
+    topo = ring(N)
+    parts = node_datasets(train, N, ood_node=0, q=0.10, seed=0)
+    nb = NodeBatcher(parts, batch_size=8, steps_per_epoch=2, seed=0,
+                     local_epochs=2)
+    tb = make_test_batch(test, 32, seed=0)
+    ob = make_test_batch(backdoored_testset(test, seed=0), 32, seed=0)
+    cfg = DecentralizedConfig(rounds=4, local_epochs=2, eval_every=2)
+    trainer = DecentralizedTrainer(
+        topo, AggregationStrategy("degree", tau=0.1, seed=2), sgd(1e-2),
+        classifier_loss(ffn_apply), classifier_accuracy(ffn_apply), cfg,
+        data_counts=nb.data_counts())
+    _, hist = trainer.run(
+        stack_params([ffn_init(jax.random.key(0))] * N),
+        lambda r: jax.tree.map(jnp.asarray, nb.round_batches(r)),
+        jax.tree.map(jnp.asarray, tb), jax.tree.map(jnp.asarray, ob))
+    want = res.history(2)
+    assert [m.round for m in hist] == [m.round for m in want]
+    for a, b in zip(hist, want):
+        np.testing.assert_array_equal(a.iid_acc, b.iid_acc)
+        np.testing.assert_array_equal(a.ood_acc, b.ood_acc)
+        np.testing.assert_array_equal(a.train_loss, b.train_loss)
+
+
+def test_ablation_linkfail_in_scan_equals_legacy_host_loop():
+    """benchmarks.ablations.run_link_failure: the in-scan reactive path
+    (coefficient programs inside the sweep engine) == the legacy host
+    loop consuming the SAME programs' materialized matrices."""
+    from benchmarks.ablations import run_link_failure
+    from benchmarks.common import BenchScale
+
+    tiny = BenchScale(n_train=400, n_test=100, rounds=3, local_epochs=1,
+                      batch=8, steps_per_epoch=2, eval_every=2, eval_n=32)
+    kw = dict(p_fails=(0.0, 0.5), strategies=("unweighted", "degree"),
+              seeds=(0,), scale=tiny, n_nodes=N, reactive=True,
+              log=lambda *_: None)
+    in_scan = run_link_failure(in_scan=True, **kw)
+    legacy = run_link_failure(in_scan=False, **kw)
+    assert len(in_scan) == len(legacy) == 4
+    for a, b in zip(in_scan, legacy):
+        assert (a["strategy"], a["p_fail"]) == (b["strategy"], b["p_fail"])
+        assert a["iid_auc"] == b["iid_auc"]
+        assert a["ood_auc"] == b["ood_auc"]

@@ -1,8 +1,10 @@
 """Device-sharded sweep engine vs scanned vs unrolled, on 8 forced CPU
 devices — the three execution modes must produce bit-identical results
 (DESIGN.md §8), including eval_every > 1, mix_impl="pallas", a
-link-failure coeffs stack, chunked rounds, and E-to-mesh padding (E=3
-experiments over 8 devices).
+link-failure coeffs stack, chunked rounds, E-to-mesh padding (E=3
+experiments over 8 devices), and in-scan coefficient programs (DESIGN.md
+§9: program state sharded on E, reactive link-failure cell, program ==
+materialized stack under shard_map).
 
 Runs in a subprocess because XLA_FLAGS must be set before jax initializes
 (the main pytest process must keep seeing 1 device — the device-count
@@ -86,6 +88,28 @@ SCRIPT = textwrap.dedent("""
         check(run(unroll_eval=True), ref, impl + "/unrolled")
         check(run(mesh=mesh), ref, impl + "/sharded")
         check(run(mesh=mesh, chunk_rounds=3), ref, impl + "/sharded+chunk")
+
+    # in-scan coefficient programs (DESIGN.md §9): per-experiment state
+    # shards on E exactly like a slab; program == materialized stack
+    # bit-for-bit under shard_map, incl. a reactive link-failure cell
+    from repro.core.coeffs import ProgramCoeffs, program_for, stack_states
+
+    ps = [program_for(topo, AggregationStrategy(k, tau=0.1, seed=e),
+                      data_counts=nb.data_counts(), p_fail=pf,
+                      reactive=True)
+          for e, (k, pf) in enumerate(
+              [("unweighted", 0.0), ("random", 0.0), ("degree", 0.5)])]
+    pc = ProgramCoeffs(ps[0][0], stack_states([s for _, s in ps]))
+    pstacks = np.stack([p.materialize(s, cfg.rounds) for p, s in ps])
+    engine = SweepEngine(sgd(1e-2), loss_fn, acc_fn, cfg)
+    run = lambda c, **kw: engine.run(
+        params0, c, bank, indices, data_idx, st(tb), st(ob),
+        batch_size=8, **kw)
+    pref = run(pstacks, mesh=mesh)
+    check(run(pc, mesh=mesh), pref, "programs/sharded")
+    check(run(pc, mesh=mesh, chunk_rounds=3), pref,
+          "programs/sharded+chunk")
+    check(run(pc), pref, "programs/scanned-vs-sharded-stack")
     print("SHARDED_SWEEP_OK")
 """)
 
