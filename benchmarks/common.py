@@ -35,8 +35,9 @@ from repro.core.decentralized import (
     coeffs_stack,
     stack_params,
 )
+from repro.core.analytics import AnalyticsSpec, analytics_summary
 from repro.core.sweep import SweepEngine
-from repro.core.propagation import accuracy_auc, propagation_summary
+from repro.core.propagation import per_node_auc, propagation_summary
 from repro.core.strategies import AggregationStrategy
 from repro.core.topology import Topology
 from repro.data.backdoor import backdoored_testset
@@ -84,6 +85,11 @@ class BenchScale:
 # rounds the system is dilution-limited rather than propagation-limited and
 # the topology trends invert (see EXPERIMENTS.md §Reproduction notes).
 QUICK = BenchScale(rounds=30, local_epochs=5, eval_every=5)
+
+#: accuracy level that counts as "OOD knowledge arrived" for the
+#: streaming arrival-round analytics (run_sweep_cells default; the
+#: BENCH_sweep.json analytics sections record whichever value ran).
+DEFAULT_ARRIVAL_THRESHOLD = 0.5
 FULL = BenchScale(n_train=20000, n_test=2000, rounds=40, local_epochs=5,
                   batch=32, steps_per_epoch=0, eval_every=4, eval_n=512)
 
@@ -122,12 +128,17 @@ def run_experiment(
     scale: BenchScale = QUICK,
     alpha_l: float = 1000.0,        # label-Dirichlet heterogeneity (paper B.2.1)
     alpha_s: float = 1000.0,
+    ood_ks: Optional[Tuple[int, ...]] = None,  # multi-source degree ranks
 ) -> Dict:
-    """One experimental cell → AUC summary dict."""
+    """One experimental cell → AUC summary dict.  ``ood_ks`` overrides
+    ``ood_k`` with a tuple of degree ranks hosting OOD data
+    simultaneously (same placement scheme as ``SweepCell.ood_ks``, so
+    the legacy loop stays a valid baseline for multi-source grids)."""
     t0 = time.time()
     train, test = _data(dataset, scale.n_train, scale.n_test, seed)
-    ood_node = topo.kth_highest_degree_node(ood_k)
-    parts = node_datasets(train, topo.n_nodes, ood_node=ood_node,
+    ood_nodes = tuple(topo.kth_highest_degree_node(k)
+                      for k in (ood_ks or (ood_k,)))
+    parts = node_datasets(train, topo.n_nodes, ood_node=ood_nodes,
                           q=0.10, seed=seed, alpha_l=alpha_l, alpha_s=alpha_s)
     nb = NodeBatcher(parts, batch_size=scale.batch,
                      steps_per_epoch=scale.steps_per_epoch, seed=seed,
@@ -155,12 +166,17 @@ def run_experiment(
         params, lambda r: jax.tree.map(jnp.asarray, nb.round_batches(r)),
         jax.tree.map(jnp.asarray, tb), jax.tree.map(jnp.asarray, ob))
 
-    summary = propagation_summary(hist, topo.adjacency, ood_node)
+    summary = propagation_summary(hist, topo.adjacency, ood_nodes)
     summary.update(
         dataset=dataset, topology=topo.name, strategy=strategy,
-        ood_k=ood_k, ood_node=ood_node, seed=seed,
+        ood_k=ood_k,
+        ood_node=(ood_nodes[0] if len(ood_nodes) == 1
+                  else list(ood_nodes)),
+        seed=seed,
         secs=round(time.time() - t0, 1),
     )
+    if ood_ks:
+        summary["ood_ks"] = list(ood_ks)
     return summary
 
 
@@ -182,6 +198,12 @@ class SweepCell:
     ``reactive`` recomputes centralities on the surviving subgraph
     in-scan — both realized by the cell's coefficient program
     (``repro.core.coeffs``; must agree across a compiled group).
+
+    ``ood_ks`` opens the multi-source scenario axis: a tuple of degree
+    ranks hosting OOD data simultaneously (each gets its own backdoored
+    subset — ``data.distribution.place_ood``).  When set it overrides the
+    single-source ``ood_k``; hop fields and arrival bins then use the
+    min-over-sources distance.
     """
 
     dataset: str
@@ -194,10 +216,21 @@ class SweepCell:
     sweep: Optional[tuple] = None
     p_fail: float = 0.0
     reactive: bool = False
+    ood_ks: Optional[Tuple[int, ...]] = None
 
     @property
     def label(self) -> str:
         return self.name or f"{self.dataset}/{self.topo.name}/{self.strategy}"
+
+    def ood_nodes(self) -> Tuple[int, ...]:
+        """The cell's OOD host node(s): ``ood_ks`` degree ranks when set,
+        else the single ``ood_k``-th highest-degree node."""
+        ranks = tuple(self.ood_ks) if self.ood_ks else (self.ood_k,)
+        nodes = tuple(self.topo.kth_highest_degree_node(k) for k in ranks)
+        if len(set(nodes)) != len(nodes):
+            raise ValueError(f"ood_ks {ranks} map to duplicate nodes "
+                             f"{nodes} on {self.topo.name}")
+        return nodes
 
 
 def linkfail_cells(
@@ -232,6 +265,36 @@ def linkfail_cells(
     return cells
 
 
+def multisource_cells(
+    datasets=("mnist",),
+    seeds=(0,),
+    n_nodes: int = 16,
+    strategies=("unweighted", "degree"),
+    source_counts=(1, 2, 4),
+    prefix: str = "multisource",
+) -> List[SweepCell]:
+    """Multi-source OOD grid (the ``benchmarks/sweep.py multisource``
+    preset): k backdoor sources on the k highest-degree nodes of per-seed
+    BA graphs, strategies × source counts.  Every source plants the SAME
+    trigger on its own backdoored subset, so the in-scan arrival-round
+    analytics measure how source multiplicity accelerates propagation
+    (min-over-sources hop fields)."""
+    from repro.core.topology import barabasi_albert
+
+    cells = []
+    for ds in datasets:
+        for seed in seeds:
+            topo = barabasi_albert(n_nodes, 2, seed=seed)
+            for strat in strategies:
+                for k in source_counts:
+                    cells.append(SweepCell(
+                        ds, topo, strat, seed=seed,
+                        ood_ks=tuple(range(1, k + 1)),
+                        name=f"{prefix}/{ds}/{strat}/k{k}",
+                        sweep=("sources", strat, k)))
+    return cells
+
+
 def group_cells(cells: List[SweepCell]) -> Dict[Tuple[str, int], List[int]]:
     """Cells sharing one compiled program: same dataset (model + sample
     shapes) and same node count (topology/coeffs shapes)."""
@@ -257,6 +320,8 @@ def run_sweep_cells(
     mesh=None,
     chunk_rounds: Optional[int] = None,
     coeff_mode: str = "stack",
+    analytics: bool = True,
+    arrival_threshold: float = DEFAULT_ARRIVAL_THRESHOLD,
     log=None,
 ) -> List[Dict]:
     """Evaluate a whole grid of cells through the sweep engine.
@@ -279,9 +344,18 @@ def run_sweep_cells(
     only the compact per-experiment program state and generates matrices
     in-scan — required memory-wise for long reactive sweeps, bit-identical
     to the stack otherwise.
+
+    ``analytics=True`` (default) threads the streaming accumulators
+    through the scan (DESIGN.md §10): each row gains an ``"analytics"``
+    sub-dict with the in-scan AUCs, arrival-round stats (hop-binned
+    against the cell's OOD source set at ``arrival_threshold``), and the
+    max per-node deviation from the host-side ``propagation.py`` oracle
+    (``stream_vs_host_max_dev`` — the equivalence the golden suite locks).
     """
     if coeff_mode not in ("stack", "program"):
         raise KeyError(f"coeff_mode {coeff_mode!r}; have 'stack', 'program'")
+    spec = (AnalyticsSpec(arrival_threshold=arrival_threshold)
+            if analytics else None)
     rows: List[Optional[Dict]] = [None] * len(cells)
     for (ds, n_nodes), idxs in group_cells(cells).items():
         t0 = time.time()
@@ -297,16 +371,16 @@ def run_sweep_cells(
         # with steps_per_epoch=0 each NodeBatcher would derive its own from
         # its median node size, so the first batcher's derivation is pinned
         # for the rest (index schedules must stack to a common S).
-        dconf: Dict[Tuple[int, int], int] = {}
+        dconf: Dict[Tuple[int, Tuple[int, ...]], int] = {}
         batchers, tbs, obs = [], [], []
         group_steps = scale.steps_per_epoch
         for i in idxs:
             cell = cells[i]
-            ood_node = cell.topo.kth_highest_degree_node(cell.ood_k)
-            key = (cell.seed, ood_node)
+            ood_nodes = cell.ood_nodes()
+            key = (cell.seed, ood_nodes)
             if key not in dconf:
                 train, test = _data(ds, scale.n_train, scale.n_test, cell.seed)
-                parts = node_datasets(train, n_nodes, ood_node=ood_node,
+                parts = node_datasets(train, n_nodes, ood_node=ood_nodes,
                                       q=0.10, seed=cell.seed,
                                       alpha_l=alpha_l, alpha_s=alpha_s)
                 nb = NodeBatcher(parts, batch_size=scale.batch,
@@ -346,8 +420,8 @@ def run_sweep_cells(
         init_cache: Dict[int, object] = {}
         for i in idxs:
             cell = cells[i]
-            ood_node = cell.topo.kth_highest_degree_node(cell.ood_k)
-            d = dconf[(cell.seed, ood_node)]
+            ood_nodes = cell.ood_nodes()
+            d = dconf[(cell.seed, ood_nodes)]
             data_idx.append(d)
             strategy = AggregationStrategy(cell.strategy, tau=cell.tau,
                                            seed=cell.seed)
@@ -374,7 +448,7 @@ def run_sweep_cells(
             p0s.append(stack_params([init_cache[cell.seed]] * n_nodes))
             t_iid.append(tbs[d])
             t_ood.append(obs[d])
-            metas.append((cell, ood_node))
+            metas.append((cell, ood_nodes))
 
         engine_coeffs = (ProgramCoeffs(program, stack_states(states))
                          if coeff_mode == "program" else np.stack(coeffs))
@@ -385,18 +459,35 @@ def run_sweep_cells(
             params0, engine_coeffs, bank, indices,
             np.asarray(data_idx), stack_tests(t_iid), stack_tests(t_ood),
             batch_size=scale.batch, unroll_eval=unroll_eval,
-            mesh=mesh, chunk_rounds=chunk_rounds)
+            mesh=mesh, chunk_rounds=chunk_rounds, analytics=spec)
 
         secs = time.time() - t0
-        for e, (i, (cell, ood_node)) in enumerate(zip(idxs, metas)):
+        for e, (i, (cell, ood_nodes)) in enumerate(zip(idxs, metas)):
+            hist = result.history(e)
             summary = propagation_summary(
-                result.history(e), cell.topo.adjacency, ood_node)
+                hist, cell.topo.adjacency, ood_nodes,
+                arrival_threshold=arrival_threshold)
             summary.update(
                 dataset=ds, topology=cell.topo.name, strategy=cell.strategy,
-                ood_k=cell.ood_k, ood_node=ood_node, seed=cell.seed,
+                ood_k=cell.ood_k,
+                ood_node=(ood_nodes[0] if len(ood_nodes) == 1
+                          else list(ood_nodes)),
+                seed=cell.seed,
                 secs=round(secs / len(idxs), 2), sweep_secs=round(secs, 1),
                 sweep_group_size=len(idxs),
             )
+            if cell.ood_ks:
+                summary["ood_ks"] = list(cell.ood_ks)
+            if result.analytics is not None:
+                stream = {k: v[e] for k, v in result.analytics.items()}
+                a = analytics_summary(stream, cell.topo.adjacency,
+                                      ood_nodes)
+                a["stream_vs_host_max_dev"] = float(max(
+                    np.abs(stream["iid_auc"]
+                           - per_node_auc(hist, "iid")).max(),
+                    np.abs(stream["ood_auc"]
+                           - per_node_auc(hist, "ood")).max()))
+                summary["analytics"] = a
             if cell.p_fail or cell.reactive:
                 summary.update(p_fail=cell.p_fail, reactive=cell.reactive)
             if cell.sweep is not None:

@@ -41,13 +41,20 @@ def run(datasets=("mnist",), n_nodes=16, ba_p=2, seeds=(0,),
 
 
 def verdict(rows) -> str:
-    """Spearman-ish check: OOD AUC non-increasing in placement rank k."""
+    """Spearman-ish check: OOD AUC non-increasing in placement rank k,
+    corroborated by the streaming arrival-round analytics (deeper
+    placement ⇒ knowledge arrives later, when the threshold is reached
+    at all)."""
     import numpy as np
 
     by_strat = {}
+    arrivals = {}
     for r in rows:
         by_strat.setdefault((r["dataset"], r["strategy"], r["seed"]), {})[
             r["ood_k"]] = r["ood_auc"]
+        arr = r.get("analytics", {}).get("ood_arrival_mean")
+        if arr is not None:
+            arrivals.setdefault(r["ood_k"], []).append(arr)
     trends = []
     for key, kmap in by_strat.items():
         ks = sorted(kmap)
@@ -56,9 +63,14 @@ def verdict(rows) -> str:
             -1.0 if aucs[0] >= aucs[-1] else 1.0)
         trends.append(corr)
     neg = sum(1 for t in trends if t < 0.1)
+    arrival_txt = ""
+    if arrivals:
+        ks = sorted(arrivals)
+        arrival_txt = ("; mean arrival round by rank " + ", ".join(
+            f"k{k}={np.mean(arrivals[k]):.1f}" for k in ks))
     return (f"fig5 claim (lower-degree placement ⇒ worse propagation): "
             f"{neg}/{len(trends)} strategy-cells show the negative trend "
-            f"(mean corr {np.mean(trends):.2f})")
+            f"(mean corr {np.mean(trends):.2f}){arrival_txt}")
 
 
 if __name__ == "__main__":

@@ -104,10 +104,18 @@ def verdict(deg_rows, mod_rows) -> str:
                      if r["strategy"] == "degree"])
     unaware = np.mean([r["ood_auc"] for r in deg_rows + mod_rows
                        if r["strategy"] == "unweighted"])
+    arrivals = [r["analytics"]["ood_arrival_mean"]
+                for r in deg_rows + mod_rows
+                if r.get("analytics", {}).get("ood_arrival_mean")
+                is not None]
+    arrival_txt = (f", mean OOD arrival round {np.mean(arrivals):.1f} "
+                   f"({len(arrivals)}/{len(deg_rows + mod_rows)} cells "
+                   f"reached threshold)" if arrivals else "")
     return (f"fig6 claims: degree-param corr {d_corr:+.2f} (paper: +), "
             f"modularity corr {m_corr:+.2f} (paper: −), "
             f"aware {aware:.3f} vs unaware {unaware:.3f} "
-            f"({'aware ≥ unaware ✓' if aware >= unaware - 0.02 else 'X'})")
+            f"({'aware ≥ unaware ✓' if aware >= unaware - 0.02 else 'X'})"
+            f"{arrival_txt}")
 
 
 if __name__ == "__main__":

@@ -177,6 +177,48 @@ register_preset(SweepPreset(
     _linkfail_build, _linkfail_verdict, seeds=(0,), programs=True))
 
 
+def _multisource_build(datasets, seeds, n_nodes):
+    """Multi-source OOD grid: k backdoor sources on the k highest-degree
+    nodes (strategies × source counts).  The in-scan arrival-round
+    analytics (DESIGN.md §10) read how source multiplicity shortens the
+    min-over-sources hop distances and accelerates propagation."""
+    from benchmarks.common import multisource_cells
+
+    return multisource_cells(datasets=datasets, seeds=seeds,
+                             n_nodes=n_nodes)
+
+
+def _multisource_verdict(rows):
+    mean = lambda xs: (sum(xs) / len(xs)) if xs else float("nan")
+    by_k: Dict[int, Dict[str, list]] = {}
+    for r in rows:
+        k = r["sweep"][2]
+        d = by_k.setdefault(k, {"auc": [], "arrival": []})
+        d["auc"].append(r["ood_auc"])
+        arr = r.get("analytics", {}).get("ood_arrival_mean")
+        if arr is not None:
+            d["arrival"].append(arr)
+    parts = []
+    for k in sorted(by_k):
+        d = by_k[k]
+        arr = (f"arrival≈{mean(d['arrival']):.1f}" if d["arrival"]
+               else "arrival=n/a")
+        parts.append(f"k={k}: ood_auc={mean(d['auc']):.3f} {arr}")
+    ks = sorted(by_k)
+    mono = all(mean(by_k[a]["auc"]) <= mean(by_k[b]["auc"]) + 0.02
+               for a, b in zip(ks, ks[1:]))
+    return ("multi-source OOD (more sources ⇒ faster propagation): "
+            + "; ".join(parts)
+            + f"  [monotone ✓]" * mono + "  [non-monotone X]" * (not mono))
+
+
+register_preset(SweepPreset(
+    "multisource",
+    "multi-source OOD placement (k sources × strategies, streaming "
+    "arrival-round analytics)",
+    _multisource_build, _multisource_verdict, seeds=(0,)))
+
+
 # ----------------------------------------------------------------------
 def plan(cells, scale) -> str:
     """The compiled-program plan for a cell grid — no jax work."""
@@ -185,9 +227,7 @@ def plan(cells, scale) -> str:
     lines = ["plan: group,experiments,distinct_datasets,rounds,"
              "est_bank_mib,cells"]
     for (ds, n), idxs in group_cells(cells).items():
-        dkeys = {(cells[i].seed,
-                  cells[i].topo.kth_highest_degree_node(cells[i].ood_k))
-                 for i in idxs}
+        dkeys = {(cells[i].seed, cells[i].ood_nodes()) for i in idxs}
         bank_mib = (len(dkeys) * scale.n_train
                     * _SAMPLE_BYTES.get(ds, 4096)) / 2**20
         names = ",".join(cells[i].label for i in idxs[:3])
@@ -208,8 +248,8 @@ def run_legacy_baseline(cells, scale, log=print) -> List[dict]:
     rows = []
     for cell in cells:
         r = run_experiment(cell.dataset, cell.topo, cell.strategy,
-                           ood_k=cell.ood_k, tau=cell.tau, seed=cell.seed,
-                           scale=scale)
+                           ood_k=cell.ood_k, ood_ks=cell.ood_ks,
+                           tau=cell.tau, seed=cell.seed, scale=scale)
         log(f"  legacy {cell.label}: {r['secs']}s "
             f"ood_auc={r['ood_auc']:.3f}")
         rows.append(r)
@@ -303,6 +343,40 @@ def main(argv: Optional[List[str]] = None) -> None:
           f"{engine_secs:.1f}s wall-clock "
           f"({engine_secs / len(cells):.2f}s/experiment amortized"
           f"{', in-scan coefficient programs' if preset.programs else ''})")
+
+    if rows and "analytics" in rows[0]:
+        # streaming-analytics record (DESIGN.md §10): in-scan vs host-
+        # oracle max deviation across the grid, arrival stats, and the
+        # metric-memory win of O(E·n) summaries over (E, R, n) histories.
+        from benchmarks.common import DEFAULT_ARRIVAL_THRESHOLD
+
+        devs = [r["analytics"]["stream_vs_host_max_dev"] for r in rows]
+        arrivals = [r["analytics"]["ood_arrival_mean"] for r in rows
+                    if r["analytics"]["ood_arrival_mean"] is not None]
+        history_bytes = len(cells) * scale.rounds * n_nodes * 3 * 4
+        summary_bytes = len(cells) * n_nodes * 7 * 4
+        bench_path = _update_bench(args.out, f"analytics/{preset.name}", {
+            "preset": preset.name,
+            "experiments": len(cells),
+            "rounds": scale.rounds,
+            "n_nodes": n_nodes,
+            "arrival_threshold": DEFAULT_ARRIVAL_THRESHOLD,
+            "max_stream_vs_host_dev": max(devs),
+            "mean_ood_arrival_round": (round(sum(arrivals) / len(arrivals),
+                                             2) if arrivals else None),
+            "rows_with_arrival": len(arrivals),
+            "history_metric_bytes": history_bytes,
+            "streaming_summary_bytes": summary_bytes,
+            "bytes_ratio": round(history_bytes / summary_bytes, 1),
+        })
+        apath = _extract_analytics(args.out)
+        print(f"streaming analytics: max in-scan vs host-oracle deviation "
+              f"{max(devs):.2e} over {len(cells)} experiments; "
+              f"summaries {summary_bytes / 2**10:.1f} KiB vs "
+              f"{history_bytes / 2**10:.1f} KiB of metric history "
+              f"({history_bytes / summary_bytes:.0f}× smaller)")
+        print(f"analytics record → {bench_path} (sections extracted to "
+              f"{apath})")
 
     if mesh is not None:
         # sharded-vs-single comparison → BENCH_sweep.json (perf trajectory)
@@ -417,6 +491,19 @@ def _update_bench(out_dir: str, section: str, payload: dict) -> str:
     bench[section] = payload
     json.dump(bench, open(path, "w"), indent=1)
     return path
+
+
+def _extract_analytics(out_dir: str) -> str:
+    """Mirror the ``analytics/*`` sections of BENCH_sweep.json into a
+    standalone ``BENCH_sweep_analytics.json`` — the artifact the CI golden
+    job uploads."""
+    path = f"{out_dir}/BENCH_sweep.json"
+    bench = json.load(open(path)) if os.path.exists(path) else {}
+    sections = {k: v for k, v in bench.items()
+                if k.startswith("analytics/")}
+    apath = f"{out_dir}/BENCH_sweep_analytics.json"
+    json.dump(sections, open(apath, "w"), indent=1)
+    return apath
 
 
 def _json_default(o):

@@ -36,8 +36,10 @@ from repro.core.decentralized import (
     unstack_params,
 )
 from repro.core.sweep import SweepEngine, SweepResult
+from repro.core.analytics import AnalyticsSpec, analytics_summary
 from repro.core.propagation import (
     accuracy_auc,
+    arrival_rounds,
     iid_ood_gap,
     propagation_summary,
 )

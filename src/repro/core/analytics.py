@@ -1,0 +1,170 @@
+"""Streaming propagation analytics — online accumulators inside the round
+scan (DESIGN.md §10).
+
+The paper's headline quantities (per-node accuracy-AUC, IID/OOD gap, and
+the round at which OOD knowledge *arrives* at each node — Figs. 2/5/6) were
+previously computed host-side by ``repro.core.propagation`` from full
+``(R, n)`` metric histories, which at sweep scale means materializing an
+``(E, R, n)`` device→host slab per metric.  This module computes the same
+numbers as **online accumulators threaded through the scan carry**:
+
+* **streaming trapezoid AUC** — the running trapezoid sum
+  ``Σ ½·(r_k − r_{k−1})·(a_k + a_{k−1})`` over the eval rounds the
+  ``eval_every`` mask keeps, finalized to the span-normalized mean height
+  exactly like :func:`repro.core.propagation.per_node_auc`;
+* **arrival round at threshold** — the first eval round at which a node's
+  accuracy reaches ``arrival_threshold`` (:data:`NO_ARRIVAL` if never),
+  matching :func:`repro.core.propagation.arrival_rounds`;
+* **IID/OOD gap** — derived from the two AUC accumulators at finalize.
+
+The carry is O(n) per experiment (a handful of ``(n,)`` f32/i32 leaves —
+see :meth:`AnalyticsSpec.init`), so ``SweepEngine.run(analytics=...,
+keep_history=False)`` returns per-experiment per-node summaries in
+O(E·n) memory without ever materializing ``(R, E, n)`` histories.  The
+host-side ``propagation.py`` functions remain the *oracle* this path is
+equivalence-tested against (tests/test_analytics.py, tests/test_golden.py,
+tests/test_sweep_sharded.py — to 1e-6 in all three execution modes).
+
+:class:`AnalyticsSpec` is a frozen (hashable) dataclass so it rides jit /
+shard_map as a static argument, exactly like ``coeffs.CoeffProgram``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.propagation import NO_ARRIVAL, arrival_by_hop, hops_from
+
+__all__ = ["AnalyticsSpec", "analytics_summary", "NO_ARRIVAL"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsSpec:
+    """Static configuration of the in-scan analytics accumulators.
+
+    ``arrival_threshold`` is the accuracy level that counts as "knowledge
+    arrived" for the arrival-round metric (applied to both the IID and the
+    OOD curve; the paper's propagation figures read the OOD one).
+    """
+
+    arrival_threshold: float = 0.5
+
+    # ------------------------------------------------------------------
+    # carry layout (DESIGN.md §10): O(n) per experiment
+    # ------------------------------------------------------------------
+    def init(self, n: int) -> Dict[str, jnp.ndarray]:
+        """Fresh accumulator carry for one experiment with n nodes."""
+        z = lambda shape, dt=jnp.float32: jnp.zeros(shape, dt)
+        return {
+            "count": z((), jnp.int32),        # eval observations so far
+            "first_round": z(()),             # round of the first eval
+            "prev_round": z(()),              # round of the latest eval
+            "prev_iid": z((n,)),              # latest per-node accuracies
+            "prev_ood": z((n,)),
+            "iid_auc_sum": z((n,)),           # running trapezoid sums
+            "ood_auc_sum": z((n,)),
+            "iid_arrival": jnp.full((n,), NO_ARRIVAL, jnp.int32),
+            "ood_arrival": jnp.full((n,), NO_ARRIVAL, jnp.int32),
+        }
+
+    def init_batch(self, n_experiments: int, n: int) -> Dict[str, jnp.ndarray]:
+        """Carry stacked over the sweep engine's E axis (leaves (E, ...))."""
+        one = self.init(n)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_experiments,) + x.shape), one)
+
+    # ------------------------------------------------------------------
+    def update(self, carry, round_idx, do_eval, iid, ood):
+        """Fold one scan step's eval into the carry.
+
+        ``round_idx`` is the ABSOLUTE round index (chunked execution
+        slices absolute indices, so chunk boundaries cannot shift the
+        stream); ``do_eval`` gates everything — skipped rounds (their
+        iid/ood are zeros from the gated eval) leave the carry untouched.
+        """
+        r = jnp.asarray(round_idx, jnp.float32)
+        r_i = jnp.asarray(round_idx, jnp.int32)
+        seen = carry["count"] > 0
+        # trapezoid increment needs a predecessor eval round
+        w = jnp.where(do_eval & seen, 0.5 * (r - carry["prev_round"]), 0.0)
+        sel = lambda new, old: jnp.where(do_eval, new, old)
+        arrive = lambda arr, acc: jnp.where(
+            do_eval & (arr == NO_ARRIVAL) & (acc >= self.arrival_threshold),
+            r_i, arr)
+        return {
+            "count": carry["count"] + jnp.asarray(do_eval, jnp.int32),
+            "first_round": jnp.where(do_eval & ~seen, r,
+                                     carry["first_round"]),
+            "prev_round": sel(r, carry["prev_round"]),
+            "prev_iid": sel(iid, carry["prev_iid"]),
+            "prev_ood": sel(ood, carry["prev_ood"]),
+            "iid_auc_sum": carry["iid_auc_sum"] + w * (iid + carry["prev_iid"]),
+            "ood_auc_sum": carry["ood_auc_sum"] + w * (ood + carry["prev_ood"]),
+            "iid_arrival": arrive(carry["iid_arrival"], iid),
+            "ood_arrival": arrive(carry["ood_arrival"], ood),
+        }
+
+    # ------------------------------------------------------------------
+    def finalize(self, carry) -> Dict[str, jnp.ndarray]:
+        """Carry → per-node summaries (the O(n) result the engine returns).
+
+        AUC normalization mirrors ``propagation.per_node_auc``: trapezoid
+        sum over the eval-round span, i.e. the mean height of the curve; a
+        single eval round degenerates to that round's accuracy.
+        """
+        span = carry["prev_round"] - carry["first_round"]
+        denom = jnp.where(span > 0, span, 1.0)
+        multi = carry["count"] > 1
+        iid_auc = jnp.where(multi, carry["iid_auc_sum"] / denom,
+                            carry["prev_iid"])
+        ood_auc = jnp.where(multi, carry["ood_auc_sum"] / denom,
+                            carry["prev_ood"])
+        return {
+            "iid_auc": iid_auc,
+            "ood_auc": ood_auc,
+            "gap_pct": 100.0 * (ood_auc - iid_auc)
+            / jnp.maximum(iid_auc, 1e-9),
+            "iid_arrival": carry["iid_arrival"],
+            "ood_arrival": carry["ood_arrival"],
+            "final_iid_acc": carry["prev_iid"],
+            "final_ood_acc": carry["prev_ood"],
+        }
+
+
+# ----------------------------------------------------------------------
+# host-side digest (benchmark rows, BENCH_sweep.json analytics sections)
+# ----------------------------------------------------------------------
+def analytics_summary(
+    stream: Dict[str, np.ndarray],
+    adjacency: Optional[np.ndarray] = None,
+    sources: Union[int, Sequence[int], None] = None,
+) -> Dict[str, object]:
+    """Digest ONE experiment's finalized per-node analytics into the
+    figure-level quantities: topology-mean AUCs, the mean-based IID/OOD
+    gap (matching ``propagation.iid_ood_gap``), arrival statistics, and —
+    given the adjacency plus the OOD source node(s) — mean arrival round
+    binned by (multi-source) hop distance.
+
+    Nodes that never reach the threshold report under ``n_no_arrival``
+    and are excluded from arrival means (``None`` marks an empty bin).
+    """
+    iid = float(np.mean(stream["iid_auc"]))
+    ood = float(np.mean(stream["ood_auc"]))
+    arr = np.asarray(stream["ood_arrival"])
+    arrived = arr != NO_ARRIVAL
+    out: Dict[str, object] = {
+        "iid_auc": iid,
+        "ood_auc": ood,
+        "iid_ood_gap_pct": 100.0 * (ood - iid) / max(iid, 1e-9),
+        "ood_arrival_mean": (float(arr[arrived].mean())
+                             if arrived.any() else None),
+        "n_no_arrival": int((~arrived).sum()),
+    }
+    if adjacency is not None and sources is not None:
+        out["ood_arrival_by_hop"] = arrival_by_hop(
+            arr, hops_from(adjacency, sources))
+    return out

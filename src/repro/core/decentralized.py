@@ -299,7 +299,9 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
 
 def make_scan_fn(round_fn: Callable, evaluate: Callable,
                  make_batch: Optional[Callable] = None,
-                 coeff_fn: Optional[Callable] = None) -> Callable:
+                 coeff_fn: Optional[Callable] = None,
+                 analytics=None,
+                 keep_history: bool = True) -> Callable:
     """Scan-over-rounds factory shared by ``DecentralizedTrainer`` (stacked
     batches) and ``repro.core.sweep`` (per-round index gather).
 
@@ -316,23 +318,46 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
     CoeffProgram.matrix(state, r)`` — so per-round matrices (Random
     resampling, reactive link failure) never materialize on the host.
 
+    ``analytics`` (a ``repro.core.analytics.AnalyticsSpec``) grows the
+    scan carry by the streaming-analytics accumulators (DESIGN.md §10):
+    every eval round is folded into O(n) online state (running trapezoid
+    AUC, arrival rounds) instead of — or in addition to — the stacked
+    ``(R, n)`` metric outputs.  The scan then consumes two extra inputs:
+    ``round_idx`` (the ``(R,)`` ABSOLUTE round indices, so chunked
+    execution cannot shift the stream) and ``analytics_carry`` (from
+    ``AnalyticsSpec.init``, threaded back out for chunk chaining).
+    ``keep_history=False`` (requires ``analytics``) drops the per-round
+    ys entirely — the scan's memory footprint for metrics becomes O(n).
+
     Returns ``scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
-    test_ood) → (params, opt, losses, iid, ood)`` — the carry comes back
-    out so callers can chain round-chunks (chunked mode donates it back
-    in, keeping device metric accumulators bounded at one chunk).
-    ``eval_mask`` gates eval to the rounds ``eval_every`` keeps; skipped
-    rounds report zeros.
+    test_ood[, round_idx, analytics_carry])`` →
+
+    * ``(params, opt, losses, iid, ood)`` — no analytics (unchanged);
+    * ``(params, opt, analytics_carry, losses, iid, ood)`` — analytics;
+    * ``(params, opt, analytics_carry)`` — analytics, no history.
+
+    The carry comes back out so callers can chain round-chunks (chunked
+    mode donates it back in, keeping device accumulators bounded at one
+    chunk).  ``eval_mask`` gates eval to the rounds ``eval_every`` keeps;
+    skipped rounds report zeros (and leave the analytics carry untouched).
     """
     if make_batch is None:
         make_batch = lambda b: b
+    if not keep_history and analytics is None:
+        raise ValueError("keep_history=False without an analytics spec "
+                         "would return no metrics at all")
 
     def scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
-                test_ood):
+                test_ood, round_idx=None, analytics_carry=None):
         n = jax.tree.leaves(params)[0].shape[0]
 
         def body(carry, xs):
-            p, o = carry
-            bx, c, do_eval = xs
+            if analytics is None:
+                p, o = carry
+                bx, c, do_eval = xs
+            else:
+                p, o, ac = carry
+                bx, c, do_eval, r_abs = xs
             if coeff_fn is not None:
                 c = coeff_fn(c)  # c is this step's absolute round index
             p, o, losses = round_fn(p, o, make_batch(bx), c)
@@ -341,11 +366,23 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
                 lambda q: evaluate(q, test_iid, test_ood),
                 lambda q: (jnp.zeros((n,)), jnp.zeros((n,))),
                 p)
-            return (p, o), (losses, iid, ood)
+            if analytics is None:
+                return (p, o), (losses, iid, ood)
+            ac = analytics.update(ac, r_abs, do_eval, iid, ood)
+            return (p, o, ac), ((losses, iid, ood) if keep_history
+                                else None)
 
-        (params, opt), (losses, iid, ood) = jax.lax.scan(
-            body, (params, opt), (batch_xs, coeffs, eval_mask))
-        return params, opt, losses, iid, ood
+        if analytics is None:
+            (params, opt), (losses, iid, ood) = jax.lax.scan(
+                body, (params, opt), (batch_xs, coeffs, eval_mask))
+            return params, opt, losses, iid, ood
+        (params, opt, analytics_carry), ys = jax.lax.scan(
+            body, (params, opt, analytics_carry),
+            (batch_xs, coeffs, eval_mask, round_idx))
+        if keep_history:
+            losses, iid, ood = ys
+            return params, opt, analytics_carry, losses, iid, ood
+        return params, opt, analytics_carry
 
     return scan_fn
 

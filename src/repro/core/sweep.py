@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.analytics import AnalyticsSpec
 from repro.core.coeffs import CoeffProgram, ProgramCoeffs
 from repro.core.decentralized import (
     DecentralizedConfig,
@@ -126,6 +127,16 @@ def gather_round_batch(bank: Dict[str, jnp.ndarray], data_idx: jnp.ndarray,
     return batch
 
 
+def _finalize_analytics(analytics: Optional[AnalyticsSpec], acarry,
+                        n_exp: int) -> Optional[Dict[str, np.ndarray]]:
+    """Vmapped ``AnalyticsSpec.finalize`` over the E axis, padding rows
+    dropped — the ``SweepResult.analytics`` payload."""
+    if analytics is None:
+        return None
+    out = jax.vmap(analytics.finalize)(acarry)
+    return {k: np.asarray(v)[:n_exp] for k, v in out.items()}
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Stacked metrics for an E-experiment sweep.
@@ -137,6 +148,14 @@ class SweepResult:
     ``history(e)`` rebuilds the legacy per-experiment ``List[RoundMetrics]``
     (subsampled at ``eval_every`` exactly like ``DecentralizedTrainer.run``)
     for ``repro.core.propagation``.
+
+    ``analytics`` (``SweepEngine.run(analytics=...)``) holds the finalized
+    in-scan streaming summaries (DESIGN.md §10) — ``(E, n)`` arrays keyed
+    ``iid_auc`` / ``ood_auc`` / ``gap_pct`` / ``iid_arrival`` /
+    ``ood_arrival`` / ``final_iid_acc`` / ``final_ood_acc``.  With
+    ``keep_history=False`` these are the ONLY metrics: the per-round
+    arrays come back zero-length (``(E, 0, n)``, ``history(e) == []``),
+    so a sweep's metric memory is O(E·n) instead of O(E·R·n).
     """
 
     train_loss: np.ndarray
@@ -144,6 +163,7 @@ class SweepResult:
     ood_acc: np.ndarray
     params: Any
     eval_every: int = 1
+    analytics: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def n_experiments(self) -> int:
@@ -198,10 +218,13 @@ class SweepEngine:
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
             config.epoch_shuffle, mix_support=mix_support)
         self._run_jit = jax.jit(
-            self._run_impl, static_argnames=("batch_size", "program"))
+            self._run_impl,
+            static_argnames=("batch_size", "program", "analytics",
+                             "keep_history"))
         self._round_jit = jax.jit(
             self._one_round_impl,
-            static_argnames=("batch_size", "do_eval", "program"))
+            static_argnames=("batch_size", "do_eval", "program",
+                             "analytics"))
         self._chunk_jit: Optional[Callable] = None
         self._sharded_cache: Dict[Tuple[Any, ...], Callable] = {}
 
@@ -243,38 +266,48 @@ class SweepEngine:
         ood = jax.vmap(lambda p: self.eval_fn(p, test_ood))(stacked_params)
         return iid, ood
 
-    def _experiment_scan(self, bank, batch_size, eval_mask, params, opt,
-                         coeffs_e, idx_e, data_idx, test_iid, test_ood,
-                         program=None, state_e=None):
+    def _experiment_scan(self, bank, batch_size, eval_mask, rounds_idx,
+                         params, opt, coeffs_e, idx_e, data_idx, test_iid,
+                         test_ood, acarry_e, program=None, state_e=None,
+                         analytics=None, keep_history=True):
         """All R rounds of ONE experiment (vmapped over E by the callers):
         :func:`repro.core.decentralized.make_scan_fn` with the per-round
         batch realized as an in-scan gather from the shared bank.  With a
         ``program``, ``coeffs_e`` carries the (R,) absolute round indices
-        and each step's matrix is computed in-scan from ``state_e``."""
+        and each step's matrix is computed in-scan from ``state_e``.  With
+        an ``analytics`` spec, ``acarry_e`` is this experiment's streaming
+        accumulator carry and ``rounds_idx`` the (R,) absolute indices."""
         coeff_fn = (None if program is None
                     else (lambda r: program.matrix(state_e, r)))
         scan_fn = make_scan_fn(
             self._round_fn, self._eval,
             make_batch=lambda ix: gather_round_batch(
                 bank, data_idx, ix, batch_size),
-            coeff_fn=coeff_fn)
+            coeff_fn=coeff_fn, analytics=analytics,
+            keep_history=keep_history)
+        if analytics is None:
+            return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
+                           test_iid, test_ood)
         return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
-                       test_iid, test_ood)
+                       test_iid, test_ood, round_idx=rounds_idx,
+                       analytics_carry=acarry_e)
 
     def _run_impl(self, params0, opt0, coeffs, indices, data_idx, eval_mask,
-                  bank, test_iid, test_ood, states, *, batch_size,
-                  program=None):
-        run_one = lambda p, o, c, ix, d, ti, to, st: self._experiment_scan(
-            bank, batch_size, eval_mask, p, o, c, ix, d, ti, to,
-            program, st)
+                  rounds_idx, bank, test_iid, test_ood, states, acarry, *,
+                  batch_size, program=None, analytics=None,
+                  keep_history=True):
+        run_one = lambda p, o, c, ix, d, ti, to, st, ac: (
+            self._experiment_scan(
+                bank, batch_size, eval_mask, rounds_idx, p, o, c, ix, d,
+                ti, to, ac, program, st, analytics, keep_history))
         return jax.vmap(run_one)(
             params0, opt0, coeffs, indices, data_idx, test_iid, test_ood,
-            states)
+            states, acarry)
 
     def _one_round_impl(self, params, opt, coeffs_r, idx_r, data_idx, bank,
-                        test_iid, test_ood, states, *, batch_size, do_eval,
-                        program=None):
-        def one(p, o, c, ix, d, ti, to, st):
+                        test_iid, test_ood, states, acarry, round_r, *,
+                        batch_size, do_eval, program=None, analytics=None):
+        def one(p, o, c, ix, d, ti, to, st, ac):
             if program is not None:
                 c = program.matrix(st, c)  # c is this round's index
             batch = gather_round_batch(bank, d, ix, batch_size)
@@ -284,23 +317,28 @@ class SweepEngine:
             else:
                 n = jax.tree.leaves(p)[0].shape[0]
                 iid = ood = jnp.zeros((n,))
-            return p, o, losses, iid, ood
+            if analytics is not None and do_eval:
+                ac = analytics.update(ac, round_r, True, iid, ood)
+            return p, o, losses, iid, ood, ac
 
         return jax.vmap(one)(
             params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood,
-            states)
+            states, acarry)
 
     # ------------------------------------------------------------------
     # sharded / chunked mode
     # ------------------------------------------------------------------
     def _make_sharded_fn(self, mesh, batch_size: int,
-                         program: Optional[CoeffProgram]) -> Callable:
+                         program: Optional[CoeffProgram],
+                         analytics: Optional[AnalyticsSpec],
+                         keep_history: bool) -> Callable:
         """``jit(shard_map(vmap_E(scan_R(...))))`` over the mesh's single
         experiment axis.  Per-experiment inputs/outputs — including the
-        coefficient-program states — shard on E; the sample bank and eval
-        mask are replicated (every experiment reads the full bank).  The
-        (params, opt) carry is donated where the backend supports it."""
-        key = (mesh, batch_size, program)
+        coefficient-program states and the analytics carry — shard on E;
+        the sample bank, eval mask, and absolute round indices are
+        replicated (every experiment reads them whole).  The (params, opt)
+        carry is donated where the backend supports it."""
+        key = (mesh, batch_size, program, analytics, keep_history)
         if key in self._sharded_cache:
             return self._sharded_cache[key]
         from jax.sharding import PartitionSpec as P
@@ -309,17 +347,23 @@ class SweepEngine:
 
         exp, rep = P(mesh.axis_names[0]), P()
 
-        def body(params, opt, coeffs, idx, data_idx, eval_mask, bank,
-                 test_iid, test_ood, states):
+        def body(params, opt, coeffs, idx, data_idx, eval_mask, rounds_idx,
+                 bank, test_iid, test_ood, states, acarry):
             return self._run_impl(params, opt, coeffs, idx, data_idx,
-                                  eval_mask, bank, test_iid, test_ood,
-                                  states, batch_size=batch_size,
-                                  program=program)
+                                  eval_mask, rounds_idx, bank, test_iid,
+                                  test_ood, states, acarry,
+                                  batch_size=batch_size, program=program,
+                                  analytics=analytics,
+                                  keep_history=keep_history)
 
+        # outputs: (params, opt[, acarry][, losses, iid, ood]) — all exp
+        n_out = 2 + (1 if analytics is not None else 0) \
+            + (3 if keep_history else 0)
         mapped = compat_shard_map(
             body, mesh,
-            in_specs=(exp, exp, exp, exp, exp, rep, rep, exp, exp, exp),
-            out_specs=(exp, exp, exp, exp, exp))
+            in_specs=(exp, exp, exp, exp, exp, rep, rep, rep, exp, exp,
+                      exp, exp),
+            out_specs=(exp,) * n_out)
         fn = jax.jit(
             mapped,
             donate_argnums=(0, 1) if donation_supported() else ())
@@ -327,36 +371,44 @@ class SweepEngine:
         return fn
 
     def _make_chunk_fn(self, batch_size: int,
-                       program: Optional[CoeffProgram]) -> Callable:
+                       program: Optional[CoeffProgram],
+                       analytics: Optional[AnalyticsSpec],
+                       keep_history: bool) -> Callable:
         """Single-device chunk step: the scanned program with a donated
         (params, opt) carry, re-dispatched per round-chunk."""
         if self._chunk_jit is None:
             self._chunk_jit = jax.jit(
-                self._run_impl, static_argnames=("batch_size", "program"),
+                self._run_impl,
+                static_argnames=("batch_size", "program", "analytics",
+                                 "keep_history"),
                 donate_argnums=(0, 1) if donation_supported() else ())
         return lambda *args: self._chunk_jit(
-            *args, batch_size=batch_size, program=program)
+            *args, batch_size=batch_size, program=program,
+            analytics=analytics, keep_history=keep_history)
 
     def _run_sharded(self, params0, opt0, coeffs, idx, data_idx, eval_mask,
                      bank, test_iid, test_ood, batch_size, mesh,
                      chunk_rounds: Optional[int], states, program,
-                     ) -> SweepResult:
+                     acarry, analytics: Optional[AnalyticsSpec],
+                     keep_history: bool) -> SweepResult:
         """Sharded and/or chunked execution.  Bit-identical to the scanned
         path: padding rows are dropped, each chunk resumes the exact scan
-        carry (round indices stay absolute in program mode), and per-shard
+        carry — (params, opt) AND the analytics accumulators — round
+        indices stay absolute in program and analytics mode, and per-shard
         programs are the same per-experiment math."""
         n_exp, rounds = coeffs.shape[:2]
         test_iid = jax.tree.map(jnp.asarray, test_iid)
         test_ood = jax.tree.map(jnp.asarray, test_ood)
+        rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
 
         if mesh is not None:
             n_dev = int(np.prod(list(mesh.shape.values())))
             pad = (-n_exp) % n_dev
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states) = (
+             states, acarry) = (
                 pad_experiments(t, pad)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states))
+                          test_iid, test_ood, states, acarry))
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             exp_sh = NamedSharding(mesh, P(mesh.axis_names[0]))
@@ -366,37 +418,53 @@ class SweepEngine:
             # device_put materializes fresh buffers laid out on the mesh,
             # so donating the carry never invalidates caller arrays.
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states) = (
+             states, acarry) = (
                 put(t, exp_sh)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states))
+                          test_iid, test_ood, states, acarry))
             bank = put(bank, rep_sh)
-            fn = self._make_sharded_fn(mesh, batch_size, program)
+            rounds_idx = put(rounds_idx, rep_sh)
+            fn = self._make_sharded_fn(mesh, batch_size, program,
+                                       analytics, keep_history)
         else:
             if donation_supported():
                 # chunk 0 would donate the caller's params0 — copy once
                 params0 = jax.tree.map(
                     lambda x: jnp.asarray(x).copy(), params0)
-            fn = self._make_chunk_fn(batch_size, program)
+            fn = self._make_chunk_fn(batch_size, program, analytics,
+                                     keep_history)
 
         chunk = chunk_rounds or rounds
         params, opt = params0, opt0
         losses, iids, oods = [], [], []
         for a in range(0, rounds, chunk):
             b = min(a + chunk, rounds)
-            params, opt, l_c, iid_c, ood_c = fn(
+            out = fn(
                 params, opt, coeffs[:, a:b], idx[:, a:b], data_idx,
-                jnp.asarray(eval_mask[a:b]), bank, test_iid, test_ood,
-                states)
-            losses.append(np.asarray(l_c))
-            iids.append(np.asarray(iid_c))
-            oods.append(np.asarray(ood_c))
+                jnp.asarray(eval_mask[a:b]), rounds_idx[a:b], bank,
+                test_iid, test_ood, states, acarry)
+            if analytics is None:
+                params, opt, l_c, iid_c, ood_c = out
+            elif keep_history:
+                params, opt, acarry, l_c, iid_c, ood_c = out
+            else:
+                params, opt, acarry = out
+            if keep_history:
+                losses.append(np.asarray(l_c))
+                iids.append(np.asarray(iid_c))
+                oods.append(np.asarray(ood_c))
 
         out_params = jax.tree.map(lambda x: x[:n_exp], params)
-        cat = lambda xs: np.concatenate(xs, axis=1)[:n_exp]
+        if keep_history:
+            cat = lambda xs: np.concatenate(xs, axis=1)[:n_exp]
+            l, i, o = cat(losses), cat(iids), cat(oods)
+        else:
+            n = jax.tree.leaves(out_params)[0].shape[1]
+            l = i = o = np.zeros((n_exp, 0, n), np.float32)
         return SweepResult(
-            train_loss=cat(losses), iid_acc=cat(iids), ood_acc=cat(oods),
-            params=out_params, eval_every=self.config.eval_every)
+            train_loss=l, iid_acc=i, ood_acc=o, params=out_params,
+            eval_every=self.config.eval_every,
+            analytics=_finalize_analytics(analytics, acarry, n_exp))
 
     # ------------------------------------------------------------------
     def run(
@@ -412,6 +480,8 @@ class SweepEngine:
         unroll_eval: Optional[bool] = None,
         mesh=None,                    # 1-D jax Mesh → shard the E axis
         chunk_rounds: Optional[int] = None,  # scan R in ⌈R/c⌉ chunks
+        analytics: Optional[AnalyticsSpec] = None,
+        keep_history: bool = True,
     ) -> SweepResult:
         """Run the whole grid.  ``unroll_eval`` overrides the config flag
         (None → use ``config.unroll_eval``).  ``mesh`` (from
@@ -425,7 +495,16 @@ class SweepEngine:
         per-experiment program state shards on E like every other
         per-experiment input), the round count comes from the ``indices``
         schedule, and — for non-reactive programs — results are
-        bit-identical to running the materialized stack."""
+        bit-identical to running the materialized stack.
+
+        ``analytics`` (an :class:`repro.core.analytics.AnalyticsSpec`)
+        threads the streaming-analytics accumulators through the scan
+        (DESIGN.md §10) and populates ``SweepResult.analytics`` with
+        per-experiment per-node summaries — identical values in every
+        execution mode (the carry pads/shards on E and chunk boundaries
+        resume it exactly).  ``keep_history=False`` (requires
+        ``analytics``) drops the per-round ``(E, R, n)`` metric arrays
+        entirely: the summaries are the only metrics, O(E·n) memory."""
         program: Optional[CoeffProgram] = None
         states: Any = {}
         if isinstance(coeffs, ProgramCoeffs):
@@ -442,6 +521,9 @@ class SweepEngine:
             rounds = coeffs.shape[1]
         if self.config.mix_impl == "sparse":
             self._check_sparse_support(coeffs, program, states)
+        if not keep_history and analytics is None:
+            raise ValueError("keep_history=False without an analytics "
+                             "spec would return no metrics at all")
         data_idx = jnp.asarray(data_idx, jnp.int32)
         # (E, R, n, S): per-experiment index schedule, pre-gathered host-side
         # (tiny — int32; the sample bank itself stays (D, ...)-shaped).
@@ -450,6 +532,10 @@ class SweepEngine:
         opt0 = jax.vmap(jax.vmap(self.optimizer.init))(params0)
         eval_mask = np.zeros(rounds, bool)
         eval_mask[eval_round_indices(rounds, self.config.eval_every)] = True
+        n_exp = jax.tree.leaves(params0)[0].shape[0]
+        n_nodes = jax.tree.leaves(params0)[0].shape[1]
+        acarry = (analytics.init_batch(n_exp, n_nodes)
+                  if analytics is not None else {})
 
         unroll = (self.config.unroll_eval if unroll_eval is None
                   else unroll_eval)
@@ -460,40 +546,66 @@ class SweepEngine:
                     "cannot combine with unroll_eval=True")
             return self._run_unrolled(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
-                test_iid, test_ood, batch_size, states, program)
+                test_iid, test_ood, batch_size, states, program,
+                acarry, analytics, keep_history)
 
         if mesh is not None or chunk_rounds:
             return self._run_sharded(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size, mesh, chunk_rounds,
-                states, program)
+                states, program, acarry, analytics, keep_history)
 
-        params, _, losses, iid, ood = self._run_jit(
+        rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
+        out = self._run_jit(
             params0, opt0, coeffs, idx, data_idx, jnp.asarray(eval_mask),
-            bank, test_iid, test_ood, states, batch_size=batch_size,
-            program=program)
+            rounds_idx, bank, test_iid, test_ood, states, acarry,
+            batch_size=batch_size, program=program, analytics=analytics,
+            keep_history=keep_history)
+        if analytics is None:
+            params, _, losses, iid, ood = out
+            acarry = {}
+        elif keep_history:
+            params, _, acarry, losses, iid, ood = out
+        else:
+            params, _, acarry = out
+            losses = iid = ood = np.zeros((n_exp, 0, n_nodes), np.float32)
         return SweepResult(
             train_loss=np.asarray(losses), iid_acc=np.asarray(iid),
             ood_acc=np.asarray(ood), params=params,
-            eval_every=self.config.eval_every)
+            eval_every=self.config.eval_every,
+            analytics=_finalize_analytics(analytics, acarry, n_exp))
 
     def _run_unrolled(self, params, opt, coeffs, idx, data_idx, eval_mask,
                       bank, test_iid, test_ood, batch_size, states=None,
-                      program=None) -> SweepResult:
-        """Escape hatch: per-round dispatch, incremental metrics."""
+                      program=None, acarry=None, analytics=None,
+                      keep_history=True) -> SweepResult:
+        """Escape hatch: per-round dispatch, incremental metrics (the
+        analytics carry is folded one eval round at a time)."""
         if states is None:
             states = {}
+        if acarry is None:
+            acarry = {}
+        n_exp = jax.tree.leaves(params)[0].shape[0]
+        n_nodes = jax.tree.leaves(params)[0].shape[1]
         losses, iids, oods = [], [], []
         for r in range(coeffs.shape[1]):
-            params, opt, l_r, iid_r, ood_r = self._round_jit(
+            params, opt, l_r, iid_r, ood_r, acarry = self._round_jit(
                 params, opt, coeffs[:, r], idx[:, r], data_idx, bank,
-                test_iid, test_ood, states, batch_size=batch_size,
-                do_eval=bool(eval_mask[r]), program=program)
-            losses.append(np.asarray(l_r))
-            iids.append(np.asarray(iid_r))
-            oods.append(np.asarray(ood_r))
+                test_iid, test_ood, states, acarry,
+                jnp.asarray(r, jnp.int32), batch_size=batch_size,
+                do_eval=bool(eval_mask[r]), program=program,
+                analytics=analytics)
+            if keep_history:
+                losses.append(np.asarray(l_r))
+                iids.append(np.asarray(iid_r))
+                oods.append(np.asarray(ood_r))
+        if keep_history:
+            l = np.stack(losses, axis=1)
+            i = np.stack(iids, axis=1)
+            o = np.stack(oods, axis=1)
+        else:
+            l = i = o = np.zeros((n_exp, 0, n_nodes), np.float32)
         return SweepResult(
-            train_loss=np.stack(losses, axis=1),
-            iid_acc=np.stack(iids, axis=1),
-            ood_acc=np.stack(oods, axis=1),
-            params=params, eval_every=self.config.eval_every)
+            train_loss=l, iid_acc=i, ood_acc=o,
+            params=params, eval_every=self.config.eval_every,
+            analytics=_finalize_analytics(analytics, acarry, n_exp))

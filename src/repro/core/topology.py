@@ -28,6 +28,7 @@ __all__ = [
     "watts_strogatz",
     "stochastic_block",
     "ring",
+    "star",
     "fully_connected",
     "from_adjacency",
     "TOPOLOGY_BUILDERS",
@@ -223,6 +224,18 @@ def ring(n: int) -> Topology:
     return Topology(a, name=f"ring_n{n}")
 
 
+def star(n: int) -> Topology:
+    """Deterministic hub-and-spoke graph (node 0 = hub).  Maximal degree
+    skew in two hops — the golden-run regression suite uses it as the
+    sharpest deterministic contrast to the ring for hop-distance
+    analytics (tests/regen_goldens.py)."""
+    if n < 2:
+        raise ValueError(f"star needs n >= 2, got {n}")
+    a = np.zeros((n, n))
+    a[0, 1:] = a[1:, 0] = 1.0
+    return Topology(a, name=f"star_n{n}")
+
+
 def fully_connected(n: int) -> Topology:
     """Complete graph — the FL baseline's implicit topology."""
     a = np.ones((n, n)) - np.eye(n)
@@ -238,6 +251,7 @@ TOPOLOGY_BUILDERS = {
     "ws": watts_strogatz,
     "sb": stochastic_block,
     "ring": ring,
+    "star": star,
     "full": fully_connected,
 }
 

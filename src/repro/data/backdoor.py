@@ -22,6 +22,7 @@ __all__ = [
     "apply_image_backdoor",
     "apply_language_backdoor",
     "backdoor_dataset",
+    "backdoored_testset",
     "language_backdoor_mask",
 ]
 
@@ -81,27 +82,41 @@ def language_backdoor_mask(tokens: np.ndarray) -> np.ndarray:
     return mask
 
 
-def backdoor_dataset(ds: Dataset, q: float = 0.10, seed: int = 0) -> Dataset:
+def backdoor_dataset(ds: Dataset, q: float = 0.10, seed: int = 0,
+                     patch: int = PATCH,
+                     target_label: int = TARGET_LABEL,
+                     target_token: int = TARGET_TOKEN) -> Dataset:
     """Backdoor Q of the samples (paper: Q = 10% of the OOD node's data,
-    and Q = 10% of the global test set)."""
+    and Q = 10% of the global test set).
+
+    ``patch`` / ``target_label`` (image) and ``target_token`` (language)
+    parameterize the trigger — multi-source scenarios can give each OOD
+    source a distinct configuration; the defaults reproduce the paper's
+    single trigger (and every source of the ``multisource`` preset plants
+    the SAME trigger, so propagation from k sources is comparable)."""
     rng = np.random.default_rng(seed)
     n = len(ds)
     n_bd = max(1, int(round(q * n)))
     idx = rng.choice(n, size=n_bd, replace=False)
     x, y = ds.x.copy(), ds.y.copy()
     if ds.kind == "image":
-        xb, yb = apply_image_backdoor(ds.x[idx], ds.y[idx])
+        xb, yb = apply_image_backdoor(ds.x[idx], ds.y[idx], patch=patch,
+                                      target_label=target_label)
         x[idx], y[idx] = xb, yb
     else:
-        xb, _, _ = apply_language_backdoor(ds.x[idx])
+        xb, _, _ = apply_language_backdoor(ds.x[idx],
+                                           target_token=target_token)
         x[idx] = xb
     return Dataset(x, y, ds.kind, ds.n_classes, ds.vocab_size)
 
 
-def backdoored_testset(ds: Dataset, seed: int = 0) -> Dataset:
+def backdoored_testset(ds: Dataset, seed: int = 0, patch: int = PATCH,
+                       target_label: int = TARGET_LABEL,
+                       target_token: int = TARGET_TOKEN) -> Dataset:
     """test_OOD: every sample backdoored (accuracy == trigger recall)."""
     if ds.kind == "image":
-        xb, yb = apply_image_backdoor(ds.x, ds.y)
+        xb, yb = apply_image_backdoor(ds.x, ds.y, patch=patch,
+                                      target_label=target_label)
         return Dataset(xb, yb, ds.kind, ds.n_classes, ds.vocab_size)
-    xb, _, _ = apply_language_backdoor(ds.x)
+    xb, _, _ = apply_language_backdoor(ds.x, target_token=target_token)
     return Dataset(xb, ds.y, ds.kind, ds.n_classes, ds.vocab_size)

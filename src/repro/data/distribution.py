@@ -12,7 +12,7 @@ ablations.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -20,6 +20,11 @@ from repro.data.backdoor import backdoor_dataset
 from repro.data.synthetic import Dataset
 
 __all__ = ["dirichlet_split", "place_ood", "node_datasets"]
+
+#: One or several OOD host nodes.  The paper's main experiments place the
+#: backdoor data on exactly one node; the multi-source scenarios (fig5
+#: generalization, the ``multisource`` sweep preset) place it on k nodes.
+OodNodes = Union[int, Sequence[int], np.ndarray]
 
 
 def dirichlet_split(
@@ -57,24 +62,34 @@ def dirichlet_split(
     return out
 
 
-def place_ood(node_data: List[Dataset], ood_node: int, q: float = 0.10,
+def place_ood(node_data: List[Dataset], ood_node: OodNodes, q: float = 0.10,
               seed: int = 0) -> List[Dataset]:
-    """Backdoor Q of one node's data (the paper's OOD placement)."""
+    """Backdoor Q of one or several nodes' data (the paper's single-node
+    OOD placement, generalized to multi-source scenarios).
+
+    Each source draws its own backdoored subset: source i uses
+    ``seed + i`` (the first source keeps ``seed``, so single-source runs
+    are bit-identical to the pre-multi-source behavior)."""
+    nodes = [int(v) for v in np.atleast_1d(np.asarray(ood_node))]
+    if len(set(nodes)) != len(nodes):
+        raise ValueError(f"duplicate OOD nodes in {nodes}")
     out = list(node_data)
-    out[ood_node] = backdoor_dataset(out[ood_node], q=q, seed=seed)
+    for i, node in enumerate(nodes):
+        out[node] = backdoor_dataset(out[node], q=q, seed=seed + i)
     return out
 
 
 def node_datasets(
     ds: Dataset,
     n_nodes: int,
-    ood_node: Optional[int],
+    ood_node: Optional[OodNodes],
     alpha_l: float = 1000.0,
     alpha_s: float = 1000.0,
     q: float = 0.10,
     seed: int = 0,
 ) -> List[Dataset]:
-    """The paper's full distribution scheme in one call."""
+    """The paper's full distribution scheme in one call.  ``ood_node`` may
+    be a single node, a collection of nodes (multi-source OOD), or None."""
     parts = dirichlet_split(ds, n_nodes, alpha_l, alpha_s, seed)
     if ood_node is not None:
         parts = place_ood(parts, ood_node, q=q, seed=seed)

@@ -1,0 +1,188 @@
+"""Golden-run regression scenarios for the streaming analytics engine.
+
+Tiny deterministic sweeps (ring + star topologies, single- and multi-
+source OOD placement) whose in-scan analytics — per-node IID/OOD
+accuracy-AUC, arrival rounds, gap — are checked into
+``tests/goldens/sweep_analytics.json`` and asserted to tolerance by
+``tests/test_golden.py``.  This is the repo's first golden-value suite:
+Palmieri et al.'s topology-dependent propagation curves are exactly where
+reproductions silently drift, so the numbers themselves are pinned, not
+just the code paths.
+
+Regenerate after an INTENTIONAL numerical change (new jax/XLA pin, a
+deliberate algorithm change):
+
+    PYTHONPATH=src python -m tests.regen_goldens
+
+``compute_goldens`` also cross-checks the streaming values against the
+host-side ``repro.core.propagation`` oracles to 1e-6 on every run, so a
+regenerated golden can never encode a streaming/oracle divergence.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import propagation
+from repro.core.analytics import AnalyticsSpec
+from repro.core.decentralized import (
+    DecentralizedConfig,
+    coeffs_stack,
+    stack_params,
+)
+from repro.core.strategies import AggregationStrategy
+from repro.core.sweep import SweepEngine
+from repro.core.topology import Topology, ring, star
+from repro.data.backdoor import backdoored_testset
+from repro.data.distribution import node_datasets
+from repro.data.pipeline import NodeBatcher, make_test_batch
+from repro.data.synthetic import make_dataset
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "goldens")
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "sweep_analytics.json")
+
+N = 6
+ROUNDS = 6
+EVAL_EVERY = 2
+THRESHOLD = 0.5
+BATCH = 8
+TOL = 1e-5  # AUC / accuracy tolerance; arrival rounds are exact ints
+
+
+def scenarios() -> List[Tuple[str, Topology, str, Tuple[int, ...]]]:
+    """(name, topology, strategy, OOD source nodes) — one sweep-engine
+    experiment each, all n=6 so the grid compiles into ONE program."""
+    return [
+        ("ring6/unweighted/src0", ring(N), "unweighted", (0,)),
+        # ring degrees are uniform, so "degree" would equal "unweighted";
+        # "random" instead locks the per-round resampling stream
+        ("ring6/random/src0", ring(N), "random", (0,)),
+        ("star6/degree/leaf3", star(N), "degree", (3,)),
+        ("star6/unweighted/hub0+leaf3", star(N), "unweighted", (0, 3)),
+    ]
+
+
+def _pad_cap(bank: Dict[str, np.ndarray], cap: int) -> Dict[str, np.ndarray]:
+    return {
+        k: np.pad(v, [(0, 0), (0, cap - v.shape[1])]
+                  + [(0, 0)] * (v.ndim - 2))
+        for k, v in bank.items()
+    }
+
+
+def build_engine_inputs():
+    """The scenario grid as one set of SweepEngine inputs (E=4, D=3
+    distinct data configurations keyed by OOD source tuple)."""
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
+    from repro.training.optimizer import sgd
+
+    train = make_dataset("mnist", 360, seed=0)
+    test = make_dataset("mnist", 96, seed=9)
+    cfg = DecentralizedConfig(rounds=ROUNDS, local_epochs=2,
+                              eval_every=EVAL_EVERY)
+
+    dconf: Dict[Tuple[int, ...], int] = {}
+    batchers: List[NodeBatcher] = []
+    for _, _, _, srcs in scenarios():
+        if srcs not in dconf:
+            parts = node_datasets(train, N, ood_node=srcs, q=0.10, seed=0)
+            dconf[srcs] = len(batchers)
+            batchers.append(NodeBatcher(parts, batch_size=BATCH,
+                                        steps_per_epoch=2, seed=0,
+                                        local_epochs=cfg.local_epochs))
+    raw = [nb.sample_bank() for nb in batchers]
+    cap = max(b["x"].shape[1] for b in raw)
+    padded = [_pad_cap(b, cap) for b in raw]
+    bank = {k: np.stack([p[k] for p in padded]) for k in raw[0]}
+    indices = np.stack([nb.all_round_indices(ROUNDS) for nb in batchers])
+
+    data_idx, coeffs, p0s = [], [], []
+    init = ffn_init(jax.random.key(0))
+    for _, topo, strat, srcs in scenarios():
+        d = dconf[srcs]
+        data_idx.append(d)
+        coeffs.append(coeffs_stack(
+            topo, AggregationStrategy(strat, tau=0.1, seed=0), ROUNDS,
+            data_counts=batchers[d].data_counts()))
+        p0s.append(stack_params([init] * N))
+    params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *p0s)
+
+    tb = make_test_batch(test, 48, seed=0)
+    ob = make_test_batch(backdoored_testset(test, seed=0), 48, seed=0)
+    e = len(scenarios())
+    stack_e = lambda t: {k: jnp.stack([jnp.asarray(t[k])] * e) for k in t}
+
+    engine = SweepEngine(sgd(1e-2), classifier_loss(ffn_apply),
+                         classifier_accuracy(ffn_apply), cfg)
+    args = (params0, np.stack(coeffs), bank, indices,
+            np.asarray(data_idx, np.int32), stack_e(tb), stack_e(ob))
+    return engine, args
+
+
+def compute_goldens(mesh=None, chunk_rounds: Optional[int] = None,
+                    keep_history: bool = True) -> Dict:
+    """Run the scenario grid and digest it into the golden payload.
+
+    With ``keep_history=True`` (default) every scenario's streaming
+    analytics are asserted against the host-side ``propagation.py``
+    oracles to 1e-6 before anything is returned."""
+    engine, args = build_engine_inputs()
+    res = engine.run(*args, batch_size=BATCH, mesh=mesh,
+                     chunk_rounds=chunk_rounds,
+                     analytics=AnalyticsSpec(arrival_threshold=THRESHOLD),
+                     keep_history=keep_history)
+    out: Dict = {
+        "meta": {"n_nodes": N, "rounds": ROUNDS, "eval_every": EVAL_EVERY,
+                 "arrival_threshold": THRESHOLD, "batch": BATCH},
+        "scenarios": {},
+    }
+    for e, (name, topo, _, srcs) in enumerate(scenarios()):
+        stream = {k: v[e] for k, v in res.analytics.items()}
+        if keep_history:
+            hist = res.history(e)
+            dev = max(
+                np.abs(stream["iid_auc"]
+                       - propagation.per_node_auc(hist, "iid")).max(),
+                np.abs(stream["ood_auc"]
+                       - propagation.per_node_auc(hist, "ood")).max())
+            assert dev < 1e-6, (name, dev)
+            oracle_arrival = propagation.arrival_rounds(hist, THRESHOLD)
+            np.testing.assert_array_equal(stream["ood_arrival"],
+                                          oracle_arrival, err_msg=name)
+        hops = propagation.hops_from(topo.adjacency, srcs)
+        out["scenarios"][name] = {
+            "ood_sources": list(srcs),
+            "hops_from_sources": [int(h) for h in hops],
+            "iid_auc": [float(v) for v in stream["iid_auc"]],
+            "ood_auc": [float(v) for v in stream["ood_auc"]],
+            "ood_arrival": [int(v) for v in stream["ood_arrival"]],
+            "iid_ood_gap_pct": float(
+                100.0 * (stream["ood_auc"].mean()
+                         - stream["iid_auc"].mean())
+                / max(float(stream["iid_auc"].mean()), 1e-9)),
+            "final_ood_acc_mean": float(stream["final_ood_acc"].mean()),
+        }
+    return out
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    goldens = compute_goldens()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(goldens, f, indent=1)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+    for name, g in goldens["scenarios"].items():
+        print(f"  {name}: ood_auc_mean={np.mean(g['ood_auc']):.4f} "
+              f"arrival={g['ood_arrival']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Golden-run regression suite: the streaming-analytics numbers of tiny
+deterministic ring/star sweeps (single- and multi-source OOD) are pinned
+in ``tests/goldens/sweep_analytics.json`` and asserted to tolerance —
+per-node IID/OOD accuracy-AUC, arrival rounds, gap, hop fields.
+
+Also locks the tentpole equivalences: the streaming summaries are
+bit-identical across the scanned / chunked / mesh-sharded execution
+modes (the mesh spans ALL local devices, so the CI golden job's 8
+virtual-device run exercises real sharding while a laptop run degrades
+to mesh(1)), identical with ``keep_history=False`` (the O(E·n) path),
+and match the host-side ``propagation.py`` oracles to 1e-6 (asserted
+inside ``compute_goldens``).
+
+Regenerate after an intentional numerical change:
+    PYTHONPATH=src python -m tests.regen_goldens
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from tests import regen_goldens as rg
+
+
+@pytest.fixture(scope="module")
+def computed():
+    return rg.compute_goldens()
+
+
+def _load_goldens():
+    assert os.path.exists(rg.GOLDEN_PATH), (
+        f"missing {rg.GOLDEN_PATH}; generate it with "
+        f"`PYTHONPATH=src python -m tests.regen_goldens`")
+    with open(rg.GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_golden_values_match(computed):
+    want = _load_goldens()
+    assert want["meta"] == computed["meta"], (
+        "golden meta (scale/threshold) drifted — regenerate the goldens "
+        "if the change was intentional")
+    assert set(want["scenarios"]) == set(computed["scenarios"])
+    for name, g in want["scenarios"].items():
+        c = computed["scenarios"][name]
+        assert c["ood_sources"] == g["ood_sources"], name
+        assert c["hops_from_sources"] == g["hops_from_sources"], name
+        np.testing.assert_allclose(c["iid_auc"], g["iid_auc"],
+                                   atol=rg.TOL, err_msg=name)
+        np.testing.assert_allclose(c["ood_auc"], g["ood_auc"],
+                                   atol=rg.TOL, err_msg=name)
+        assert c["ood_arrival"] == g["ood_arrival"], name
+        # gap = 100·(ood−iid)/iid amplifies AUC drift by ~1/iid_mean
+        # (~10× here), so its tolerance must be looser than TOL or any
+        # drift that legitimately passes the AUC checks fails here
+        np.testing.assert_allclose(c["iid_ood_gap_pct"],
+                                   g["iid_ood_gap_pct"],
+                                   atol=0.5, err_msg=name)
+        np.testing.assert_allclose(c["final_ood_acc_mean"],
+                                   g["final_ood_acc_mean"],
+                                   atol=rg.TOL, err_msg=name)
+
+
+def test_golden_chunked_mode_identical(computed):
+    """chunk_rounds=2 resumes the analytics carry exactly — the digested
+    payload (pure floats/ints) must be EQUAL, not merely close."""
+    assert rg.compute_goldens(chunk_rounds=2) == computed
+
+
+def test_golden_mesh_mode_identical(computed):
+    """mesh over all local devices (1 on a laptop, 8 in the CI golden
+    job): E-padding + shard_map cannot change any scenario's analytics."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    assert rg.compute_goldens(mesh=make_sweep_mesh()) == computed
+    assert rg.compute_goldens(mesh=make_sweep_mesh(),
+                              chunk_rounds=2) == computed
+
+
+def test_golden_no_history_identical(computed):
+    """keep_history=False (O(E·n) metric memory) produces the same
+    streaming summaries; only the oracle cross-check (which needs the
+    history) is skipped inside compute_goldens."""
+    got = rg.compute_goldens(keep_history=False)
+    assert got == computed

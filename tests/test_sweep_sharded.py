@@ -2,9 +2,12 @@
 devices — the three execution modes must produce bit-identical results
 (DESIGN.md §8), including eval_every > 1, mix_impl="pallas", a
 link-failure coeffs stack, chunked rounds, E-to-mesh padding (E=3
-experiments over 8 devices), and in-scan coefficient programs (DESIGN.md
+experiments over 8 devices), in-scan coefficient programs (DESIGN.md
 §9: program state sharded on E, reactive link-failure cell, program ==
-materialized stack under shard_map).
+materialized stack under shard_map), and in-scan streaming analytics
+(DESIGN.md §10: carry sharded on E, summaries bit-identical across
+scanned / chunked / mesh modes and equal to the host-side
+``propagation.py`` oracles).
 
 Runs in a subprocess because XLA_FLAGS must be set before jax initializes
 (the main pytest process must keep seeing 1 device — the device-count
@@ -110,6 +113,43 @@ SCRIPT = textwrap.dedent("""
     check(run(pc, mesh=mesh, chunk_rounds=3), pref,
           "programs/sharded+chunk")
     check(run(pc), pref, "programs/scanned-vs-sharded-stack")
+
+    # in-scan streaming analytics (DESIGN.md §10): the accumulator carry
+    # shards on E; summaries are BIT-identical across scanned / chunked /
+    # mesh(8) / mesh(8)+chunk / unrolled and match the host oracles.
+    from repro.core import propagation
+    from repro.core.analytics import AnalyticsSpec
+
+    spec = AnalyticsSpec(arrival_threshold=0.5)
+    engine = SweepEngine(sgd(1e-2), loss_fn, acc_fn, cfg)
+    runa = lambda **kw: engine.run(
+        params0, coeffs, bank, indices, data_idx, st(tb), st(ob),
+        batch_size=8, analytics=spec, **kw)
+    ra = runa()
+    for label, other in [
+        ("chunked", runa(chunk_rounds=3)),
+        ("sharded", runa(mesh=mesh)),
+        ("sharded+chunk", runa(mesh=mesh, chunk_rounds=3)),
+        ("unrolled", runa(unroll_eval=True)),
+        ("sharded+no-history", runa(mesh=mesh, keep_history=False)),
+    ]:
+        for k in ra.analytics:
+            np.testing.assert_array_equal(
+                ra.analytics[k], other.analytics[k], err_msg=(label, k))
+        print("analytics/" + label, "ok")
+    # keep_history=False really drops the (E, R, n) history
+    rn = runa(mesh=mesh, keep_history=False)
+    assert rn.train_loss.shape[1] == 0 and rn.history(0) == []
+    for e in range(len(kinds)):
+        hist = ra.history(e)
+        assert np.abs(ra.analytics["iid_auc"][e]
+                      - propagation.per_node_auc(hist, "iid")).max() < 1e-6
+        assert np.abs(ra.analytics["ood_auc"][e]
+                      - propagation.per_node_auc(hist, "ood")).max() < 1e-6
+        np.testing.assert_array_equal(
+            ra.analytics["ood_arrival"][e],
+            propagation.arrival_rounds(hist, 0.5))
+    print("ANALYTICS_SHARDED_OK")
     print("SHARDED_SWEEP_OK")
 """)
 
@@ -119,5 +159,7 @@ def test_sharded_sweep_subprocess():
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "ANALYTICS_SHARDED_OK" in out.stdout, (out.stdout[-2000:],
+                                                  out.stderr[-3000:])
     assert "SHARDED_SWEEP_OK" in out.stdout, (out.stdout[-2000:],
                                               out.stderr[-3000:])
