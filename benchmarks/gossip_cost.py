@@ -1,15 +1,33 @@
-"""Beyond-paper table — gossip schedule cost: dense all-gather vs sparse
-circulant ppermute, plus ring-relabeling (bandwidth-minimizing node order).
+"""Beyond-paper tables — gossip aggregation cost.
 
-Reports, per topology: distinct circulant offsets before/after reverse-
-Cuthill–McKee relabeling, modeled ICI bytes per node for both schedules,
-and measured wall time of the two host-side mixing paths on a ~100M-param
-stacked pytree (CPU — relative numbers only).
+Two independent studies:
+
+* :func:`run` — gossip *schedule* cost: dense all-gather vs sparse
+  circulant ppermute, plus ring-relabeling (bandwidth-minimizing node
+  order).  Reports, per topology: distinct circulant offsets
+  before/after reverse-Cuthill–McKee relabeling, modeled ICI bytes per
+  node for both schedules, and measured wall time of the two host-side
+  mixing paths.
+
+* :func:`run_mix` — single-chip mix *kernel* cost (the tracked
+  ``BENCH_mix.json`` perf series): XLA einsum vs the legacy per-row
+  Pallas family (``mix_dense_pallas`` — n_leaves × n kernel programs
+  per mix) vs the fused flat-plane kernel (``mix_plane_pallas`` — ONE
+  ``pallas_call`` per mix, DESIGN.md §11).  Records wall-clock per mix
+  and the modeled HBM bytes
+  (``kernels.gossip_mix.mix_modeled_hbm_bytes``) for each path; on this
+  CPU container the Pallas paths run in interpret mode, so wall-clock is
+  dominated by per-program dispatch — exactly the n_leaves·n-fold
+  overhead the fused kernel removes — while the bytes model is
+  backend-independent.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -102,5 +120,180 @@ def run(log=print, n_params: int = 8_000_000) -> List[dict]:
     return rows
 
 
+# ----------------------------------------------------------------------
+# mix-kernel perf series: einsum vs legacy per-row pallas vs fused plane
+# ----------------------------------------------------------------------
+def _ragged_params(n_nodes: int, n_params: int, seed: int = 0,
+                   dtype=jnp.float32):
+    """A deliberately ragged stacked pytree (uneven leaf sizes, a
+    non-tile-multiple matrix, a vector leaf, a scalar-per-node leaf)
+    summing to ≈ n_params floats per node."""
+    big = max(n_params * 3 // 5 // 128, 1)
+    mid = max(n_params // 4 // 96, 1)
+    ks = jax.random.split(jax.random.key(seed), 4)
+    p = {
+        "w_big": jax.random.normal(ks[0], (n_nodes, big, 128)),
+        "w_mid": jax.random.normal(ks[1], (n_nodes, mid, 96)),
+        "bias": jax.random.normal(ks[2], (n_nodes, 129)),
+        "scale": jax.random.normal(ks[3], (n_nodes,)),
+    }
+    return jax.tree.map(lambda x: x.astype(dtype), p)
+
+
+def _time_mixes(fns: Dict[str, callable], params, coeffs,
+                reps: int) -> Dict[str, float]:
+    """Best-of-reps wall time per impl, with the reps INTERLEAVED across
+    impls (round-robin): external load spikes on a shared runner then hit
+    every impl roughly equally instead of biasing whichever was measured
+    during the spike, and the minimum — the standard microbenchmark
+    estimator, since a repetition can only be slowed — keeps the CI
+    dominance assertion stable."""
+    jitted = {k: jax.jit(f) for k, f in fns.items()}
+    for f in jitted.values():
+        jax.block_until_ready(f(params, coeffs))  # compile + warm
+    times: Dict[str, list] = {k: [] for k in fns}
+    for _ in range(reps):
+        for k, f in jitted.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(params, coeffs))
+            times[k].append(time.perf_counter() - t0)
+    return {k: float(np.min(v)) for k, v in times.items()}
+
+
+def run_mix(log=print, n_nodes: int = 8, n_params: int = 48_000,
+            bt: int = 1024, reps: int = 5, smoke: bool = False,
+            out_path: str = "benchmarks/artifacts/BENCH_mix.json"
+            ) -> Dict[str, dict]:
+    """Measure one Eq.-(2) mix — wall-clock + modeled HBM bytes — for the
+    three dense backends and write the tracked ``BENCH_mix.json`` record.
+
+    ``smoke`` shrinks the pytree so the legacy per-row path (n_leaves × n
+    interpret-mode kernel programs) stays CI-tractable.
+    """
+    from repro.core.plane import PlaneLayout
+    from repro.kernels.gossip_mix import (
+        default_interpret,
+        mix_dense_pallas,
+        mix_modeled_hbm_bytes,
+        mix_plane_pallas,
+    )
+
+    if smoke:
+        n_params = min(n_params, 12_000)
+    params = _ragged_params(n_nodes, n_params)
+    layout = PlaneLayout.from_tree(params)
+    p_floats = layout.n_params
+    n_leaves = len(layout.slots)
+    coeffs = jnp.asarray(
+        mixing_matrix(barabasi_albert(n_nodes, 2, seed=0),
+                      AggregationStrategy("degree", tau=0.1)), jnp.float32)
+
+    impls = {
+        "einsum": dict(
+            fn=mix_dense,
+            modeled_hbm_bytes=mix_modeled_hbm_bytes(
+                "einsum", n_nodes, p_floats, n_leaves=n_leaves),
+            kernel_programs_per_mix=n_leaves),
+        "pallas_rows": dict(
+            fn=mix_dense_pallas,
+            modeled_hbm_bytes=mix_modeled_hbm_bytes(
+                "pallas_rows", n_nodes, p_floats, n_leaves=n_leaves),
+            kernel_programs_per_mix=n_leaves * n_nodes),
+        "pallas_plane": dict(
+            fn=lambda p, c: mix_plane_pallas(p, c, bt=bt),
+            modeled_hbm_bytes=mix_modeled_hbm_bytes(
+                "pallas_plane", n_nodes, p_floats, bt=bt),
+            modeled_hbm_bytes_e2e=mix_modeled_hbm_bytes(
+                "pallas_plane_e2e", n_nodes, p_floats, bt=bt),
+            kernel_programs_per_mix=1),
+        "pallas_plane_bf16": dict(
+            fn=lambda p, c: mix_plane_pallas(
+                p, c, bt=bt, plane_dtype=jnp.bfloat16),
+            modeled_hbm_bytes=mix_modeled_hbm_bytes(
+                "pallas_plane", n_nodes, p_floats, itemsize=2, bt=bt),
+            kernel_programs_per_mix=1),
+    }
+    # equivalence gate before timing: a perf series over wrong numbers is
+    # worthless (plane to f32 rounding; bf16 plane to storage precision)
+    ref = mix_dense(params, coeffs)
+    for name, tol in [("pallas_plane", 1e-6), ("pallas_plane_bf16", 2e-2)]:
+        got = impls[name]["fn"](params, coeffs)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=tol, atol=tol)
+
+    walls = _time_mixes({k: rec.pop("fn") for k, rec in impls.items()},
+                        params, coeffs, reps)
+    for name, rec in impls.items():
+        rec["wall_s"] = walls[name]
+        log(csv_row(f"mix/{name}", rec["wall_s"],
+                    f"modeled_hbm_mb={rec['modeled_hbm_bytes'] / 1e6:.2f};"
+                    f"programs={rec['kernel_programs_per_mix']}"))
+
+    rows, plane = impls["pallas_rows"], impls["pallas_plane"]
+    record = {
+        "schema": "BENCH_mix/v1",
+        "config": {
+            "backend": jax.default_backend(),
+            "pallas_interpret": default_interpret(),
+            "n_nodes": n_nodes,
+            "param_floats_per_node": p_floats,
+            "n_leaves": n_leaves,
+            "leaf_shapes": [list(s.shape) for s in layout.slots],
+            "dtype": "float32",
+            "bt": bt,
+            "reps": reps,
+            "smoke": smoke,
+        },
+        "impls": impls,
+        "fused_vs_rows": {
+            "wall_speedup": rows["wall_s"] / plane["wall_s"],
+            "hbm_bytes_ratio": (rows["modeled_hbm_bytes"]
+                                / plane["modeled_hbm_bytes"]),
+            "dominates": bool(
+                plane["wall_s"] < rows["wall_s"]
+                and plane["modeled_hbm_bytes"] < rows["modeled_hbm_bytes"]),
+        },
+        "fused_vs_einsum": {
+            "wall_ratio": impls["einsum"]["wall_s"] / plane["wall_s"],
+            "hbm_bytes_ratio": (impls["einsum"]["modeled_hbm_bytes"]
+                                / plane["modeled_hbm_bytes"]),
+        },
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    log(csv_row(
+        "mix/fused_vs_rows", plane["wall_s"],
+        f"speedup={record['fused_vs_rows']['wall_speedup']:.1f}x;"
+        f"bytes_ratio={record['fused_vs_rows']['hbm_bytes_ratio']:.1f}x;"
+        f"dominates={record['fused_vs_rows']['dominates']}"))
+    return record
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mix-only", action="store_true",
+                    help="only the BENCH_mix kernel series")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale (small pytree, few reps)")
+    args = ap.parse_args()
+    if args.mix_only:
+        rec = run_mix(smoke=args.smoke)
+        # CI gate.  The structural wins are deterministic — assert them
+        # hard; the wall-clock half gets a 25% noise allowance so a load
+        # spike on a shared runner can't flake the build (a genuine
+        # regression that makes the fused path slower than the legacy
+        # fan-out still fails).  `fused_vs_rows.dominates` in the JSON
+        # stays the strict measured comparison.
+        assert rec["fused_vs_rows"]["hbm_bytes_ratio"] > 1.0, rec
+        assert rec["impls"]["pallas_plane"]["kernel_programs_per_mix"] == 1
+        plane_w = rec["impls"]["pallas_plane"]["wall_s"]
+        rows_w = rec["impls"]["pallas_rows"]["wall_s"]
+        assert plane_w < rows_w * 1.25, (
+            f"fused plane ({plane_w:.6f}s) no longer beats the legacy "
+            f"per-row path ({rows_w:.6f}s) even with noise allowance")
+    else:
+        run()
+        run_mix(smoke=args.smoke)

@@ -17,7 +17,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale runs")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig4,fig5,fig6,gossip,roofline")
+                    help="comma list: fig2,fig4,fig5,fig6,gossip,mix,"
+                         "roofline")
     ap.add_argument("--out", default="benchmarks/artifacts")
     args = ap.parse_args()
 
@@ -30,7 +31,7 @@ def main() -> None:
     n_nodes = 33 if args.full else 16
     sections = (args.only.split(",") if args.only
                 else ["fig2", "fig4", "fig5", "fig6", "ablations",
-                      "gossip", "roofline"])
+                      "gossip", "mix", "roofline"])
     os.makedirs(args.out, exist_ok=True)
     verdicts = []
     t_start = time.time()
@@ -104,6 +105,21 @@ def main() -> None:
         rows = gossip_cost.run()
         json.dump(rows, open(f"{args.out}/gossip_cost.json", "w"), indent=1,
                   default=float)
+
+    if "mix" in sections:
+        from benchmarks import gossip_cost
+
+        rec = gossip_cost.run_mix(smoke=not args.full,
+                                  out_path=f"{args.out}/BENCH_mix.json")
+        verdicts.append(
+            "mix kernel: fused plane %s the legacy per-row path "
+            "(wall %.1fx, modeled HBM bytes %.1fx; 1 pallas_call vs %d "
+            "programs per mix)" % (
+                "dominates" if rec["fused_vs_rows"]["dominates"]
+                else "DOES NOT dominate",
+                rec["fused_vs_rows"]["wall_speedup"],
+                rec["fused_vs_rows"]["hbm_bytes_ratio"],
+                rec["impls"]["pallas_rows"]["kernel_programs_per_mix"]))
 
     if "roofline" in sections:
         from benchmarks import roofline

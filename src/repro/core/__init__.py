@@ -22,6 +22,7 @@ from repro.core.mixing import (
     circulant_decomposition,
     CirculantSchedule,
 )
+from repro.core.plane import LeafSlot, PlaneLayout
 from repro.core.coeffs import (
     CoeffProgram,
     ProgramCoeffs,

@@ -38,6 +38,7 @@ across rounds is the paper's knowledge-propagation metric.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -84,12 +85,22 @@ class DecentralizedConfig:
     local_epochs: int = 5      # E in the paper
     eval_every: int = 1
     resample_random_each_round: bool = True   # paper's Random baseline redraws
+    # True (default): Eq. (2) accumulates in f32 whatever the param dtype
+    # (bf16 aggregation in low precision loses exactly the small OOD
+    # deltas the paper studies).  False: accumulate in the native param /
+    # plane dtype — the low-precision-aggregation ablation.  Routed to
+    # every mixing backend via make_round_fn → make_mix_fn.
     mix_in_float32: bool = True
     unroll_eval: bool = False  # True → legacy per-round Python loop
-    # "einsum" | "pallas" (kernels.gossip_mix) | "sparse" (circulant
+    # "einsum" | "pallas" (fused flat-plane kernel, kernels.gossip_mix:
+    # one pallas_call per mix — DESIGN.md §11) | "sparse" (circulant
     # ring-offset schedule from the topology support; dense fallback for
     # supports that don't decompose compactly — see make_mix_fn)
     mix_impl: str = "einsum"
+    # mix_impl="sparse" fallback slack: dense fallback when the non-self
+    # ring-offset count exceeds max degree + sparse_slack (see
+    # make_mix_fn / sparse_schedule).
+    sparse_slack: int = 4
     # True (default): the pipeline supplies E *distinct* epoch passes per
     # round (``NodeBatcher(local_epochs=E)``) and LocalTrain consumes them
     # as-is — the paper's Eq. (1).  False: legacy behavior — one epoch of
@@ -181,10 +192,13 @@ def coeffs_stack(
 # ----------------------------------------------------------------------
 def make_mix_fn(mix_impl: str = "einsum",
                 mix_support: Optional[np.ndarray] = None,
-                sparse_slack: int = 4) -> Callable:
-    """Aggregation backend: XLA einsum (default), the fused Pallas kernel
-    (kernels/gossip_mix.py; interpret-mode on CPU, compiled on TPU/GPU),
-    or the circulant ring-offset schedule (``mixing.mix_sparse``).
+                sparse_slack: int = 4,
+                mix_in_float32: bool = True) -> Callable:
+    """Aggregation backend: XLA einsum (default), the fused flat-plane
+    Pallas kernel (``kernels.gossip_mix.mix_plane_pallas`` — the whole
+    mix as ONE ``pallas_call``, DESIGN.md §11; interpret-mode on CPU,
+    compiled on TPU/GPU), or the circulant ring-offset schedule
+    (``mixing.mix_sparse``).
 
     ``"sparse"`` needs ``mix_support`` — the (n, n) neighbourhood mask
     (adjacency + self-loops) that fixes the static offset set.  When the
@@ -192,13 +206,21 @@ def make_mix_fn(mix_impl: str = "einsum",
     decomposition moves no fewer bytes than a dense all-gather, so this
     falls back to :func:`repro.core.mixing.mix_dense` (unstructured
     supports don't circulant-decompose compactly; rings/WS graphs do).
+
+    ``mix_in_float32=False`` switches every backend's accumulation from
+    f32 to the native param/plane dtype
+    (``DecentralizedConfig.mix_in_float32`` — the low-precision
+    aggregation ablation).
     """
     if mix_impl == "einsum":
-        return mix_dense
+        if mix_in_float32:
+            return mix_dense
+        return functools.partial(mix_dense, mix_in_float32=False)
     if mix_impl == "pallas":
-        from repro.kernels.gossip_mix import mix_dense_pallas
+        from repro.kernels.gossip_mix import mix_plane_pallas
 
-        return mix_dense_pallas
+        return functools.partial(mix_plane_pallas,
+                                 mix_in_float32=mix_in_float32)
     if mix_impl == "sparse":
         if mix_support is None:
             raise ValueError(
@@ -207,8 +229,9 @@ def make_mix_fn(mix_impl: str = "einsum",
                 "ring-offset schedule at trace time")
         offsets, _ = sparse_schedule(mix_support, sparse_slack)
         if offsets is None:
-            return mix_dense
-        return lambda params, coeffs: mix_sparse(params, coeffs, offsets)
+            return make_mix_fn("einsum", mix_in_float32=mix_in_float32)
+        return lambda params, coeffs: mix_sparse(
+            params, coeffs, offsets, mix_in_float32=mix_in_float32)
     raise KeyError(f"unknown mix_impl {mix_impl!r}; "
                    f"have 'einsum', 'pallas', 'sparse'")
 
@@ -280,14 +303,20 @@ def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
 def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
                   mix_impl: str = "einsum",
                   epoch_shuffle: bool = True,
-                  mix_support: Optional[np.ndarray] = None) -> Callable:
+                  mix_support: Optional[np.ndarray] = None,
+                  sparse_slack: int = 4,
+                  mix_in_float32: bool = True) -> Callable:
     """One full round — vmapped LocalTrain then aggregation — as a pure
     function ``(stacked_params, stacked_opt, node_batches, coeffs) →
-    (mixed_params, opt, losses)``.  ``mix_support`` is only consulted by
-    ``mix_impl='sparse'`` (see :func:`make_mix_fn`)."""
+    (mixed_params, opt, losses)``.  ``mix_support`` and ``sparse_slack``
+    are only consulted by ``mix_impl='sparse'``; ``mix_in_float32``
+    selects every backend's accumulation dtype (see
+    :func:`make_mix_fn`)."""
     local_train = make_local_train_fn(loss_fn, optimizer, local_epochs,
                                       epoch_shuffle)
-    mix = make_mix_fn(mix_impl, mix_support=mix_support)
+    mix = make_mix_fn(mix_impl, mix_support=mix_support,
+                      sparse_slack=sparse_slack,
+                      mix_in_float32=mix_in_float32)
 
     def round_fn(stacked_params, stacked_opt, node_batches, coeffs):
         params, opt, losses = jax.vmap(local_train)(
@@ -443,7 +472,9 @@ class DecentralizedTrainer:
                 (np.abs(np.asarray(m0)) > 1e-12).astype(np.float64))
         self._round_fn = make_round_fn(
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
-            config.epoch_shuffle, mix_support=mix_support)
+            config.epoch_shuffle, mix_support=mix_support,
+            sparse_slack=config.sparse_slack,
+            mix_in_float32=config.mix_in_float32)
         self._train_round = jax.jit(self._round_fn)
         self._evaluate = jax.jit(self._evaluate_impl)
         self._scan_fn = make_scan_fn(self._round_fn, self._evaluate_impl)

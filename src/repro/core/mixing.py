@@ -28,6 +28,10 @@ Two schedules are provided:
   :func:`mix_dense` when the offset count exceeds max degree + slack —
   near-circulant graphs (rings, WS) win, unstructured support does not.
 
+A third backend lives in ``repro.kernels.gossip_mix``: the fused
+flat-plane Pallas kernel (``mix_impl="pallas"`` — the whole mix as ONE
+``pallas_call`` over a packed ``(n, P)`` parameter plane, DESIGN.md §11).
+
 All are pure functions of (params, coefficients) and agree to float
 tolerance — property-tested in tests/test_mixing.py.
 """
@@ -50,25 +54,33 @@ __all__ = [
 ]
 
 
-def _leaf_mix(c: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+def _leaf_mix(c: jnp.ndarray, leaf: jnp.ndarray,
+              mix_in_float32: bool = True) -> jnp.ndarray:
     """out[i, ...] = Σ_j c[i, j] · leaf[j, ...], preserving leaf dtype.
 
-    Accumulates in f32 — aggregation of bf16 params in low precision loses
-    knowledge exactly where the paper needs it (small OOD deltas).
+    ``mix_in_float32=True`` (default) accumulates in f32 — aggregation of
+    bf16 params in low precision loses knowledge exactly where the paper
+    needs it (small OOD deltas).  False accumulates in the leaf dtype (the
+    low-precision-aggregation ablation,
+    ``DecentralizedConfig(mix_in_float32=False)``).
     """
-    acc = jnp.tensordot(c.astype(jnp.float32), leaf.astype(jnp.float32), axes=(1, 0))
+    acc_dtype = jnp.float32 if mix_in_float32 else leaf.dtype
+    acc = jnp.tensordot(c.astype(acc_dtype), leaf.astype(acc_dtype),
+                        axes=(1, 0))
     return acc.astype(leaf.dtype)
 
 
-def mix_dense(params, coeffs: jnp.ndarray):
+def mix_dense(params, coeffs: jnp.ndarray, mix_in_float32: bool = True):
     """Dense gossip: every leaf contracted against the (n, n) matrix.
 
     Args:
       params: pytree with leaves of shape (n, ...).
       coeffs: (n, n) row-stochastic mixing matrix (device array or numpy).
+      mix_in_float32: accumulation dtype — see :func:`_leaf_mix`.
     """
     c = jnp.asarray(coeffs)
-    return jax.tree.map(lambda leaf: _leaf_mix(c, leaf), params)
+    return jax.tree.map(lambda leaf: _leaf_mix(c, leaf, mix_in_float32),
+                        params)
 
 
 # ----------------------------------------------------------------------
@@ -128,7 +140,8 @@ def sparse_offsets(support: np.ndarray) -> Tuple[int, ...]:
                  if np.any(s[rows, (rows + k) % n] > 0))
 
 
-def mix_sparse(params, coeffs: jnp.ndarray, offsets: Sequence[int]):
+def mix_sparse(params, coeffs: jnp.ndarray, offsets: Sequence[int],
+               mix_in_float32: bool = True):
     """Circulant gossip with STATIC offsets and TRACED weights.
 
     ``offsets`` fixes the ring-shift schedule at trace time (it comes from
@@ -139,7 +152,9 @@ def mix_sparse(params, coeffs: jnp.ndarray, offsets: Sequence[int]):
     Requires ``offsets`` ⊇ the support of ``coeffs`` — entries outside
     the offset set are silently dropped (callers derive offsets from the
     nominal topology, whose support only ever shrinks under churn).
-    Accumulates in f32 like :func:`mix_dense`.
+    Accumulates in f32 like :func:`mix_dense` (``mix_in_float32=False``
+    accumulates in the leaf dtype, matching the other backends' ablation
+    knob).
     """
     c = jnp.asarray(coeffs).astype(jnp.float32)
     n = c.shape[0]
@@ -147,12 +162,14 @@ def mix_sparse(params, coeffs: jnp.ndarray, offsets: Sequence[int]):
     weights = [c[rows, (rows + k) % n] for k in offsets]
 
     def leaf_fn(leaf: jnp.ndarray) -> jnp.ndarray:
-        acc = jnp.zeros(leaf.shape, jnp.float32)
+        acc_dtype = jnp.float32 if mix_in_float32 else leaf.dtype
+        acc = jnp.zeros(leaf.shape, acc_dtype)
         extra = (1,) * (leaf.ndim - 1)
         for k, w in zip(offsets, weights):
             # destination i receives source (i+k) % n  ==  roll by -k
             shifted = jnp.roll(leaf, shift=-k, axis=0) if k else leaf
-            acc = acc + w.reshape((n,) + extra) * shifted.astype(jnp.float32)
+            acc = acc + (w.astype(acc_dtype).reshape((n,) + extra)
+                         * shifted.astype(acc_dtype))
         return acc.astype(leaf.dtype)
 
     return jax.tree.map(leaf_fn, params)

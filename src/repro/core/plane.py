@@ -1,0 +1,132 @@
+"""Flat parameter plane: a stacked node-model pytree as ONE (n, P) buffer.
+
+The aggregation step (Eq. 2) contracts every leaf of the stacked pytree
+against the same (n, n) mixing matrix.  Doing that leaf-by-leaf issues one
+GEMM (or, worse, one kernel family) per leaf; the contraction itself does
+not care about leaf boundaries.  :class:`PlaneLayout` erases them: it
+records, once per tree structure, where each leaf's ``prod(trailing)``
+columns live inside a contiguous ``(n, P)`` plane, so the whole mix
+becomes a single ``C @ plane`` — one kernel launch regardless of how many
+leaves the model has (DESIGN.md §11).
+
+The layout is *static* metadata (shapes/dtypes/offsets — no arrays), built
+from the pytree structure at trace time and therefore baked into the
+compiled program: packing/unpacking trace to one concatenate / one slice
+set per call, and the same layout is reused by every round of a scan and
+every experiment of a vmapped sweep because it is part of the single
+traced mix function.
+
+``pack`` casts every leaf to one *plane dtype* (default: the widest leaf
+dtype via ``jnp.result_type``; pass ``jnp.bfloat16`` to halve the plane's
+HBM footprint) and ``unpack`` restores each leaf's own shape and dtype, so
+mixed-precision models round-trip losslessly when the plane dtype covers
+them and degrade only by the explicit storage cast when it does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LeafSlot", "PlaneLayout"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's column range inside the plane (static metadata)."""
+
+    shape: Tuple[int, ...]   # trailing shape (node axis stripped)
+    dtype: Any               # the leaf's own dtype (restored by unpack)
+    offset: int              # first plane column
+    size: int                # prod(shape), ≥ 1 (scalar-per-node leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneLayout:
+    """Static packing plan for a stacked pytree with leading node axis n.
+
+    Hashable/comparable (treedef + slot tuple), so it can key jit caches;
+    contains no array data.
+    """
+
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    n_nodes: int
+
+    @property
+    def n_params(self) -> int:
+        """P — plane columns (per-node parameter count over all leaves)."""
+        return 0 if not self.slots else (self.slots[-1].offset
+                                         + self.slots[-1].size)
+
+    @property
+    def widest_dtype(self):
+        """Default plane dtype: ``jnp.result_type`` over the leaf dtypes —
+        f32 as soon as any leaf is f32, bf16 for an all-bf16 tree."""
+        return jnp.result_type(*[s.dtype for s in self.slots])
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_tree(cls, params) -> "PlaneLayout":
+        """Layout for a stacked pytree (every leaf ``(n, ...)``).  Works on
+        concrete arrays and on tracers — only shapes/dtypes are read."""
+        leaves, treedef = jax.tree.flatten(params)
+        if not leaves:
+            raise ValueError("PlaneLayout.from_tree: empty pytree")
+        n = leaves[0].shape[0]
+        slots, offset = [], 0
+        for leaf in leaves:
+            if leaf.ndim < 1 or leaf.shape[0] != n:
+                raise ValueError(
+                    f"stacked pytree leaves must share the leading node "
+                    f"axis; got shapes {[l.shape for l in leaves]}")
+            size = int(np.prod(leaf.shape[1:], dtype=np.int64)) if \
+                leaf.ndim > 1 else 1
+            slots.append(LeafSlot(tuple(leaf.shape[1:]), jnp.dtype(leaf.dtype),
+                                  offset, size))
+            offset += size
+        return cls(treedef, tuple(slots), n)
+
+    # ------------------------------------------------------------------
+    def _check_tree(self, params) -> list:
+        """Trace-time structural guard: packing a tree this layout was
+        not built from would silently mis-offset every column."""
+        leaves, treedef = jax.tree.flatten(params)
+        if treedef != self.treedef or any(
+                tuple(l.shape) != (self.n_nodes,) + s.shape
+                for l, s in zip(leaves, self.slots)):
+            raise ValueError(
+                f"PlaneLayout mismatch: layout was built for "
+                f"{self.treedef} with leaf shapes "
+                f"{[(self.n_nodes,) + s.shape for s in self.slots]}, got "
+                f"{treedef} with {[tuple(l.shape) for l in leaves]}")
+        return leaves
+
+    def pack(self, params, dtype: Optional[Any] = None) -> jnp.ndarray:
+        """Stacked pytree → ``(n, P)`` plane (one concatenate).
+
+        ``dtype``: plane storage dtype; None → :attr:`widest_dtype`.
+        """
+        dtype = self.widest_dtype if dtype is None else jnp.dtype(dtype)
+        leaves = self._check_tree(params)
+        cols = [jnp.reshape(l, (self.n_nodes, -1)).astype(dtype)
+                for l in leaves]
+        return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+    def unpack(self, plane: jnp.ndarray):
+        """``(n, P)`` plane → stacked pytree, each leaf back in its own
+        shape and dtype (the inverse of :meth:`pack` up to the storage
+        cast)."""
+        if plane.shape[-1] != self.n_params:
+            raise ValueError(
+                f"PlaneLayout.unpack: plane has {plane.shape[-1]} columns, "
+                f"layout packs {self.n_params}")
+        leaves = [
+            jnp.reshape(plane[:, s.offset:s.offset + s.size],
+                        (self.n_nodes,) + s.shape).astype(s.dtype)
+            for s in self.slots
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)

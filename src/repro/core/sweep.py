@@ -216,7 +216,9 @@ class SweepEngine:
         self._mix_support = mix_support
         self._round_fn = make_round_fn(
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
-            config.epoch_shuffle, mix_support=mix_support)
+            config.epoch_shuffle, mix_support=mix_support,
+            sparse_slack=config.sparse_slack,
+            mix_in_float32=config.mix_in_float32)
         self._run_jit = jax.jit(
             self._run_impl,
             static_argnames=("batch_size", "program", "analytics",
@@ -240,7 +242,8 @@ class SweepEngine:
 
         if self._mix_support is None:
             return  # make_round_fn already raised in __init__
-        _, covered = sparse_schedule(self._mix_support)
+        _, covered = sparse_schedule(self._mix_support,
+                                     self.config.sparse_slack)
         if covered is None:
             return  # fell back to mix_dense
         if program is None:

@@ -1,23 +1,42 @@
-"""Pallas TPU kernel: fused K-way weighted parameter mix (gossip hot-spot).
+"""Pallas TPU kernels for the gossip aggregation hot spot (Eq. 2).
 
-The paper's aggregation step is memory-bound: ``out = Σ_k c_k · M_k`` over
-K neighbour parameter blocks.  A naive ``sum(c*m for ...)`` materializes
-K−1 intermediates in HBM (2(K−1) extra HBM round-trips).  This kernel
-streams each parameter tile once: grid over (M, N) tiles; each program
-loads its (K, bm, bn) slab into VMEM and MACs in f32 registers.
+Two generations live here:
 
-VMEM budget per program: K·bm·bn·bytes + bm·bn·4 (acc).  Default tile
-(8·K-adaptive × 512 f32) keeps the slab ≈ 2 MiB ≪ 16 MiB VMEM.
+* :func:`gossip_plane_pallas` / :func:`mix_plane_pallas` — the **fused
+  flat-plane mix** (DESIGN.md §11).  The stacked pytree is packed into one
+  contiguous ``(n, P)`` plane (:class:`repro.core.plane.PlaneLayout`) and
+  the whole round's aggregation ``out = C @ plane`` runs as ONE
+  ``pallas_call``: grid over parameter tiles ``⌈P/bt⌉``, each program
+  loading the full ``(n, n)`` coefficient block plus an ``(n, bt)`` plane
+  slab into VMEM and producing all n destination rows with f32
+  accumulation (``mix_in_float32=False`` accumulates in the plane dtype —
+  the low-precision-aggregation ablation).  Modeled HBM traffic:
+  ``2·n·P·b`` for the kernel stream (read + write the plane once) plus
+  ``⌈P/bt⌉·n²·4`` coefficient re-fetches; the pack/unpack copies around
+  the kernel add ``4·n·P·b`` end-to-end (see :func:`mix_modeled_hbm_bytes`
+  — measured alongside wall-clock in ``benchmarks/gossip_cost.run_mix``,
+  tracked as ``benchmarks/artifacts/BENCH_mix.json``).  This is the
+  ``DecentralizedConfig(mix_impl="pallas")`` path.
 
-Roofline: bytes = (K+1)·|P| → t_mem = (K+1)·|P| / 819 GB/s per chip; the
-fusion makes this the floor (vs (3K−1)·|P| naive).
+* :func:`gossip_mix_pallas` / :func:`mix_dense_pallas` — the **legacy
+  per-row kernel family**, kept as the benchmark baseline.  Honest cost:
+  ``mix_dense_pallas`` tree-maps over leaves and vmaps a ``bm=1`` kernel
+  over the n destination rows, so one mix issues ``n_leaves × n`` kernel
+  programs and every destination row re-reads its full ``(n, |leaf|)``
+  slab — ~``n·(n+1)·|P|`` bytes of HBM traffic versus the fused path's
+  ~``2·n·|P|`` streaming floor, plus an n²-unrolled-MAC compile blow-up
+  from the static K loop.  (An earlier docstring advertised a
+  ``(K+1)·|P|`` floor for this wrapper; that figure described ONE
+  ``gossip_mix_pallas`` call, not the n-row × n_leaves fan-out the mix
+  actually performs.)
+
+VMEM budget per fused program: ``n_pad²·4`` (coeffs) + ``2·n_pad·bt·b``
+(plane slab + out tile) — ≈ 1 MiB at n=64, bt=2048, f32, far under the
+~16 MiB/core budget; ``bt`` is the knob if n grows.
 
 Backend selection: ``interpret=None`` (the default) auto-detects — the
-kernel compiles for real on TPU/GPU backends and falls back to Pallas
-interpret mode on CPU, so the same call sites work everywhere.  The
-scan/vmap sweep engine routes its aggregation through
-:func:`mix_dense_pallas` when ``DecentralizedConfig(mix_impl="pallas")``
-(see DESIGN.md §6/§7).
+kernels compile for real on TPU/GPU backends and fall back to Pallas
+interpret mode on CPU, so the same call sites work everywhere.
 """
 from __future__ import annotations
 
@@ -28,7 +47,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_mix_pallas", "mix_dense_pallas", "default_interpret"]
+from repro.core.plane import PlaneLayout
+
+__all__ = [
+    "gossip_plane_pallas",
+    "mix_plane_pallas",
+    "gossip_mix_pallas",
+    "mix_dense_pallas",
+    "mix_modeled_hbm_bytes",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:
@@ -36,6 +64,143 @@ def default_interpret() -> bool:
     return jax.default_backend() not in ("tpu", "gpu")
 
 
+# ----------------------------------------------------------------------
+# fused flat-plane mix: the whole round's aggregation in ONE pallas_call
+# ----------------------------------------------------------------------
+def _plane_kernel(acc_dtype, c_ref, p_ref, o_ref):
+    """One (n_pad, bt) output tile: all destination rows of one parameter
+    slab.  c_ref: (n_pad, n_pad) f32 VMEM; p_ref: (n_pad, bt) plane slab;
+    o_ref: (n_pad, bt).  ``acc_dtype`` fixes the MAC precision (f32 by
+    default; the plane dtype under mix_in_float32=False)."""
+    c = c_ref[...].astype(acc_dtype)
+    p = p_ref[...].astype(acc_dtype)
+    o_ref[...] = jnp.dot(c, p, preferred_element_type=acc_dtype).astype(
+        o_ref.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bt", "interpret", "mix_in_float32"))
+def gossip_plane_pallas(plane: jnp.ndarray, coeffs: jnp.ndarray,
+                        bt: int = 2048,
+                        interpret: Optional[bool] = None,
+                        mix_in_float32: bool = True) -> jnp.ndarray:
+    """``out = coeffs @ plane`` as ONE ``pallas_call``.
+
+    plane: (n, P) — all n node-models' parameters, one row each.
+    coeffs: (n, n) row-stochastic mixing matrix.
+    bt: plane tile width (grid = ⌈P/bt⌉ programs; each holds the full
+      coefficient block plus one (n, bt) slab in VMEM).
+    interpret: None → auto (compiled on TPU/GPU, interpret on CPU).
+    mix_in_float32: False accumulates in the plane dtype instead of f32
+      (the low-precision-aggregation ablation; see
+      ``DecentralizedConfig.mix_in_float32``).
+
+    n and P are padded internally (zeros — padded coefficient rows/cols
+    carry no weight) and the (n, P) result sliced back out.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, p = plane.shape
+    # sublane multiple for the plane dtype (f32: 8, bf16: 16); the f32
+    # coefficient block is (n_pad, n_pad) which then also satisfies its
+    # own 8-row constraint.
+    sub = 16 if plane.dtype == jnp.bfloat16 else 8
+    n_pad = _round_up(n, sub)
+    # clamp bt to the plane width, then to a lane (128) multiple — a
+    # non-multiple tile would pass in interpret mode but fail Mosaic
+    # lowering on the TPU backend the kernel exists for
+    bt = _round_up(min(bt, _round_up(p, 128)), 128)
+    p_pad = _round_up(p, bt)
+    if (n_pad, p_pad) != (n, p):
+        plane = jnp.pad(plane, ((0, n_pad - n), (0, p_pad - p)))
+    c = jnp.asarray(coeffs, jnp.float32)
+    if n_pad != n:
+        c = jnp.pad(c, ((0, n_pad - n), (0, n_pad - n)))
+    acc_dtype = jnp.float32 if mix_in_float32 else plane.dtype
+
+    out = pl.pallas_call(
+        functools.partial(_plane_kernel, acc_dtype),
+        grid=(p_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda j: (0, 0)),  # coeff block
+            pl.BlockSpec((n_pad, bt), lambda j: (0, j)),     # plane slab
+        ],
+        out_specs=pl.BlockSpec((n_pad, bt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, p_pad), plane.dtype),
+        interpret=interpret,
+    )(c, plane)
+    return out[:n, :p]
+
+
+def mix_plane_pallas(params, coeffs: jnp.ndarray,
+                     bt: int = 2048,
+                     plane_dtype=None,
+                     interpret: Optional[bool] = None,
+                     mix_in_float32: bool = True):
+    """Eq. (2) over a stacked pytree via the fused flat-plane kernel:
+    pack once → ONE :func:`gossip_plane_pallas` → unpack once, per mix —
+    one kernel launch regardless of leaf count (asserted by jaxpr
+    inspection in tests/test_kernels.py).
+
+    ``plane_dtype``: plane storage dtype (None → widest leaf dtype;
+    ``jnp.bfloat16`` halves the kernel's HBM traffic while f32
+    accumulation is preserved — low-precision *accumulation* is a
+    separate knob, ``mix_in_float32=False``).
+
+    Drop-in replacement for :func:`repro.core.mixing.mix_dense` (same
+    f32 accumulation by default, same output dtypes); selected by
+    ``DecentralizedConfig(mix_impl="pallas")``.  The
+    :class:`repro.core.plane.PlaneLayout` is static metadata derived
+    from the tree structure at trace time, so scans over rounds and
+    vmaps over experiments reuse one layout and one compiled kernel.
+    """
+    layout = PlaneLayout.from_tree(params)
+    plane = layout.pack(params, dtype=plane_dtype)
+    mixed = gossip_plane_pallas(plane, coeffs, bt=bt, interpret=interpret,
+                                mix_in_float32=mix_in_float32)
+    return layout.unpack(mixed)
+
+
+def mix_modeled_hbm_bytes(impl: str, n: int, p_floats: int,
+                          itemsize: int = 4, n_leaves: int = 1,
+                          bt: int = 2048) -> int:
+    """Modeled HBM bytes for one mix of an n-node model with ``p_floats``
+    parameters per node (``itemsize`` bytes each, split over ``n_leaves``
+    pytree leaves) — the numbers ``BENCH_mix.json`` tracks.
+
+    * ``"einsum"``   — one XLA GEMM per leaf: stream the stacked params
+      in and out once, re-reading the (n, n) matrix per leaf:
+      ``2·n·P·b + n_leaves·n²·4``.
+    * ``"pallas_rows"`` — the legacy ``mix_dense_pallas`` fan-out: every
+      destination row of every leaf re-reads its full (n, |leaf|) slab:
+      ``n·(n+1)·P·b`` plus per-program weight vectors (``n²·4·n_leaves``).
+    * ``"pallas_plane"`` — the fused kernel: stream the plane in and out
+      once plus per-tile coefficient re-fetches:
+      ``2·n·P·b + ⌈P/bt⌉·n²·4``.
+    * ``"pallas_plane_e2e"`` — fused kernel plus the pack/unpack copies
+      around it (each a read + write of the plane): ``6·n·P·b + ...`` —
+      the honest end-to-end figure when the mix is used leaf-in/leaf-out.
+    """
+    coeff = n * n * 4
+    if impl == "einsum":
+        return 2 * n * p_floats * itemsize + n_leaves * coeff
+    if impl == "pallas_rows":
+        return n * (n + 1) * p_floats * itemsize + n_leaves * n * n * 4
+    tiles = -(-p_floats // bt)
+    if impl == "pallas_plane":
+        return 2 * n * p_floats * itemsize + tiles * coeff
+    if impl == "pallas_plane_e2e":
+        return 6 * n * p_floats * itemsize + tiles * coeff
+    raise KeyError(f"unknown impl {impl!r}")
+
+
+# ----------------------------------------------------------------------
+# legacy per-row kernel family (benchmark baseline)
+# ----------------------------------------------------------------------
 def _kernel(w_ref, blocks_ref, out_ref):
     """blocks_ref: (K, bm, bn) VMEM; w_ref: (K,) SMEM-ish; out: (bm, bn)."""
     k = blocks_ref.shape[0]
@@ -49,11 +214,16 @@ def _kernel(w_ref, blocks_ref, out_ref):
 def gossip_mix_pallas(blocks: jnp.ndarray, weights: jnp.ndarray,
                       bm: int = 256, bn: int = 512,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
-    """out = Σ_k weights[k] · blocks[k].
+    """out = Σ_k weights[k] · blocks[k]  (legacy K-way MAC kernel).
 
     blocks: (K, M, N) — K neighbour copies of one parameter tile-matrix.
     weights: (K,) f32.  M, N padded to tile multiples internally.
     interpret: None → auto (compiled on TPU/GPU, interpret on CPU).
+
+    One call streams its (K, M, N) input once — bytes ≈ (K+1)·M·N·b — but
+    the :func:`mix_dense_pallas` wrapper issues n of these per leaf, so
+    the *mix* is ~n·(K+1)·|P| bytes; use :func:`mix_plane_pallas` for the
+    fused single-call path.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -81,13 +251,14 @@ def gossip_mix_pallas(blocks: jnp.ndarray, weights: jnp.ndarray,
 
 def mix_dense_pallas(params, coeffs: jnp.ndarray,
                      interpret: Optional[bool] = None):
-    """Eq. (2) over a stacked pytree via the fused kernel: for each leaf
-    ``(n, ...)``, destination row i is the K=n-way MAC ``Σ_j C[i,j]·leaf[j]``
-    — one :func:`gossip_mix_pallas` call vmapped over destination rows.
-
-    Drop-in replacement for :func:`repro.core.mixing.mix_dense` (same f32
-    accumulation, same output dtype); selected by
-    ``DecentralizedConfig(mix_impl="pallas")``.
+    """LEGACY Eq. (2) path, kept as the ``BENCH_mix`` baseline: for each
+    leaf ``(n, ...)``, destination row i is the K=n-way MAC
+    ``Σ_j C[i,j]·leaf[j]`` — one :func:`gossip_mix_pallas` call vmapped
+    over destination rows, i.e. ``n_leaves × n`` kernel programs per mix,
+    each re-reading the full leaf slab (~``n·(n+1)·|P|`` HBM bytes; see
+    :func:`mix_modeled_hbm_bytes`).  Production aggregation routes
+    through :func:`mix_plane_pallas` instead
+    (``DecentralizedConfig(mix_impl="pallas")``).
     """
     c = jnp.asarray(coeffs, jnp.float32)
     n = c.shape[0]

@@ -9,12 +9,16 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gossip_mix import gossip_mix_pallas
+from repro.kernels.gossip_mix import (
+    gossip_mix_pallas,
+    gossip_plane_pallas,
+    mix_plane_pallas,
+)
 from repro.kernels.mla_attention import mla_attention_pallas
 from repro.kernels.ssm_scan import rwkv_scan_pallas
 
-__all__ = ["flash_attention", "gossip_mix", "rwkv_scan", "mla_attention",
-           "on_tpu"]
+__all__ = ["flash_attention", "gossip_mix", "gossip_plane", "mix_plane",
+           "rwkv_scan", "mla_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -31,6 +35,18 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
 
 def gossip_mix(blocks, weights):
     return gossip_mix_pallas(blocks, weights, interpret=not on_tpu())
+
+
+def gossip_plane(plane, coeffs, bt: int = 2048):
+    """Fused flat-plane mix: ``coeffs @ plane`` as ONE pallas_call.
+    interpret=None → compiled on TPU *and* GPU, interpreter on CPU."""
+    return gossip_plane_pallas(plane, coeffs, bt=bt, interpret=None)
+
+
+def mix_plane(params, coeffs, bt: int = 2048):
+    """Pytree-level fused mix (pack → one kernel → unpack);
+    backend auto-detected like :func:`gossip_plane`."""
+    return mix_plane_pallas(params, coeffs, bt=bt, interpret=None)
 
 
 def rwkv_scan(r, k, v, w, u, state, chunk: int = 64):

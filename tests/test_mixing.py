@@ -265,6 +265,206 @@ class TestMixImplSparse:
                                        rtol=1e-5, atol=1e-6)
 
 
+class TestPlaneMix:
+    """mix_impl='pallas' → the fused flat-plane kernel
+    (kernels.gossip_mix.mix_plane_pallas): one pallas_call per mix,
+    equivalent to mix_dense on ragged multi-leaf pytrees."""
+
+    @pytest.mark.parametrize("n", [4, 7, 12])
+    @pytest.mark.parametrize("kind", ["unweighted", "degree", "random"])
+    def test_matches_dense_on_topology_matrices(self, n, kind):
+        topo = barabasi_albert(n, 2, seed=1)
+        c = jnp.asarray(mixing_matrix(topo, AggregationStrategy(
+            kind, tau=0.1, seed=5)))
+        from repro.core.decentralized import make_mix_fn
+
+        mix = make_mix_fn("pallas")
+        p = _params(n)
+        d = mix_dense(p, c)
+        f = mix(p, c)
+        for k in p:
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(f[k]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_preserves_leaf_dtypes(self):
+        from repro.kernels.gossip_mix import mix_plane_pallas
+
+        p = {"w": jnp.ones((4, 3), jnp.bfloat16),
+             "v": jnp.ones((4, 5), jnp.float32)}
+        out = mix_plane_pallas(p, jnp.eye(4))
+        assert out["w"].dtype == jnp.bfloat16
+        assert out["v"].dtype == jnp.float32
+
+    def test_bf16_plane_storage(self):
+        """plane_dtype=bf16 halves kernel HBM traffic; f32 accumulation
+        is preserved so the result only degrades by the storage cast."""
+        from repro.kernels.gossip_mix import mix_plane_pallas
+
+        n = 8
+        p = _params(n)
+        c = jnp.asarray(mixing_matrix(barabasi_albert(n, 2, 0),
+                                      AggregationStrategy("degree", tau=0.1)))
+        d = mix_dense(p, c)
+        f = mix_plane_pallas(p, c, plane_dtype=jnp.bfloat16)
+        for k in p:
+            assert f[k].dtype == p[k].dtype
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(f[k]),
+                                       rtol=2e-2, atol=2e-2)
+
+    def test_row_stochastic_invariance(self):
+        """Constant-across-nodes params are a fixed point of every
+        row-stochastic matrix under the fused path."""
+        from repro.kernels.gossip_mix import mix_plane_pallas
+
+        n = 6
+        base = _params(1, seed=3)
+        p = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[:1], (n,) + x.shape[1:]), base)
+        c = jax.nn.softmax(
+            jax.random.normal(jax.random.key(0), (n, n)), axis=1)
+        out = mix_plane_pallas(p, c)
+        for k in p:
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(p[k]),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestMixInFloat32:
+    """DecentralizedConfig.mix_in_float32 is a real knob: every backend
+    accumulates in f32 when True (default) and in the native param/plane
+    dtype when False."""
+
+    def _bf16_params(self, n=8):
+        p = _params(n, seed=9)
+        return jax.tree.map(lambda x: (x * 2).astype(jnp.bfloat16), p)
+
+    def _coeffs(self, n=8):
+        t = barabasi_albert(n, 2, 0)
+        return jnp.asarray(mixing_matrix(
+            t, AggregationStrategy("degree", tau=0.1)), jnp.float32), t
+
+    @pytest.mark.parametrize("impl", ["einsum", "pallas", "sparse"])
+    def test_flag_changes_bf16_accumulation(self, impl):
+        from repro.core.decentralized import make_mix_fn
+
+        n = 8
+        c, topo = self._coeffs(n)
+        p = self._bf16_params(n)
+        support = topo.adjacency + np.eye(n)
+        kw = dict(mix_support=support, sparse_slack=n) if impl == "sparse" \
+            else {}
+        hi = make_mix_fn(impl, mix_in_float32=True, **kw)(p, c)
+        lo = make_mix_fn(impl, mix_in_float32=False, **kw)(p, c)
+        diff = any(
+            np.any(np.asarray(a, np.float32) != np.asarray(b, np.float32))
+            for a, b in zip(jax.tree.leaves(hi), jax.tree.leaves(lo)))
+        assert diff, f"{impl}: accumulation dtype had no effect"
+        # low-precision einsum path == explicit bf16 oracle
+        if impl == "einsum":
+            for k in p:
+                oracle = jnp.tensordot(
+                    c.astype(jnp.bfloat16), p[k], axes=(1, 0))
+                np.testing.assert_array_equal(
+                    np.asarray(lo[k], np.float32),
+                    np.asarray(oracle, np.float32))
+
+    def test_f32_leaves_unaffected(self):
+        """On f32 params the flag is a no-op — the seeded goldens stay
+        valid whichever way it is set."""
+        from repro.core.decentralized import make_mix_fn
+
+        c, _ = self._coeffs(8)
+        p = _params(8)
+        hi = make_mix_fn("einsum", mix_in_float32=True)(p, c)
+        lo = make_mix_fn("einsum", mix_in_float32=False)(p, c)
+        for a, b in zip(jax.tree.leaves(hi), jax.tree.leaves(lo)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestConfigThreading:
+    """DecentralizedConfig.{mix_in_float32,sparse_slack} must actually
+    reach make_mix_fn from both engines (they were dead/unreachable
+    before the fused-plane refactor)."""
+
+    def _spy(self, monkeypatch):
+        import repro.core.decentralized as dec
+
+        seen = {}
+        real = dec.make_mix_fn
+
+        def spy(mix_impl="einsum", mix_support=None, sparse_slack=4,
+                mix_in_float32=True):
+            seen.update(sparse_slack=sparse_slack,
+                        mix_in_float32=mix_in_float32)
+            return real(mix_impl, mix_support=mix_support,
+                        sparse_slack=sparse_slack,
+                        mix_in_float32=mix_in_float32)
+
+        monkeypatch.setattr(dec, "make_mix_fn", spy)
+        return seen
+
+    def test_trainer_threads_knobs(self, monkeypatch):
+        from repro.core.decentralized import (
+            DecentralizedConfig, DecentralizedTrainer)
+        from repro.training.optimizer import sgd
+
+        seen = self._spy(monkeypatch)
+        cfg = DecentralizedConfig(mix_in_float32=False, sparse_slack=9)
+        DecentralizedTrainer(ring(4), AggregationStrategy("unweighted"),
+                             sgd(1e-2), lambda p, b: 0.0,
+                             lambda p, t: 0.0, cfg)
+        assert seen == {"sparse_slack": 9, "mix_in_float32": False}
+
+    def test_engine_threads_knobs(self, monkeypatch):
+        from repro.core.decentralized import DecentralizedConfig
+        from repro.core.sweep import SweepEngine
+        from repro.training.optimizer import sgd
+
+        seen = self._spy(monkeypatch)
+        cfg = DecentralizedConfig(mix_in_float32=False, sparse_slack=7)
+        SweepEngine(sgd(1e-2), lambda p, b: 0.0, lambda p, t: 0.0, cfg)
+        assert seen == {"sparse_slack": 7, "mix_in_float32": False}
+
+    def test_sparse_slack_changes_fallback_decision(self):
+        """The threaded slack is live: the perfect-matching support falls
+        back to dense at the default slack but keeps the ring schedule
+        when the config-routed slack covers its offset count."""
+        from repro.core.decentralized import make_round_fn
+        from repro.training.optimizer import sgd
+
+        n = 16
+        a = np.zeros((n, n))
+        for i, j in [(0, 5), (1, 9), (2, 12), (3, 7), (4, 14), (6, 13),
+                     (8, 15), (10, 11)]:
+            a[i, j] = a[j, i] = 1.0
+        support = a + np.eye(n)
+        from repro.core.decentralized import make_mix_fn
+
+        assert make_mix_fn("sparse", mix_support=support,
+                           sparse_slack=4) is mix_dense
+        assert make_mix_fn("sparse", mix_support=support,
+                           sparse_slack=n) is not mix_dense
+        c = jnp.asarray(support / support.sum(1, keepdims=True), jnp.float32)
+        p = _params(n)
+        opt = sgd(1e-2)
+        loss = lambda q, b: sum(jnp.sum(l) for l in jax.tree.leaves(q)) * 0.0
+        outs = []
+        for slack in (4, n):
+            rf = make_round_fn(loss, opt, local_epochs=1, mix_impl="sparse",
+                               epoch_shuffle=False, mix_support=support,
+                               sparse_slack=slack)
+            o = jax.vmap(opt.init)(p)
+            batches = {"x": jnp.zeros((n, 1, 2, 1))}
+            mixed, _, _ = rf(p, o, batches, c)
+            outs.append(mixed)
+        # both slacks agree with dense on an in-support matrix
+        d = mix_dense(p, c)
+        for out in outs:
+            for k in p:
+                np.testing.assert_allclose(np.asarray(d[k]),
+                                           np.asarray(out[k]),
+                                           rtol=1e-4, atol=1e-5)
+
+
 @given(n=st.integers(4, 16), seed=st.integers(0, 10))
 @settings(max_examples=15, deadline=None)
 def test_property_circulant_exact(n, seed):

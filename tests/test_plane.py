@@ -1,0 +1,131 @@
+"""PlaneLayout: the static pack/unpack plan behind the fused plane mix
+(DESIGN.md §11) — exact round-trips, dtype policy, static metadata."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis import given, settings, st  # optional dep; skips if absent
+
+from repro.core.plane import PlaneLayout
+
+
+def _ragged(n, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    return {
+        "w": jax.random.normal(ks[0], (n, 4, 6)),
+        "b": jax.random.normal(ks[1], (n, 5)),
+        "deep": {"u": jax.random.normal(ks[2], (n, 3, 2, 2))},
+        "scalar": jax.random.normal(ks[3], (n,)),
+    }
+
+
+class TestLayout:
+    def test_offsets_partition_the_plane(self):
+        p = _ragged(6)
+        lo = PlaneLayout.from_tree(p)
+        assert lo.n_nodes == 6
+        sizes = [s.size for s in lo.slots]
+        offsets = [s.offset for s in lo.slots]
+        assert offsets == list(np.cumsum([0] + sizes[:-1]))
+        assert lo.n_params == sum(sizes) == 4 * 6 + 5 + 3 * 2 * 2 + 1
+
+    def test_roundtrip_exact(self):
+        p = _ragged(5)
+        lo = PlaneLayout.from_tree(p)
+        plane = lo.pack(p)
+        assert plane.shape == (5, lo.n_params)
+        out = lo.unpack(plane)
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mixed_dtype_promotes_to_widest(self):
+        p = {"a": jnp.ones((3, 2), jnp.bfloat16),
+             "b": jnp.ones((3, 4), jnp.float32)}
+        lo = PlaneLayout.from_tree(p)
+        assert lo.widest_dtype == jnp.float32
+        out = lo.unpack(lo.pack(p))
+        assert out["a"].dtype == jnp.bfloat16    # leaf dtype restored
+        assert out["b"].dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
+                                      np.ones((3, 2), np.float32))
+
+    def test_all_bf16_tree_packs_bf16(self):
+        p = {"a": jnp.ones((3, 2), jnp.bfloat16),
+             "b": jnp.ones((3, 4), jnp.bfloat16)}
+        assert PlaneLayout.from_tree(p).pack(p).dtype == jnp.bfloat16
+
+    def test_forced_bf16_plane_is_storage_cast_only(self):
+        p = _ragged(4)
+        lo = PlaneLayout.from_tree(p)
+        out = lo.unpack(lo.pack(p, dtype=jnp.bfloat16))
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(out)):
+            assert b.dtype == a.dtype  # f32 restored
+            np.testing.assert_array_equal(
+                np.asarray(b), np.asarray(a.astype(jnp.bfloat16),
+                                          np.float32))
+
+    def test_layout_is_static_and_hashable(self):
+        p = _ragged(4)
+        a, b = PlaneLayout.from_tree(p), PlaneLayout.from_tree(_ragged(4, 1))
+        assert a == b and hash(a) == hash(b)
+        # built from tracers too (shape/dtype only)
+        traced = jax.eval_shape(lambda q: q, p)
+        assert PlaneLayout.from_tree(traced) == a
+
+    def test_single_leaf_no_concat(self):
+        p = {"w": jnp.arange(12.0).reshape(3, 4)}
+        lo = PlaneLayout.from_tree(p)
+        np.testing.assert_array_equal(np.asarray(lo.pack(p)),
+                                      np.asarray(p["w"]))
+
+    def test_pack_rejects_foreign_tree(self):
+        """Reusing a layout on a structurally different tree must error,
+        not silently mis-offset columns."""
+        lo = PlaneLayout.from_tree({"w": jnp.ones((3, 6))})
+        with pytest.raises(ValueError, match="mismatch"):
+            lo.pack({"w": jnp.ones((3, 2)), "v": jnp.ones((3, 4))})
+        with pytest.raises(ValueError, match="mismatch"):
+            lo.pack({"w": jnp.ones((3, 2, 3))})  # same size, wrong shape
+
+    def test_unpack_rejects_wrong_width(self):
+        lo = PlaneLayout.from_tree({"w": jnp.ones((3, 6))})
+        with pytest.raises(ValueError, match="columns"):
+            lo.unpack(jnp.ones((3, 7)))
+
+    def test_rejects_mismatched_node_axis(self):
+        with pytest.raises(ValueError, match="node axis"):
+            PlaneLayout.from_tree({"a": jnp.ones((3, 2)),
+                                   "b": jnp.ones((4, 2))})
+
+    def test_rejects_empty_tree(self):
+        with pytest.raises(ValueError, match="empty"):
+            PlaneLayout.from_tree({})
+
+    def test_pack_under_vmap(self):
+        """vmap over an experiment axis must commute with pack/unpack —
+        the sweep engine packs inside vmap_E."""
+        p = _ragged(4)
+        pE = jax.tree.map(lambda x: jnp.stack([x, 2 * x]), p)
+        lo = PlaneLayout.from_tree(p)
+        planes = jax.vmap(lo.pack)(pE)
+        np.testing.assert_array_equal(np.asarray(planes[0]),
+                                      np.asarray(lo.pack(p)))
+        out = jax.vmap(lo.unpack)(planes)
+        for a, b in zip(jax.tree.leaves(pE), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(n=st.integers(1, 9), seed=st.integers(0, 5))
+@settings(max_examples=15, deadline=None)
+def test_property_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    n_leaves = rng.integers(1, 5)
+    p = {}
+    for i in range(n_leaves):
+        shape = (n,) + tuple(rng.integers(1, 7, size=rng.integers(0, 3)))
+        p[f"l{i}"] = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    lo = PlaneLayout.from_tree(p)
+    out = lo.unpack(lo.pack(p))
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

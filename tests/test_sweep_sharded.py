@@ -150,6 +150,28 @@ SCRIPT = textwrap.dedent("""
             ra.analytics["ood_arrival"][e],
             propagation.arrival_rounds(hist, 0.5))
     print("ANALYTICS_SHARDED_OK")
+
+    # fused flat-plane aggregation (DESIGN.md §11): mix_impl="pallas" now
+    # packs the stacked pytree and runs ONE pallas_call per mix — the
+    # streaming-analytics summaries must stay bit-identical across
+    # scanned / chunked / mesh(8) / mesh(8)+chunk with that kernel too.
+    engine_p = SweepEngine(sgd(1e-2), loss_fn, acc_fn,
+                           dataclasses.replace(cfg, mix_impl="pallas"))
+    runp = lambda **kw: engine_p.run(
+        params0, coeffs, bank, indices, data_idx, st(tb), st(ob),
+        batch_size=8, analytics=spec, **kw)
+    rp = runp()
+    for label, other in [
+        ("chunked", runp(chunk_rounds=3)),
+        ("sharded", runp(mesh=mesh)),
+        ("sharded+chunk", runp(mesh=mesh, chunk_rounds=3)),
+    ]:
+        for k in rp.analytics:
+            np.testing.assert_array_equal(
+                rp.analytics[k], other.analytics[k],
+                err_msg=("pallas", label, k))
+        print("analytics/pallas/" + label, "ok")
+    print("PALLAS_PLANE_ANALYTICS_OK")
     print("SHARDED_SWEEP_OK")
 """)
 
@@ -161,5 +183,7 @@ def test_sharded_sweep_subprocess():
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "ANALYTICS_SHARDED_OK" in out.stdout, (out.stdout[-2000:],
                                                   out.stderr[-3000:])
+    assert "PALLAS_PLANE_ANALYTICS_OK" in out.stdout, (out.stdout[-2000:],
+                                                       out.stderr[-3000:])
     assert "SHARDED_SWEEP_OK" in out.stdout, (out.stdout[-2000:],
                                               out.stderr[-3000:])
