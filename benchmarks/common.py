@@ -295,6 +295,32 @@ def multisource_cells(
     return cells
 
 
+def edges_cells(
+    datasets=("mnist",),
+    seeds=(0,),
+    n_nodes: int = 64,
+    strategies=("unweighted", "degree"),
+    prefix: str = "edges",
+) -> List[SweepCell]:
+    """Edge-list mix smoke grid (the ``benchmarks/sweep.py edges``
+    preset): strategies × hub-OOD placement on per-seed BA graphs at a
+    node count (default 64) where the dense (n, n) coefficient slab is
+    already the wrong representation — run with
+    ``run_sweep_cells(..., mix_impl="edges")``."""
+    from repro.core.topology import barabasi_albert
+
+    cells = []
+    for ds in datasets:
+        for seed in seeds:
+            topo = barabasi_albert(n_nodes, 2, seed=seed)
+            for strat in strategies:
+                cells.append(SweepCell(
+                    ds, topo, strat, ood_k=1, seed=seed,
+                    name=f"{prefix}/{ds}/{strat}/n{n_nodes}",
+                    sweep=("edges", strat, n_nodes)))
+    return cells
+
+
 def group_cells(cells: List[SweepCell]) -> Dict[Tuple[str, int], List[int]]:
     """Cells sharing one compiled program: same dataset (model + sample
     shapes) and same node count (topology/coeffs shapes)."""
@@ -320,6 +346,7 @@ def run_sweep_cells(
     mesh=None,
     chunk_rounds: Optional[int] = None,
     coeff_mode: str = "stack",
+    mix_impl: str = "einsum",
     analytics: bool = True,
     arrival_threshold: float = DEFAULT_ARRIVAL_THRESHOLD,
     log=None,
@@ -345,6 +372,12 @@ def run_sweep_cells(
     in-scan — required memory-wise for long reactive sweeps, bit-identical
     to the stack otherwise.
 
+    ``mix_impl`` routes each group's aggregation through the chosen
+    backend (``decentralized.make_mix_fn``): ``"edges"``/``"sparse"``
+    build the group's ``mix_support`` as the union of its cells'
+    neighbourhood masks (adjacency + self loops) so one static schedule
+    serves every experiment in the compiled program.
+
     ``analytics=True`` (default) threads the streaming accumulators
     through the scan (DESIGN.md §10): each row gains an ``"analytics"``
     sub-dict with the in-scan AUCs, arrival-round stats (hop-binned
@@ -360,11 +393,21 @@ def run_sweep_cells(
     for (ds, n_nodes), idxs in group_cells(cells).items():
         t0 = time.time()
         init, loss_fn, acc_fn, opt = _model_fns(ds, scale, cells[idxs[0]].seed)
+        mix_support = None
+        if mix_impl != "einsum":
+            # one static schedule per compiled program: the union of every
+            # cell's neighbourhood mask (adjacency + self loops)
+            mix_support = np.eye(n_nodes)
+            for i in idxs:
+                mix_support = np.maximum(
+                    mix_support, np.asarray(cells[i].topo.adjacency))
         engine = SweepEngine(
             opt, loss_fn, acc_fn,
             DecentralizedConfig(rounds=scale.rounds,
                                 local_epochs=scale.local_epochs,
-                                eval_every=scale.eval_every))
+                                eval_every=scale.eval_every,
+                                mix_impl=mix_impl),
+            mix_support=mix_support)
 
         # distinct data configurations (seed × OOD node) → bank rows.
         # Synchronous sweep rounds need ONE step count across the group:

@@ -272,28 +272,149 @@ def run_mix(log=print, n_nodes: int = 8, n_params: int = 48_000,
     return record
 
 
+# ----------------------------------------------------------------------
+# n-scaling series: dense fused plane vs the padded-ELL edge-list kernel
+# ----------------------------------------------------------------------
+def run_scaling(log=print, n_params: int = 4096, bt: int = 1024,
+                reps: int = 3, smoke: bool = False,
+                out_path: str = "benchmarks/artifacts/BENCH_mix.json"
+                ) -> List[dict]:
+    """The ``scaling``/``sparse`` series of ``BENCH_mix.json``: one
+    Eq.-(2) mix on ring and BA graphs at n ∈ {64, 256, 1024}, dense fused
+    plane (``gossip_plane_pallas``, O(n²) coefficient traffic per tile)
+    vs the edge-list kernel (``gossip_edges_pallas``, O(n·dmax)).
+
+    Every timed pair is first gated to 1e-6 agreement with the dense
+    matmul oracle — a scaling curve over divergent numbers is worthless.
+    Wall-clock on this CPU container runs in interpret mode (dispatch-
+    bound); the modeled HBM bytes are backend-independent and carry the
+    dominance claim: at n ≥ 256 the edge-list stream moves strictly fewer
+    bytes than the dense plane on every bounded-degree family.
+    """
+    from repro.core.mixing import edge_weights
+    from repro.core.topology import padded_neighbor_tables
+    from repro.kernels.gossip_mix import (
+        default_interpret,
+        gossip_edges_pallas,
+        gossip_plane_pallas,
+        mix_modeled_hbm_bytes,
+    )
+
+    ns = (64, 256) if smoke else (64, 256, 1024)
+    rows: List[dict] = []
+    for n in ns:
+        for tname, topo in (("ring", ring(n)),
+                            ("ba_p2", barabasi_albert(n, 2, seed=0))):
+            c = jnp.asarray(mixing_matrix(
+                topo, AggregationStrategy("degree", tau=0.1)), jnp.float32)
+            nbr_idx, nbr_mask = padded_neighbor_tables(
+                topo.adjacency + np.eye(n))
+            dmax = int(nbr_idx.shape[1])
+            idx = jnp.asarray(nbr_idx)
+            w = edge_weights(c, idx, jnp.asarray(nbr_mask))
+            plane = jax.random.normal(jax.random.key(0), (n, n_params),
+                                      jnp.float32)
+
+            dense_fn = jax.jit(lambda p, cc: gossip_plane_pallas(
+                p, cc, bt=bt))
+            edges_fn = jax.jit(lambda p, ww: gossip_edges_pallas(
+                p, ww, idx, bt=bt))
+            d_out = jax.block_until_ready(dense_fn(plane, c))
+            e_out = jax.block_until_ready(edges_fn(plane, w))
+            # equivalence gate before timing
+            oracle = np.asarray(c @ plane)
+            np.testing.assert_allclose(np.asarray(d_out), oracle,
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(e_out), oracle,
+                                       rtol=1e-6, atol=1e-6)
+
+            walls: Dict[str, list] = {"dense": [], "sparse": []}
+            for _ in range(reps):  # interleaved, best-of (see _time_mixes)
+                t0 = time.perf_counter()
+                jax.block_until_ready(dense_fn(plane, c))
+                walls["dense"].append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                jax.block_until_ready(edges_fn(plane, w))
+                walls["sparse"].append(time.perf_counter() - t0)
+
+            db = mix_modeled_hbm_bytes("pallas_plane", n, n_params, bt=bt)
+            eb = mix_modeled_hbm_bytes("edges", n, n_params, bt=bt,
+                                       max_neighbors=dmax)
+            row = dict(
+                topology=f"{tname}{n}", n_nodes=n, max_degree=dmax,
+                dense=dict(impl="pallas_plane",
+                           wall_s=float(np.min(walls["dense"])),
+                           modeled_hbm_bytes=db),
+                sparse=dict(impl="edges",
+                            wall_s=float(np.min(walls["sparse"])),
+                            modeled_hbm_bytes=eb),
+                sparse_vs_dense_bytes_ratio=db / eb,
+            )
+            rows.append(row)
+            log(csv_row(
+                f"mix_scaling/{row['topology']}",
+                row["sparse"]["wall_s"],
+                f"dmax={dmax};bytes_dense/edges="
+                f"{row['sparse_vs_dense_bytes_ratio']:.2f};"
+                f"wall_dense/edges="
+                f"{row['dense']['wall_s'] / row['sparse']['wall_s']:.2f}"))
+
+    record = {}
+    if os.path.exists(out_path):
+        try:
+            record = json.load(open(out_path))
+        except ValueError:
+            record = {}
+    record.setdefault("schema", "BENCH_mix/v1")
+    record["scaling"] = {
+        "config": {"backend": jax.default_backend(),
+                   "pallas_interpret": default_interpret(),
+                   "param_floats_per_node": n_params, "bt": bt,
+                   "reps": reps, "smoke": smoke},
+        "series": rows,
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mix-only", action="store_true",
                     help="only the BENCH_mix kernel series")
+    ap.add_argument("--scaling", action="store_true",
+                    help="only the n-scaling series (dense plane vs "
+                         "edge-list kernel) merged into BENCH_mix.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI scale (small pytree, few reps)")
     args = ap.parse_args()
-    if args.mix_only:
-        rec = run_mix(smoke=args.smoke)
-        # CI gate.  The structural wins are deterministic — assert them
-        # hard; the wall-clock half gets a 25% noise allowance so a load
-        # spike on a shared runner can't flake the build (a genuine
-        # regression that makes the fused path slower than the legacy
-        # fan-out still fails).  `fused_vs_rows.dominates` in the JSON
-        # stays the strict measured comparison.
-        assert rec["fused_vs_rows"]["hbm_bytes_ratio"] > 1.0, rec
-        assert rec["impls"]["pallas_plane"]["kernel_programs_per_mix"] == 1
-        plane_w = rec["impls"]["pallas_plane"]["wall_s"]
-        rows_w = rec["impls"]["pallas_rows"]["wall_s"]
-        assert plane_w < rows_w * 1.25, (
-            f"fused plane ({plane_w:.6f}s) no longer beats the legacy "
-            f"per-row path ({rows_w:.6f}s) even with noise allowance")
+    if args.mix_only or args.scaling:
+        if args.mix_only:
+            rec = run_mix(smoke=args.smoke)
+            # CI gate.  The structural wins are deterministic — assert
+            # them hard; the wall-clock half gets a 25% noise allowance
+            # so a load spike on a shared runner can't flake the build (a
+            # genuine regression that makes the fused path slower than
+            # the legacy fan-out still fails).  `fused_vs_rows.dominates`
+            # in the JSON stays the strict measured comparison.
+            assert rec["fused_vs_rows"]["hbm_bytes_ratio"] > 1.0, rec
+            assert rec["impls"]["pallas_plane"][
+                "kernel_programs_per_mix"] == 1
+            plane_w = rec["impls"]["pallas_plane"]["wall_s"]
+            rows_w = rec["impls"]["pallas_rows"]["wall_s"]
+            assert plane_w < rows_w * 1.25, (
+                f"fused plane ({plane_w:.6f}s) no longer beats the legacy "
+                f"per-row path ({rows_w:.6f}s) even with noise allowance")
+        if args.scaling:
+            # CI gate: the edge-list byte model must dominate the dense
+            # plane at n ≥ 256 on every family (deterministic — no noise
+            # allowance needed).
+            for r in run_scaling(smoke=args.smoke):
+                if r["n_nodes"] >= 256:
+                    assert (r["sparse"]["modeled_hbm_bytes"]
+                            < r["dense"]["modeled_hbm_bytes"]), r
     else:
         run()
         run_mix(smoke=args.smoke)
+        run_scaling(smoke=args.smoke)

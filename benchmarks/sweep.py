@@ -62,6 +62,10 @@ class SweepPreset:
     datasets: tuple = ("mnist",)
     seeds: tuple = (0, 1)
     programs: bool = False
+    # aggregation backend for the whole grid ("einsum" | "pallas" |
+    # "sparse" | "edges"); non-einsum backends derive each compiled
+    # program's mix_support from its cells' topologies
+    mix_impl: str = "einsum"
 
 
 PRESETS: Dict[str, SweepPreset] = {}
@@ -219,6 +223,32 @@ register_preset(SweepPreset(
     _multisource_build, _multisource_verdict, seeds=(0,)))
 
 
+def _edges_build(datasets, seeds, n_nodes):
+    """Edge-list mix smoke: strategies × hub-OOD on BA graphs, the whole
+    grid aggregated through mix_impl="edges" (padded-ELL neighbour tables
+    + the segment gather/accumulate Pallas kernel, DESIGN.md §12)."""
+    from benchmarks.common import edges_cells
+
+    return edges_cells(datasets=datasets, seeds=seeds, n_nodes=n_nodes)
+
+
+def _edges_verdict(rows):
+    mean = lambda xs: (sum(xs) / len(xs)) if xs else float("nan")
+    by = {}
+    for r in rows:
+        by.setdefault(r["strategy"], []).append(r["ood_auc"])
+    parts = [f"{s}: ood_auc={mean(v):.3f}" for s, v in sorted(by.items())]
+    return ("edge-list gossip (mix_impl='edges', O(n·dmax) mix traffic): "
+            + "; ".join(parts))
+
+
+register_preset(SweepPreset(
+    "edges",
+    "edge-list sparse gossip smoke (BA graphs through the padded-ELL "
+    "segment kernel; pair with --n-nodes 64+)",
+    _edges_build, _edges_verdict, seeds=(0,), mix_impl="edges"))
+
+
 # ----------------------------------------------------------------------
 def plan(cells, scale) -> str:
     """The compiled-program plan for a cell grid — no jax work."""
@@ -337,7 +367,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     t0 = time.time()
     rows = run_sweep_cells(cells, scale=scale, unroll_eval=args.unroll,
                            mesh=mesh, chunk_rounds=args.chunk_rounds,
-                           coeff_mode=coeff_mode, log=print)
+                           coeff_mode=coeff_mode, mix_impl=preset.mix_impl,
+                           log=print)
     engine_secs = time.time() - t0
     print(f"\nsweep engine: {len(cells)} experiments in "
           f"{engine_secs:.1f}s wall-clock "
@@ -382,7 +413,8 @@ def main(argv: Optional[List[str]] = None) -> None:
         # sharded-vs-single comparison → BENCH_sweep.json (perf trajectory)
         t0 = time.time()
         single_rows = run_sweep_cells(cells, scale=scale,
-                                      coeff_mode=coeff_mode)
+                                      coeff_mode=coeff_mode,
+                                      mix_impl=preset.mix_impl)
         single_secs = time.time() - t0
         identical = all(
             a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
@@ -416,7 +448,8 @@ def main(argv: Optional[List[str]] = None) -> None:
         t0 = time.time()
         stack_rows = run_sweep_cells(cells, scale=scale, mesh=mesh,
                                      chunk_rounds=args.chunk_rounds,
-                                     coeff_mode="stack")
+                                     coeff_mode="stack",
+                                     mix_impl=preset.mix_impl)
         stack_secs = time.time() - t0
         identical = all(
             a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]

@@ -75,6 +75,9 @@ __all__ = [
     "eigenvector_centrality",
     "pagerank_centrality",
     "closeness_centrality",
+    "sparse_matvec",
+    "eigenvector_centrality_sparse",
+    "pagerank_centrality_sparse",
 ]
 
 # lax.switch branch order — state["kind"] indexes into this tuple
@@ -163,10 +166,79 @@ def closeness_centrality(adj: jnp.ndarray) -> jnp.ndarray:
         0.0)
 
 
+# ----------------------------------------------------------------------
+# sparse (edge-list) centrality operands — per-edge instead of per-pair
+# ----------------------------------------------------------------------
+def sparse_matvec(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
+                  x: jnp.ndarray) -> jnp.ndarray:
+    """``(A @ x)[i] = Σ_d nbr_val[i, d] · x[nbr_idx[i, d]]`` for a matrix
+    held as padded-ELL tables (``repro.core.topology.
+    padded_neighbor_tables``; padding slots carry value 0).  O(n·dmax)
+    work and state instead of the dense O(n²) — the operand the sparse
+    power-iteration kernels below are built on."""
+    return (nbr_val * jnp.take(x, nbr_idx, axis=0)).sum(axis=-1)
+
+
+def eigenvector_centrality_sparse(nbr_idx: jnp.ndarray,
+                                  nbr_val: jnp.ndarray,
+                                  iters: int = 200) -> jnp.ndarray:
+    """:func:`eigenvector_centrality` with the adjacency as padded-ELL
+    edge tables: the same ``A + I``-shifted power method (same norm
+    guard, same uniform start), each step a :func:`sparse_matvec` —
+    200·|E| MACs instead of 200·n².  Property-tested against the cached
+    networkx values in tests/test_coeffs.py."""
+    n = nbr_idx.shape[0]
+    x0 = jnp.full((n,), 1.0 / np.sqrt(n), nbr_val.dtype)
+
+    def step(x, _):
+        y = sparse_matvec(nbr_idx, nbr_val, x) + x
+        norm = jnp.sqrt((y * y).sum())
+        return jnp.where(norm > 1e-12, y / jnp.maximum(norm, 1e-12), x), None
+
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    return x
+
+
+def pagerank_centrality_sparse(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
+                               alpha: float = 0.85,
+                               iters: int = 200) -> jnp.ndarray:
+    """:func:`pagerank_centrality` with the adjacency as padded-ELL edge
+    tables.  The dense step's column combine ``(x @ P)[j] = Σ_i a_ij ·
+    x_i / deg_i`` becomes, for a SYMMETRIC adjacency, a row gather over
+    j's own neighbour list: ``Σ_d nbr_val[j, d] · (x / deg)[nbr_idx[j,
+    d]]`` — a :func:`sparse_matvec` on the degree-normalized iterate.
+    Dangling (isolated) nodes have no surviving edges, so they never
+    appear in any table slot with nonzero value; their mass is
+    redistributed through the same ``dmass`` term as the dense kernel.
+    Matches networkx / the dense kernel on undirected graphs, including
+    disconnected ``edge_mask`` survivors."""
+    n = nbr_idx.shape[0]
+    deg = nbr_val.sum(axis=-1)
+    dangling = deg <= 0
+    inv_deg = jnp.where(dangling, 0.0, 1.0 / jnp.where(dangling, 1.0, deg))
+    x0 = jnp.full((n,), 1.0 / n, nbr_val.dtype)
+
+    def step(x, _):
+        dmass = jnp.where(dangling, x, 0.0).sum()
+        y = sparse_matvec(nbr_idx, nbr_val, x * inv_deg)
+        return alpha * (y + dmass / n) + (1.0 - alpha) / n, None
+
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    return x
+
+
 def _scaled_pagerank(adj: jnp.ndarray, alpha: float, iters: int) -> jnp.ndarray:
     """PageRank rescaled to [0, 1] — the strategies.py convention (mass is
     O(1/n); without rescaling τ=0.1 would flatten the softmax)."""
     pr = pagerank_centrality(adj, alpha=alpha, iters=iters)
+    return pr / pr.max()
+
+
+def _scaled_pagerank_sparse(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
+                            alpha: float, iters: int) -> jnp.ndarray:
+    """:func:`_scaled_pagerank` on padded-ELL edge tables."""
+    pr = pagerank_centrality_sparse(nbr_idx, nbr_val, alpha=alpha,
+                                    iters=iters)
     return pr / pr.max()
 
 
@@ -184,6 +256,18 @@ class CoeffProgram:
     the nominal matrix over surviving links — softmax restricted to a
     subset and renormalized IS the softmax over the subset).  Betweenness
     uses nominal scores in both modes (no fixed-shape jnp kernel).
+
+    ``sparse=True`` (``program_for(..., sparse=True)``) switches the
+    reactive degree/eigenvector/pagerank recomputation to the edge-list
+    kernels (:func:`sparse_matvec` family): the state carries per-EDGE
+    tables (``nbr_idx`` / ``nbr_val``, (n, dmax)) instead of feeding the
+    per-pair (n, n) adjacency to the power iterations, and each round's
+    per-edge survival is gathered from the SAME ``edge_mask`` draw — so
+    the surviving support is bit-identical to the dense program and the
+    power method costs O(iters·|E|) instead of O(iters·n²).  Closeness
+    is inherently all-pairs (hop-distance matrix powers) and betweenness
+    stays nominal, so both keep their dense/nominal path under
+    ``sparse=True`` — documented in DESIGN.md §12.
     """
 
     n_nodes: int
@@ -191,6 +275,7 @@ class CoeffProgram:
     power_iters: int = 200
     pagerank_iters: int = 200
     pagerank_alpha: float = 0.85
+    sparse: bool = False
 
     # ------------------------------------------------------------------
     def matrix(self, state, round_idx) -> jnp.ndarray:
@@ -206,9 +291,17 @@ class CoeffProgram:
         k_scores = jax.random.fold_in(
             jax.random.fold_in(base, r * state["resample"]), 1)
 
-        adj_r = adj * edge_mask(k_edges, n, state["p_fail"], dtype=adj.dtype)
+        em = edge_mask(k_edges, n, state["p_fail"], dtype=adj.dtype)
+        adj_r = adj * em
         mask = adj_r + jnp.eye(n, dtype=adj.dtype)
         tau = state["tau"]
+        if self.sparse and self.reactive:
+            # per-EDGE survival, gathered from the SAME edge-mask draw the
+            # dense path multiplies in — surviving support is bit-identical
+            nbr_idx = state["nbr_idx"]
+            nbr_val = state["nbr_val"] * em[jnp.arange(n)[:, None], nbr_idx]
+        else:
+            nbr_idx = nbr_val = None
 
         def soft(scores):
             return masked_softmax(scores, mask, tau, xp=jnp)
@@ -216,8 +309,12 @@ class CoeffProgram:
         def linear(w):
             return masked_normalize(w, mask, xp=jnp)
 
-        def centrality(kernel):
-            return kernel(adj_r) if self.reactive else state["scores"]
+        def centrality(kernel, sparse_kernel=None):
+            if not self.reactive:
+                return state["scores"]
+            if self.sparse and sparse_kernel is not None:
+                return sparse_kernel(nbr_idx, nbr_val)
+            return kernel(adj_r)
 
         # `kind` is per-experiment STATE so one compiled program serves a
         # mixed-strategy grid (fig4!): under the engine's vmap-over-E the
@@ -236,13 +333,20 @@ class CoeffProgram:
             # churn does not touch — same semantics as the legacy host
             # path (dynamic_mixing_matrix(surv, fl) is also still 1/n)
             lambda: jnp.full((n, n), 1.0 / n, adj.dtype),      # fl
-            lambda: soft(centrality(degree_centrality)),       # degree
+            lambda: soft(centrality(                           # degree
+                degree_centrality,
+                lambda i, v: v.sum(axis=-1) / max(n - 1, 1))),
             lambda: soft(state["scores"]),                     # betweenness
             lambda: soft(centrality(
-                lambda a: eigenvector_centrality(a, self.power_iters))),
+                lambda a: eigenvector_centrality(a, self.power_iters),
+                lambda i, v: eigenvector_centrality_sparse(
+                    i, v, self.power_iters))),
             lambda: soft(centrality(
                 lambda a: _scaled_pagerank(a, self.pagerank_alpha,
-                                           self.pagerank_iters))),
+                                           self.pagerank_iters),
+                lambda i, v: _scaled_pagerank_sparse(
+                    i, v, self.pagerank_alpha, self.pagerank_iters))),
+            # closeness is inherently all-pairs — dense even when sparse
             lambda: soft(centrality(closeness_centrality)),
         )
         return jax.lax.switch(state["kind"], branches)
@@ -321,6 +425,14 @@ def program_for(
     }
     program = CoeffProgram(n_nodes=n, reactive=bool(reactive),
                            **program_kwargs)
+    if program.sparse:
+        # per-edge operands for the sparse reactive centrality kernels:
+        # nominal neighbour tables (self excluded — the adjacency
+        # operand) with the nominal 0/1 edge values; per-round survival
+        # multiplies onto nbr_val inside matrix()
+        nbr_idx, nbr_mask = topo.neighbor_tables(include_self=False)
+        state["nbr_idx"] = np.asarray(nbr_idx, np.int32)
+        state["nbr_val"] = np.asarray(nbr_mask, np.float32)
     return program, state
 
 

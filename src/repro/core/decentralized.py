@@ -65,6 +65,7 @@ __all__ = [
     "make_local_train_fn",
     "make_round_fn",
     "make_mix_fn",
+    "edges_schedule",
     "make_scan_fn",
     "eval_round_indices",
 ]
@@ -95,7 +96,10 @@ class DecentralizedConfig:
     # "einsum" | "pallas" (fused flat-plane kernel, kernels.gossip_mix:
     # one pallas_call per mix — DESIGN.md §11) | "sparse" (circulant
     # ring-offset schedule from the topology support; dense fallback for
-    # supports that don't decompose compactly — see make_mix_fn)
+    # supports that don't decompose compactly — see make_mix_fn) |
+    # "edges" (padded edge-list segment kernel over the flat plane,
+    # kernels.gossip_mix.mix_edges_pallas — O(n·dmax) table bytes per
+    # plane tile instead of n², any support, no fallback — DESIGN.md §12)
     mix_impl: str = "einsum"
     # mix_impl="sparse" fallback slack: dense fallback when the non-self
     # ring-offset count exceeds max degree + sparse_slack (see
@@ -207,6 +211,16 @@ def make_mix_fn(mix_impl: str = "einsum",
     falls back to :func:`repro.core.mixing.mix_dense` (unstructured
     supports don't circulant-decompose compactly; rings/WS graphs do).
 
+    ``"edges"`` also needs ``mix_support`` and fixes the padded-ELL
+    neighbour tables at trace time instead
+    (``repro.core.topology.padded_neighbor_tables`` with the diagonal
+    forced in); per-round coefficients are gathered through the tables,
+    so any support works — no structural fallback — and the mix runs as
+    ONE Pallas segment kernel over the flat parameter plane
+    (``kernels.gossip_mix.mix_edges_pallas``).  Like the circulant path,
+    weight outside the tables would be silently dropped;
+    ``SweepEngine.run`` validates coefficients against the support.
+
     ``mix_in_float32=False`` switches every backend's accumulation from
     f32 to the native param/plane dtype
     (``DecentralizedConfig.mix_in_float32`` — the low-precision
@@ -232,8 +246,20 @@ def make_mix_fn(mix_impl: str = "einsum",
             return make_mix_fn("einsum", mix_in_float32=mix_in_float32)
         return lambda params, coeffs: mix_sparse(
             params, coeffs, offsets, mix_in_float32=mix_in_float32)
+    if mix_impl == "edges":
+        if mix_support is None:
+            raise ValueError(
+                "mix_impl='edges' needs mix_support (the (n, n) "
+                "neighbourhood mask, adjacency + self-loops) to fix the "
+                "padded-ELL neighbour tables at trace time")
+        from repro.kernels.gossip_mix import mix_edges_pallas
+
+        nbr_idx, nbr_mask = edges_schedule(mix_support)
+        idx, msk = jnp.asarray(nbr_idx), jnp.asarray(nbr_mask)
+        return lambda params, coeffs: mix_edges_pallas(
+            params, coeffs, idx, msk, mix_in_float32=mix_in_float32)
     raise KeyError(f"unknown mix_impl {mix_impl!r}; "
-                   f"have 'einsum', 'pallas', 'sparse'")
+                   f"have 'einsum', 'pallas', 'sparse', 'edges'")
 
 
 def sparse_schedule(mix_support, sparse_slack: int = 4):
@@ -256,6 +282,20 @@ def sparse_schedule(mix_support, sparse_slack: int = 4):
     for k in offsets:
         covered[rows, (rows + k) % n] = True
     return offsets, covered
+
+
+def edges_schedule(mix_support) -> Tuple[np.ndarray, np.ndarray]:
+    """``(nbr_idx, nbr_mask)`` padded-ELL tables for a support mask with
+    the diagonal forced in (every node keeps a self-slot, so row-
+    stochastic matrices always have somewhere to put their self-weight).
+    The edge-list analogue of :func:`sparse_schedule` — static trace-time
+    metadata; the coverage mask for ``SweepEngine.run``'s off-support
+    check is simply ``support ∪ diag`` (no structural fallback)."""
+    support = np.asarray(mix_support)
+    n = support.shape[0]
+    from repro.core.topology import padded_neighbor_tables
+
+    return padded_neighbor_tables(np.maximum(support, np.eye(n)))
 
 
 def make_local_train_fn(loss_fn: Callable, optimizer: Optimizer,
@@ -308,8 +348,9 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
                   mix_in_float32: bool = True) -> Callable:
     """One full round — vmapped LocalTrain then aggregation — as a pure
     function ``(stacked_params, stacked_opt, node_batches, coeffs) →
-    (mixed_params, opt, losses)``.  ``mix_support`` and ``sparse_slack``
-    are only consulted by ``mix_impl='sparse'``; ``mix_in_float32``
+    (mixed_params, opt, losses)``.  ``mix_support`` is consulted by
+    ``mix_impl='sparse'`` and ``'edges'`` (``sparse_slack`` by the former
+    only); ``mix_in_float32``
     selects every backend's accumulation dtype (see
     :func:`make_mix_fn`)."""
     local_train = make_local_train_fn(loss_fn, optimizer, local_epochs,
@@ -456,11 +497,11 @@ class DecentralizedTrainer:
         self.data_counts = data_counts
         self.coeffs_fn = coeffs_fn  # e.g. core.dynamic link-failure matrices
         mix_support = None
-        if config.mix_impl == "sparse":
+        if config.mix_impl in ("sparse", "edges"):
             # support = neighbourhoods ∪ the strategy's actual round-0
             # support: kinds with off-neighbourhood weight (fl's dense
             # 1/n, register_strategy plugins, coeffs_fn overrides) would
-            # otherwise have mass silently dropped by the ring schedule
+            # otherwise have mass silently dropped by the static schedule
             # (sub-stochastic mixing).  Built-in supports never grow
             # across rounds; exotic coeffs_fn schedules that do should
             # use mix_impl="einsum".

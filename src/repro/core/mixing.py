@@ -28,7 +28,17 @@ Two schedules are provided:
   :func:`mix_dense` when the offset count exceeds max degree + slack —
   near-circulant graphs (rings, WS) win, unstructured support does not.
 
-A third backend lives in ``repro.kernels.gossip_mix``: the fused
+* :func:`mix_edges` — the general sparse schedule: padded-ELL edge-list
+  tables (``repro.core.topology.padded_neighbor_tables``) are static
+  trace-time data, per-edge coefficients are gathered from the live
+  (n, n) matrix (:func:`edge_weights`), and each destination row
+  accumulates its ≤ dmax neighbours — O(n·dmax·|leaf|) work instead of
+  the dense O(n²·|leaf|), with no circulant-structure requirement.  This
+  is ``DecentralizedConfig(mix_impl="edges")`` and the jnp reference of
+  the Pallas segment kernel
+  (``repro.kernels.gossip_mix.mix_edges_pallas``, DESIGN.md §12).
+
+A further backend lives in ``repro.kernels.gossip_mix``: the fused
 flat-plane Pallas kernel (``mix_impl="pallas"`` — the whole mix as ONE
 ``pallas_call`` over a packed ``(n, P)`` parameter plane, DESIGN.md §11).
 
@@ -47,6 +57,8 @@ __all__ = [
     "mix_dense",
     "mix_sparse",
     "mix_sparse_host",
+    "mix_edges",
+    "edge_weights",
     "sparse_offsets",
     "circulant_decomposition",
     "CirculantSchedule",
@@ -171,6 +183,52 @@ def mix_sparse(params, coeffs: jnp.ndarray, offsets: Sequence[int],
             acc = acc + (w.astype(acc_dtype).reshape((n,) + extra)
                          * shifted.astype(acc_dtype))
         return acc.astype(leaf.dtype)
+
+    return jax.tree.map(leaf_fn, params)
+
+
+# ----------------------------------------------------------------------
+# padded edge-list (ELL) gossip — the general sparse schedule
+# ----------------------------------------------------------------------
+def edge_weights(coeffs: jnp.ndarray, nbr_idx: jnp.ndarray,
+                 nbr_mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-edge coefficients ``w[i, d] = coeffs[i, nbr_idx[i, d]]``
+    (masked): the (n, dmax) gather that turns a live (n, n) mixing matrix
+    into the edge-list schedule's traced operand.  The tables come from
+    ``repro.core.topology.padded_neighbor_tables`` and are STATIC; only
+    this O(n·dmax) gather runs per round, so time-varying matrices (Random
+    resampling, link failure, in-scan coefficient programs) reuse one
+    compiled schedule.  Entries outside the table support are dropped —
+    callers derive tables from the nominal topology, whose support only
+    ever shrinks under churn (``SweepEngine.run`` validates this)."""
+    c = jnp.asarray(coeffs)
+    rows = jnp.arange(c.shape[0])[:, None]
+    return c[rows, nbr_idx] * nbr_mask.astype(c.dtype)
+
+
+def mix_edges(params, coeffs: jnp.ndarray, nbr_idx: jnp.ndarray,
+              nbr_mask: jnp.ndarray, mix_in_float32: bool = True):
+    """Edge-list gossip with STATIC padded-ELL tables and TRACED weights —
+    the jnp reference of the Pallas segment kernel
+    (``repro.kernels.gossip_mix.mix_edges_pallas``); property-tested equal
+    to :func:`mix_dense` to 1e-6 in tests/test_mixing.py.
+
+    ``(C @ M)[i] = Σ_d w[i, d] · M[nbr_idx[i, d]]`` — an O(n·dmax·|leaf|)
+    gather-accumulate instead of the dense O(n²·|leaf|) contraction,
+    which is what makes n ≥ 1024 topologies reachable (dmax ≈ max degree
+    + 1 ≪ n on the paper's BA/WS graphs).  Accumulates in f32 like
+    :func:`mix_dense` (``mix_in_float32=False`` accumulates in the leaf
+    dtype — the shared low-precision-aggregation ablation knob).
+    """
+    idx = jnp.asarray(nbr_idx)
+    w = edge_weights(jnp.asarray(coeffs).astype(jnp.float32), idx,
+                     jnp.asarray(nbr_mask))
+
+    def leaf_fn(leaf: jnp.ndarray) -> jnp.ndarray:
+        acc_dtype = jnp.float32 if mix_in_float32 else leaf.dtype
+        gathered = jnp.take(leaf.astype(acc_dtype), idx, axis=0)
+        wk = w.astype(acc_dtype).reshape(w.shape + (1,) * (leaf.ndim - 1))
+        return (wk * gathered).sum(axis=1).astype(leaf.dtype)
 
     return jax.tree.map(leaf_fn, params)
 

@@ -62,6 +62,14 @@ class PlaneLayout:
         return 0 if not self.slots else (self.slots[-1].offset
                                          + self.slots[-1].size)
 
+    def plane_nbytes(self, dtype: Optional[Any] = None) -> int:
+        """HBM bytes of one packed ``(n, P)`` plane (``dtype``: storage
+        dtype, None → :attr:`widest_dtype`) — the unit of the streaming
+        byte models in ``repro.kernels.gossip_mix.mix_modeled_hbm_bytes``
+        (a fused mix reads and writes one plane: ``2 × plane_nbytes``)."""
+        dtype = self.widest_dtype if dtype is None else jnp.dtype(dtype)
+        return self.n_nodes * self.n_params * jnp.dtype(dtype).itemsize
+
     @property
     def widest_dtype(self):
         """Default plane dtype: ``jnp.result_type`` over the leaf dtypes —

@@ -194,11 +194,11 @@ class SweepEngine:
       config: round/epoch counts; ``mix_impl="pallas"`` routes aggregation
         through ``kernels.gossip_mix``; ``unroll_eval=True`` makes
         :meth:`run` default to the incremental per-round loop.
-      mix_support: required by ``mix_impl="sparse"`` — the (n, n) union
-        support mask fixing the ring-offset schedule.  :meth:`run`
-        validates every grid's coefficients against the schedule's
-        coverage and raises rather than let off-schedule weight be
-        silently dropped.
+      mix_support: required by ``mix_impl="sparse"`` and ``"edges"`` —
+        the (n, n) union support mask fixing the static schedule (ring
+        offsets / padded-ELL neighbour tables).  :meth:`run` validates
+        every grid's coefficients against the schedule's coverage and
+        raises rather than let off-schedule weight be silently dropped.
     """
 
     def __init__(
@@ -232,20 +232,26 @@ class SweepEngine:
 
     # ------------------------------------------------------------------
     def _check_sparse_support(self, coeffs, program, states) -> None:
-        """mix_impl='sparse' silently drops weight outside its static
-        ring-offset schedule (``mixing.mix_sparse``) — refuse grids whose
-        coefficients the caller-supplied ``mix_support`` cannot express
-        (sub-stochastic mixing would return quietly wrong results).  A
-        dense-fallback schedule covers everything, so no check applies."""
+        """mix_impl='sparse' / 'edges' silently drop weight outside their
+        static schedule (ring offsets / padded-ELL neighbour tables) —
+        refuse grids whose coefficients the caller-supplied
+        ``mix_support`` cannot express (sub-stochastic mixing would
+        return quietly wrong results).  The circulant path's
+        dense-fallback schedule covers everything, so no check applies
+        there; the edge-list tables cover exactly ``support ∪ diag``."""
         from repro.core.coeffs import PROGRAM_KINDS
         from repro.core.decentralized import sparse_schedule
 
         if self._mix_support is None:
             return  # make_round_fn already raised in __init__
-        _, covered = sparse_schedule(self._mix_support,
-                                     self.config.sparse_slack)
-        if covered is None:
-            return  # fell back to mix_dense
+        if self.config.mix_impl == "edges":
+            s = np.asarray(self._mix_support)
+            covered = (s > 0) | np.eye(s.shape[0], dtype=bool)
+        else:
+            _, covered = sparse_schedule(self._mix_support,
+                                         self.config.sparse_slack)
+            if covered is None:
+                return  # fell back to mix_dense
         if program is None:
             used = np.asarray(
                 jnp.any(jnp.abs(coeffs) > 1e-12, axis=(0, 1)))
@@ -258,10 +264,11 @@ class SweepEngine:
                 used = np.ones_like(used)  # fl's matrix is dense 1/n
         if np.any(used & ~covered):
             raise ValueError(
-                "mix_impl='sparse': coefficients carry weight outside "
-                "the mix_support ring-offset schedule, which mix_sparse "
-                "would silently drop (sub-stochastic mixing); widen "
-                "mix_support or use mix_impl='einsum'")
+                f"mix_impl={self.config.mix_impl!r}: coefficients carry "
+                "weight outside the mix_support schedule (ring offsets / "
+                "neighbour tables), which the sparse mix would silently "
+                "drop (sub-stochastic mixing); widen mix_support or use "
+                "mix_impl='einsum'")
 
     # ------------------------------------------------------------------
     def _eval(self, stacked_params, test_iid, test_ood):
@@ -522,7 +529,7 @@ class SweepEngine:
         else:
             coeffs = jnp.asarray(coeffs, jnp.float32)
             rounds = coeffs.shape[1]
-        if self.config.mix_impl == "sparse":
+        if self.config.mix_impl in ("sparse", "edges"):
             self._check_sparse_support(coeffs, program, states)
         if not keep_history and analytics is None:
             raise ValueError("keep_history=False without an analytics "

@@ -24,6 +24,8 @@ import numpy as np
 
 __all__ = [
     "Topology",
+    "padded_neighbor_tables",
+    "coo_edge_list",
     "barabasi_albert",
     "watts_strogatz",
     "stochastic_block",
@@ -148,6 +150,42 @@ class Topology:
             cache["modularity"] = float(nx.community.modularity(g, communities))
         return cache["modularity"]
 
+    # ------------------------------------------------------------------
+    # sparse edge-list views (cached — graphs are frozen)
+    # ------------------------------------------------------------------
+    def neighbor_tables(self,
+                        include_self: bool = True
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded-ELL neighbour tables over this graph's support
+        (:func:`padded_neighbor_tables`): ``(nbr_idx, nbr_mask)`` of shape
+        ``(n, dmax)`` — the static operands of the edge-list mixing path
+        (``mix_impl="edges"``) and of the sparse centrality kernels in
+        ``repro.core.coeffs``.  ``include_self=True`` (default) lists
+        ``N_i = neighbours(i) ∪ {i}``, matching the mixing-matrix support;
+        ``False`` lists plain neighbours — the adjacency operand the
+        centrality kernels consume."""
+        cache = self._metric_cache
+        key = ("neighbor_tables", bool(include_self))
+        if key not in cache:
+            support = self.adjacency
+            if include_self:
+                support = support + np.eye(self.n_nodes)
+            cache[key] = padded_neighbor_tables(support)
+        return cache[key]
+
+    def edge_list(self) -> Tuple[np.ndarray, np.ndarray]:
+        """COO directed edge list ``(src, dst)`` int32 arrays (both
+        orientations of every undirected edge; no self-loops), sorted by
+        destination then source — the flat companion of
+        :meth:`neighbor_tables` for |E|-shaped per-edge state."""
+        cache = self._metric_cache
+        if "edge_list" not in cache:
+            cache["edge_list"] = coo_edge_list(self.adjacency)
+        return cache["edge_list"]
+
+    def max_degree(self) -> int:
+        return int(self.degree().max())
+
     def nodes_by_degree(self) -> np.ndarray:
         """Node indices sorted by degree, descending (ties → lower index)."""
         deg = self.degree()
@@ -159,6 +197,50 @@ class Topology:
         if not 1 <= k <= len(order):
             raise ValueError(f"k={k} out of range for n={len(order)}")
         return int(order[k - 1])
+
+
+# ----------------------------------------------------------------------
+# sparse edge-list derivations (host-side static scan data)
+# ----------------------------------------------------------------------
+def padded_neighbor_tables(
+        support: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded-ELL neighbour tables for any 0/1 support mask.
+
+    Row ``i`` lists the columns ``j`` with ``support[i, j] > 0`` (sorted),
+    right-padded to the maximum row population ``dmax`` with the row's OWN
+    index under mask 0 — padding gathers are always in-bounds and carry
+    zero weight.  Returns ``(nbr_idx int32, nbr_mask float32)``, both
+    ``(n, dmax)``.  Static metadata like :func:`repro.core.mixing.
+    sparse_offsets`: derived once per topology/support, baked into the
+    compiled program, reused for every round — per-round coefficients are
+    *gathered through* the tables at trace time, so link failure (support
+    can only shrink) and time-varying matrices reuse one compiled mix.
+    A row with no support at all (isolated node under a self-loop-free
+    mask) comes back all-padding: its mixed output is exactly zero, the
+    same as the dense contraction with an all-zero coefficient row.
+    """
+    s = np.asarray(support) > 0
+    if s.ndim != 2 or s.shape[0] != s.shape[1]:
+        raise ValueError(f"support must be square, got {s.shape}")
+    n = s.shape[0]
+    dmax = max(int(s.sum(axis=1).max()) if n else 0, 1)
+    nbr_idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, dmax))
+    nbr_mask = np.zeros((n, dmax), dtype=np.float32)
+    for i in range(n):
+        js = np.nonzero(s[i])[0]
+        nbr_idx[i, :len(js)] = js
+        nbr_mask[i, :len(js)] = 1.0
+    return nbr_idx, nbr_mask
+
+
+def coo_edge_list(adjacency: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """COO directed edge list for a 0/1 adjacency: ``(src, dst)`` int32
+    arrays with one entry per orientation of every undirected edge,
+    sorted by (dst, src) so per-destination segments are contiguous —
+    the segment-sum ordering of the edge-list gossip kernel's framing."""
+    a = np.asarray(adjacency) > 0
+    dst, src = np.nonzero(a)  # row-major nonzero == sorted by (dst, src)
+    return src.astype(np.int32), dst.astype(np.int32)
 
 
 # ----------------------------------------------------------------------

@@ -1,6 +1,14 @@
 """Pallas TPU kernels for the gossip aggregation hot spot (Eq. 2).
 
-Two generations live here:
+Three generations live here:
+
+* :func:`gossip_edges_pallas` / :func:`mix_edges_pallas` — the **edge-list
+  segment mix** (DESIGN.md §12): per-destination neighbour tables
+  (padded ELL, ``repro.core.topology.padded_neighbor_tables``) replace
+  the dense (n, n) coefficient block, so each plane tile re-fetches
+  ``n·dmax·8`` table bytes instead of ``n²·4`` — the path that makes
+  n ≥ 1024 topologies affordable (``DecentralizedConfig(
+  mix_impl="edges")``).
 
 * :func:`gossip_plane_pallas` / :func:`mix_plane_pallas` — the **fused
   flat-plane mix** (DESIGN.md §11).  The stacked pytree is packed into one
@@ -52,6 +60,8 @@ from repro.core.plane import PlaneLayout
 __all__ = [
     "gossip_plane_pallas",
     "mix_plane_pallas",
+    "gossip_edges_pallas",
+    "mix_edges_pallas",
     "gossip_mix_pallas",
     "mix_dense_pallas",
     "mix_modeled_hbm_bytes",
@@ -165,9 +175,119 @@ def mix_plane_pallas(params, coeffs: jnp.ndarray,
     return layout.unpack(mixed)
 
 
+# ----------------------------------------------------------------------
+# edge-list segment mix: sparse gather-accumulate over the flat plane
+# ----------------------------------------------------------------------
+def _edges_kernel(acc_dtype, n_rows, w_ref, i_ref, p_ref, o_ref):
+    """One (n_pad, bt) output tile of the edge-list mix.  w_ref / i_ref:
+    (d_pad, n_lane) per-edge weights (f32) and neighbour indices (int32) —
+    transposed so the big n axis sits on lanes; p_ref: (n_pad, bt) plane
+    slab.  The d loop is static (unrolled): step d gathers every
+    destination's d-th neighbour row from the slab and accumulates it
+    under the gathered per-edge weight — a segment-sum over the padded-ELL
+    edge list, O(n·dmax·bt) MACs instead of the dense n²·bt."""
+    slab = p_ref[...].astype(acc_dtype)
+    w = w_ref[...]
+    idx = i_ref[...]
+    acc = jnp.zeros(o_ref.shape, acc_dtype)
+    for d in range(w.shape[0]):  # d_pad is static → unrolled
+        wk = w[d, :n_rows].astype(acc_dtype)[:, None]
+        acc = acc + wk * jnp.take(slab, idx[d, :n_rows], axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bt", "interpret", "mix_in_float32"))
+def gossip_edges_pallas(plane: jnp.ndarray, weights: jnp.ndarray,
+                        nbr_idx: jnp.ndarray, bt: int = 2048,
+                        interpret: Optional[bool] = None,
+                        mix_in_float32: bool = True) -> jnp.ndarray:
+    """``out[i] = Σ_d weights[i, d] · plane[nbr_idx[i, d]]`` as ONE
+    ``pallas_call`` — the sparse counterpart of
+    :func:`gossip_plane_pallas`.
+
+    plane: (n, P) — all n node-models' parameters, one row each.
+    weights: (n, dmax) per-edge coefficients, already masked
+      (``repro.core.mixing.edge_weights`` — zeros on padding slots).
+    nbr_idx: (n, dmax) int32 neighbour tables
+      (``repro.core.topology.padded_neighbor_tables``; padding = own row).
+    bt / interpret / mix_in_float32: as :func:`gossip_plane_pallas`.
+
+    Each grid program streams one (n, bt) plane slab plus the (n, dmax)
+    weight/index tables — O(|E|·P) HBM bytes instead of the dense kernel's
+    O(n²) coefficient re-fetches per tile (``mix_modeled_hbm_bytes``
+    models both; the crossover is 2·dmax < n).  The tables are padded to
+    (⌈dmax/8⌉·8, ⌈n/128⌉·128) and transposed so the lane axis carries n;
+    padded slots gather row 0 under weight 0 and padded output rows are
+    sliced away.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, p = plane.shape
+    dmax = weights.shape[1]
+    sub = 16 if plane.dtype == jnp.bfloat16 else 8
+    n_pad = _round_up(n, sub)
+    bt = _round_up(min(bt, _round_up(p, 128)), 128)
+    p_pad = _round_up(p, bt)
+    if (n_pad, p_pad) != (n, p):
+        plane = jnp.pad(plane, ((0, n_pad - n), (0, p_pad - p)))
+    # tables land in VMEM as (d_pad, n_lane) blocks: sublane (8) on the
+    # small dmax axis, lane (128) on n — a (n, dmax) layout would burn a
+    # full 128-lane tile on dmax ≈ 3 ring graphs
+    d_pad = _round_up(dmax, 8)
+    n_lane = _round_up(n_pad, 128)
+    w = jnp.asarray(weights, jnp.float32).T
+    idx = jnp.asarray(nbr_idx, jnp.int32).T
+    w = jnp.pad(w, ((0, d_pad - dmax), (0, n_lane - n)))
+    idx = jnp.pad(idx, ((0, d_pad - dmax), (0, n_lane - n)))
+    acc_dtype = jnp.float32 if mix_in_float32 else plane.dtype
+
+    out = pl.pallas_call(
+        functools.partial(_edges_kernel, acc_dtype, n_pad),
+        grid=(p_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((d_pad, n_lane), lambda j: (0, 0)),  # weights
+            pl.BlockSpec((d_pad, n_lane), lambda j: (0, 0)),  # neighbours
+            pl.BlockSpec((n_pad, bt), lambda j: (0, j)),      # plane slab
+        ],
+        out_specs=pl.BlockSpec((n_pad, bt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, p_pad), plane.dtype),
+        interpret=interpret,
+    )(w, idx, plane)
+    return out[:n, :p]
+
+
+def mix_edges_pallas(params, coeffs: jnp.ndarray, nbr_idx, nbr_mask,
+                     bt: int = 2048,
+                     plane_dtype=None,
+                     interpret: Optional[bool] = None,
+                     mix_in_float32: bool = True):
+    """Eq. (2) over a stacked pytree via the edge-list segment kernel:
+    pack once → per-edge weight gather
+    (``repro.core.mixing.edge_weights``, O(n·dmax)) → ONE
+    :func:`gossip_edges_pallas` → unpack once.  Drop-in replacement for
+    ``repro.core.mixing.mix_dense`` / :func:`mix_plane_pallas` on any
+    support; selected by ``DecentralizedConfig(mix_impl="edges")``.  The
+    tables are static trace-time data (baked into scans and vmaps); the
+    coefficients stay traced, so per-round matrices reuse one compiled
+    kernel.  Agrees with the dense einsum to 1e-6
+    (tests/test_mix_equivalence.py)."""
+    from repro.core.mixing import edge_weights
+
+    layout = PlaneLayout.from_tree(params)
+    plane = layout.pack(params, dtype=plane_dtype)
+    w = edge_weights(jnp.asarray(coeffs, jnp.float32),
+                     jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
+    mixed = gossip_edges_pallas(plane, w, jnp.asarray(nbr_idx), bt=bt,
+                                interpret=interpret,
+                                mix_in_float32=mix_in_float32)
+    return layout.unpack(mixed)
+
+
 def mix_modeled_hbm_bytes(impl: str, n: int, p_floats: int,
                           itemsize: int = 4, n_leaves: int = 1,
-                          bt: int = 2048) -> int:
+                          bt: int = 2048, max_neighbors: Optional[int] = None,
+                          n_offsets: Optional[int] = None) -> int:
     """Modeled HBM bytes for one mix of an n-node model with ``p_floats``
     parameters per node (``itemsize`` bytes each, split over ``n_leaves``
     pytree leaves) — the numbers ``BENCH_mix.json`` tracks.
@@ -184,13 +304,36 @@ def mix_modeled_hbm_bytes(impl: str, n: int, p_floats: int,
     * ``"pallas_plane_e2e"`` — fused kernel plus the pack/unpack copies
       around it (each a read + write of the plane): ``6·n·P·b + ...`` —
       the honest end-to-end figure when the mix is used leaf-in/leaf-out.
+    * ``"edges"`` — the edge-list segment kernel
+      (:func:`gossip_edges_pallas`; needs ``max_neighbors`` = the table
+      width dmax): stream the plane in and out once plus per-tile table
+      re-fetches (f32 weight + int32 index per edge slot):
+      ``2·n·P·b + ⌈P/bt⌉·n·dmax·8``.  Beats ``"pallas_plane"`` exactly
+      when ``2·dmax < n`` — every paper topology from n ≈ 64 up.
+    * ``"sparse"`` — the circulant ring-offset schedule
+      (``repro.core.mixing.mix_sparse``; needs ``n_offsets`` = the static
+      offset count K incl. 0): each offset reads the full plane once and
+      the accumulator is written once — ``(K+1)·n·P·b`` plus the K
+      per-offset weight vectors (``K·n·4``).
     """
     coeff = n * n * 4
     if impl == "einsum":
         return 2 * n * p_floats * itemsize + n_leaves * coeff
     if impl == "pallas_rows":
         return n * (n + 1) * p_floats * itemsize + n_leaves * n * n * 4
+    if impl == "sparse":
+        if n_offsets is None:
+            raise ValueError("impl='sparse' needs n_offsets (the circulant "
+                             "schedule's static offset count, incl. 0)")
+        return ((n_offsets + 1) * n * p_floats * itemsize
+                + n_offsets * n * 4)
     tiles = -(-p_floats // bt)
+    if impl == "edges":
+        if max_neighbors is None:
+            raise ValueError("impl='edges' needs max_neighbors (the "
+                             "padded-ELL table width dmax)")
+        return (2 * n * p_floats * itemsize
+                + tiles * n * max_neighbors * 8)
     if impl == "pallas_plane":
         return 2 * n * p_floats * itemsize + tiles * coeff
     if impl == "pallas_plane_e2e":

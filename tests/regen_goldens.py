@@ -172,6 +172,127 @@ def compute_goldens(mesh=None, chunk_rounds: Optional[int] = None,
     return out
 
 
+# ----------------------------------------------------------------------
+# edge-list path golden suite: an n=256 BA sweep through mix_impl="edges"
+# ----------------------------------------------------------------------
+EDGES_GOLDEN_PATH = os.path.join(GOLDEN_DIR, "sweep_analytics_edges.json")
+EDGES_N = 256
+EDGES_ROUNDS = 3
+
+
+def edges_topology() -> Topology:
+    from repro.core.topology import barabasi_albert
+
+    return barabasi_albert(EDGES_N, p=2, seed=0)
+
+
+def edges_scenarios() -> List[Tuple[str, Topology, str, Tuple[int, ...]]]:
+    """Single-source OOD at the two degree extremes of one n=256 BA graph
+    — the hub-vs-periphery placement contrast the paper's propagation
+    curves hinge on, run entirely on the padded-ELL edge-list mix."""
+    topo = edges_topology()
+    hub = topo.kth_highest_degree_node(1)
+    leaf = int(topo.nodes_by_degree()[-1])
+    return [
+        ("ba256/degree/src-max-degree", topo, "degree", (hub,)),
+        ("ba256/degree/src-min-degree", topo, "degree", (leaf,)),
+    ]
+
+
+def build_edges_engine_inputs():
+    """The edges scenario grid as one set of SweepEngine inputs (E=2,
+    D=2 data configurations; hidden=32 FFN keeps the n=256 plane small)."""
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
+    from repro.training.optimizer import sgd
+
+    train = make_dataset("mnist", 2560, seed=0)
+    test = make_dataset("mnist", 96, seed=9)
+    cfg = DecentralizedConfig(rounds=EDGES_ROUNDS, local_epochs=1,
+                              eval_every=1, mix_impl="edges")
+
+    scens = edges_scenarios()
+    topo = scens[0][1]
+    batchers: List[NodeBatcher] = []
+    for _, _, _, srcs in scens:
+        parts = node_datasets(train, EDGES_N, ood_node=srcs, q=0.10, seed=0)
+        batchers.append(NodeBatcher(parts, batch_size=BATCH,
+                                    steps_per_epoch=2, seed=0,
+                                    local_epochs=cfg.local_epochs))
+    raw = [nb.sample_bank() for nb in batchers]
+    cap = max(b["x"].shape[1] for b in raw)
+    padded = [_pad_cap(b, cap) for b in raw]
+    bank = {k: np.stack([p[k] for p in padded]) for k in raw[0]}
+    indices = np.stack([nb.all_round_indices(EDGES_ROUNDS)
+                        for nb in batchers])
+
+    init = ffn_init(jax.random.key(0), hidden=32)
+    coeffs = np.stack([
+        np.asarray(coeffs_stack(
+            topo, AggregationStrategy(strat, tau=0.1, seed=0), EDGES_ROUNDS,
+            data_counts=batchers[d].data_counts()))
+        for d, (_, _, strat, _) in enumerate(scens)])
+    p0 = stack_params([init] * EDGES_N)
+    params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *([p0] * len(scens)))
+
+    tb = make_test_batch(test, 48, seed=0)
+    ob = make_test_batch(backdoored_testset(test, seed=0), 48, seed=0)
+    stack_e = lambda t: {k: jnp.stack([jnp.asarray(t[k])] * len(scens))
+                         for k in t}
+
+    engine = SweepEngine(sgd(1e-2), classifier_loss(ffn_apply),
+                         classifier_accuracy(ffn_apply), cfg,
+                         mix_support=topo.adjacency + np.eye(EDGES_N))
+    args = (params0, coeffs, bank, indices,
+            np.arange(len(scens), dtype=np.int32), stack_e(tb), stack_e(ob))
+    return engine, args
+
+
+def compute_edges_goldens(mesh=None, chunk_rounds: Optional[int] = None,
+                          keep_history: bool = True) -> Dict:
+    """Run the edges grid and digest it into the golden payload — same
+    shape (and same streaming/oracle cross-check) as the dense suite."""
+    engine, args = build_edges_engine_inputs()
+    res = engine.run(*args, batch_size=BATCH, mesh=mesh,
+                     chunk_rounds=chunk_rounds,
+                     analytics=AnalyticsSpec(arrival_threshold=THRESHOLD),
+                     keep_history=keep_history)
+    scens = edges_scenarios()
+    out: Dict = {
+        "meta": {"n_nodes": EDGES_N, "rounds": EDGES_ROUNDS, "eval_every": 1,
+                 "arrival_threshold": THRESHOLD, "batch": BATCH,
+                 "mix_impl": "edges",
+                 "max_degree": scens[0][1].max_degree()},
+        "scenarios": {},
+    }
+    for e, (name, topo, _, srcs) in enumerate(scens):
+        stream = {k: v[e] for k, v in res.analytics.items()}
+        if keep_history:
+            hist = res.history(e)
+            dev = max(
+                np.abs(stream["iid_auc"]
+                       - propagation.per_node_auc(hist, "iid")).max(),
+                np.abs(stream["ood_auc"]
+                       - propagation.per_node_auc(hist, "ood")).max())
+            assert dev < 1e-6, (name, dev)
+        hops = propagation.hops_from(topo.adjacency, srcs)
+        out["scenarios"][name] = {
+            "ood_sources": list(srcs),
+            "max_hops_from_sources": int(max(hops)),
+            "src_ood_auc": float(stream["ood_auc"][srcs[0]]),
+            "iid_auc_mean": float(stream["iid_auc"].mean()),
+            "ood_auc_mean": float(stream["ood_auc"].mean()),
+            "ood_arrival_mean": float(
+                np.asarray(stream["ood_arrival"], np.float64).mean()),
+            "iid_ood_gap_pct": float(
+                100.0 * (stream["ood_auc"].mean()
+                         - stream["iid_auc"].mean())
+                / max(float(stream["iid_auc"].mean()), 1e-9)),
+            "final_ood_acc_mean": float(stream["final_ood_acc"].mean()),
+        }
+    return out
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     goldens = compute_goldens()
@@ -182,6 +303,14 @@ def main() -> None:
     for name, g in goldens["scenarios"].items():
         print(f"  {name}: ood_auc_mean={np.mean(g['ood_auc']):.4f} "
               f"arrival={g['ood_arrival']}")
+    edges = compute_edges_goldens()
+    with open(EDGES_GOLDEN_PATH, "w") as f:
+        json.dump(edges, f, indent=1)
+        f.write("\n")
+    print(f"wrote {EDGES_GOLDEN_PATH}")
+    for name, g in edges["scenarios"].items():
+        print(f"  {name}: ood_auc_mean={g['ood_auc_mean']:.4f} "
+              f"arrival_mean={g['ood_arrival_mean']:.2f}")
 
 
 if __name__ == "__main__":

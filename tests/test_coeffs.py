@@ -281,3 +281,122 @@ def test_stack_states_and_nbytes():
     assert stacked["seed"].shape == (3,)
     # compact state: ~n² + O(n) floats per experiment, NOT R·n²
     assert state_nbytes(states[0]) < 6 * 6 * 4 + 3 * 6 * 4 + 64
+
+
+# ----------------------------------------------------------------------
+# sparse (edge-list) centrality kernels vs the dense kernels / networkx
+# ----------------------------------------------------------------------
+def _sparse_operands(topo: Topology):
+    """Per-edge operands exactly as ``program_for(..., sparse=True)``
+    builds them: padded neighbour tables WITHOUT the self loop, mask
+    doubling as unit edge values."""
+    nbr_idx, nbr_mask = topo.neighbor_tables(include_self=False)
+    return jnp.asarray(nbr_idx), jnp.asarray(nbr_mask, jnp.float32)
+
+
+def _check_sparse_kernels_match_networkx(topo: Topology):
+    from repro.core.coeffs import (
+        eigenvector_centrality_sparse,
+        pagerank_centrality_sparse,
+        sparse_matvec,
+    )
+
+    idx, val = _sparse_operands(topo)
+    adj = jnp.asarray(topo.adjacency, jnp.float32)
+    # per-edge mass recovers degree centrality
+    np.testing.assert_allclose(
+        np.asarray(val.sum(-1)) / (topo.n_nodes - 1),
+        topo.degree() / (topo.n_nodes - 1), atol=1e-6)
+    # sparse matvec IS the adjacency action
+    x = jnp.asarray(np.random.default_rng(topo.seed or 0)
+                    .normal(size=topo.n_nodes), jnp.float32)
+    np.testing.assert_allclose(np.asarray(sparse_matvec(idx, val, x)),
+                               np.asarray(adj @ x), rtol=1e-5, atol=1e-5)
+    # power-method kernels vs the cached networkx references
+    np.testing.assert_allclose(
+        np.asarray(eigenvector_centrality_sparse(idx, val, iters=500)),
+        topo.eigenvector(), atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(pagerank_centrality_sparse(idx, val)),
+        topo.pagerank(), atol=1e-4)
+    # and bit-for-bit-level agreement with the dense jnp kernels (same
+    # operator, same iteration count, same guards)
+    np.testing.assert_allclose(
+        np.asarray(eigenvector_centrality_sparse(idx, val, iters=200)),
+        np.asarray(eigenvector_centrality(adj, iters=200)), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(pagerank_centrality_sparse(idx, val)),
+        np.asarray(pagerank_centrality(adj)), atol=1e-6)
+
+
+@pytest.mark.parametrize("family", ["ba", "ws", "sb"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_kernels_match_networkx(family, seed):
+    _check_sparse_kernels_match_networkx(_graph(family, seed))
+
+
+@pytest.mark.parametrize("family", ["ba", "ws", "sb"])
+@pytest.mark.parametrize("p_fail", [0.3, 0.7])
+def test_sparse_kernels_on_disconnected_subgraphs(family, p_fail):
+    """Edge-mask survivors (possibly disconnected, with dangling nodes):
+    sparse pagerank matches networkx exactly like the dense kernel, and
+    sparse eigenvector keeps the dense kernel's invariants."""
+    from repro.core.coeffs import (
+        eigenvector_centrality_sparse,
+        pagerank_centrality_sparse,
+    )
+
+    surv = drop_edges(_graph(family, 0), p_fail, np.random.default_rng(3))
+    idx, val = _sparse_operands(surv)
+    adj = jnp.asarray(surv.adjacency, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(pagerank_centrality_sparse(idx, val)),
+        surv.pagerank(), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(pagerank_centrality_sparse(idx, val)),
+        np.asarray(pagerank_centrality(adj)), atol=1e-6)
+    ev = np.asarray(eigenvector_centrality_sparse(idx, val, iters=300))
+    assert np.all(np.isfinite(ev)) and np.all(ev >= -1e-7)
+    assert np.isclose(np.linalg.norm(ev), 1.0, atol=1e-5)
+    np.testing.assert_allclose(
+        ev, np.asarray(eigenvector_centrality(adj, iters=300)), atol=1e-6)
+
+
+@given(family=st.sampled_from(["ba", "ws", "sb"]), seed=st.integers(0, 12))
+@settings(max_examples=12, deadline=None)
+def test_property_sparse_kernels_match_networkx(family, seed):
+    _check_sparse_kernels_match_networkx(_graph(family, seed))
+
+
+@pytest.mark.parametrize("kind", ["degree", "eigenvector", "pagerank",
+                                  "closeness", "random"])
+def test_sparse_program_matches_dense_program(kind):
+    """The sparse=True reactive program must reproduce the dense reactive
+    program's coefficient stack: identical edge_mask draw (same PRNG
+    fold), per-edge survival gathered from the same (n, n) mask, same
+    power-method trajectories — only the operand layout differs."""
+    topo = barabasi_albert(12, 2, seed=0)
+    strat = AggregationStrategy(kind, tau=0.1, seed=5)
+    p_d, s_d = program_for(topo, strat, p_fail=0.3, reactive=True)
+    p_s, s_s = program_for(topo, strat, p_fail=0.3, reactive=True,
+                           sparse=True)
+    assert p_s.sparse and not p_d.sparse
+    assert "nbr_idx" in s_s and "nbr_val" in s_s
+    dense = p_d.materialize(s_d, rounds=3)
+    sparse = p_s.materialize(s_s, rounds=3)
+    np.testing.assert_allclose(sparse, dense, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sparse).sum(axis=2), 1.0,
+                               atol=1e-6)
+
+
+def test_sparse_program_state_stacks():
+    """Per-edge operands ride the stacked state like every other leaf."""
+    topo = barabasi_albert(10, 2, seed=1)
+    states = [program_for(topo, AggregationStrategy("pagerank", tau=0.1,
+                                                    seed=s),
+                          p_fail=0.2, reactive=True, sparse=True)[1]
+              for s in (0, 1)]
+    stacked = stack_states(states)
+    dmax = topo.max_degree()
+    assert stacked["nbr_idx"].shape == (2, 10, dmax)
+    assert stacked["nbr_val"].shape == (2, 10, dmax)

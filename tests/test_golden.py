@@ -84,3 +84,57 @@ def test_golden_no_history_identical(computed):
     history) is skipped inside compute_goldens."""
     got = rg.compute_goldens(keep_history=False)
     assert got == computed
+
+
+# ----------------------------------------------------------------------
+# edge-list path suite: n=256 BA via mix_impl="edges"
+# (goldens/sweep_analytics_edges.json)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def computed_edges():
+    return rg.compute_edges_goldens()
+
+
+def _load_edges_goldens():
+    assert os.path.exists(rg.EDGES_GOLDEN_PATH), (
+        f"missing {rg.EDGES_GOLDEN_PATH}; generate it with "
+        f"`PYTHONPATH=src python -m tests.regen_goldens`")
+    with open(rg.EDGES_GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_edges_golden_values_match(computed_edges):
+    want = _load_edges_goldens()
+    assert want["meta"] == computed_edges["meta"], (
+        "edges golden meta (scale/dmax/threshold) drifted — regenerate "
+        "the goldens if the change was intentional")
+    assert set(want["scenarios"]) == set(computed_edges["scenarios"])
+    for name, g in want["scenarios"].items():
+        c = computed_edges["scenarios"][name]
+        assert c["ood_sources"] == g["ood_sources"], name
+        assert c["max_hops_from_sources"] == g["max_hops_from_sources"], name
+        for key in ("src_ood_auc", "iid_auc_mean", "ood_auc_mean",
+                    "ood_arrival_mean", "final_ood_acc_mean"):
+            np.testing.assert_allclose(c[key], g[key], atol=rg.TOL,
+                                       err_msg=f"{name}:{key}")
+        np.testing.assert_allclose(c["iid_ood_gap_pct"],
+                                   g["iid_ood_gap_pct"], atol=0.5,
+                                   err_msg=name)
+
+
+def test_edges_golden_chunked_mode_identical(computed_edges):
+    """chunk_rounds=2 over R=3 resumes the scan carry exactly on the
+    edge-list path too — digested payload EQUAL, not merely close."""
+    assert rg.compute_edges_goldens(chunk_rounds=2) == computed_edges
+
+
+def test_edges_golden_mesh_mode_identical(computed_edges):
+    """E-padding (E=2 onto the local device count) + shard_map around the
+    edges kernel cannot change any scenario's analytics."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    assert rg.compute_edges_goldens(mesh=make_sweep_mesh()) == computed_edges
+
+
+def test_edges_golden_no_history_identical(computed_edges):
+    assert rg.compute_edges_goldens(keep_history=False) == computed_edges

@@ -6,7 +6,9 @@ from tests._hypothesis import given, settings, st  # optional dep; skips if abse
 
 from repro.core.mixing import (
     circulant_decomposition,
+    edge_weights,
     mix_dense,
+    mix_edges,
     mix_sparse,
     mix_sparse_host,
     mixing_collective_bytes,
@@ -15,6 +17,7 @@ from repro.core.mixing import (
 from repro.core.strategies import AggregationStrategy, mixing_matrix
 from repro.core.topology import (
     barabasi_albert,
+    padded_neighbor_tables,
     ring,
     stochastic_block,
     watts_strogatz,
@@ -265,6 +268,185 @@ class TestMixImplSparse:
                                        rtol=1e-5, atol=1e-6)
 
 
+class TestMixImplEdges:
+    """make_mix_fn(mix_impl='edges'): static padded-ELL neighbour tables
+    from the topology support, per-round weights gathered from the traced
+    matrix, executed as ONE Pallas segment kernel over the flat plane."""
+
+    TOPOS = [
+        lambda: barabasi_albert(14, 2, seed=1),
+        lambda: watts_strogatz(12, 4, 0.5, seed=2),
+        lambda: stochastic_block(13, 3, 0.5, 0.05, seed=3),
+        lambda: ring(10),
+    ]
+
+    @pytest.mark.parametrize("topo_i", range(4))
+    @pytest.mark.parametrize("kind", ["unweighted", "degree", "random"])
+    def test_matches_dense_on_topology_matrices(self, topo_i, kind):
+        from repro.core.decentralized import make_mix_fn
+
+        topo = self.TOPOS[topo_i]()
+        support = topo.adjacency + np.eye(topo.n_nodes)
+        c = mixing_matrix(topo, AggregationStrategy(kind, tau=0.1, seed=5))
+        mix = make_mix_fn("edges", mix_support=support)
+        p = _params(topo.n_nodes)
+        d = mix_dense(p, jnp.asarray(c))
+        e = mix(p, jnp.asarray(c))
+        for k in p:
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(e[k]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_mix_edges_reference_isolated_and_self_loop_rows(self):
+        """Degenerate rows behave exactly like the dense contraction: a
+        self-loop-only row keeps its own params, an all-zero coefficient
+        row (isolated node) comes back zero, with or without a self slot
+        in the tables."""
+        n = 8
+        support = np.zeros((n, n))
+        support[0, 1] = support[1, 0] = 1.0  # only nodes 0/1 have an edge
+        c = np.zeros((n, n))
+        c[0, 1] = 1.0
+        c[1, 0] = 0.5
+        c[1, 1] = 0.5
+        c[2, 2] = 1.0                        # self-loop-only row
+        # rows 3.. are all-zero (isolated, no self weight either)
+        p = _params(n)
+        d = mix_dense(p, jnp.asarray(c))
+        for with_diag in (True, False):
+            s = support + np.eye(n) if with_diag else support.copy()
+            s[1, 1] = 1.0                    # row 1 carries self weight
+            s[2, 2] = 1.0                    # row 2's self-loop support
+            idx, msk = padded_neighbor_tables(s)
+            e = mix_edges(p, jnp.asarray(c), jnp.asarray(idx),
+                          jnp.asarray(msk))
+            for k in p:
+                np.testing.assert_allclose(np.asarray(d[k]),
+                                           np.asarray(e[k]),
+                                           rtol=1e-6, atol=1e-6)
+
+    def test_edge_weights_gather(self):
+        topo = ring(6)
+        idx, msk = padded_neighbor_tables(topo.adjacency + np.eye(6))
+        c = mixing_matrix(topo, AggregationStrategy("unweighted"))
+        w = np.asarray(edge_weights(jnp.asarray(c), jnp.asarray(idx),
+                                    jnp.asarray(msk)))
+        rows = np.arange(6)[:, None]
+        np.testing.assert_allclose(w, c[rows, idx] * msk, atol=1e-7)
+        # every row's gathered weights recover the full row mass
+        np.testing.assert_allclose(w.sum(1), np.ones(6), atol=1e-6)
+
+    def test_edges_requires_support(self):
+        from repro.core.decentralized import make_mix_fn
+
+        with pytest.raises(ValueError, match="mix_support"):
+            make_mix_fn("edges")
+
+    def test_unknown_impl_lists_edges(self):
+        from repro.core.decentralized import make_mix_fn
+
+        with pytest.raises(KeyError, match="edges"):
+            make_mix_fn("segment")
+
+    def test_link_failure_shrunk_support_reuses_tables(self):
+        """Tables from the NOMINAL topology serve matrices whose support
+        shrank under link failure — dropped edges just gather weight 0."""
+        from repro.core.decentralized import make_mix_fn
+
+        topo = barabasi_albert(12, 2, seed=4)
+        support = topo.adjacency + np.eye(12)
+        c = np.asarray(mixing_matrix(
+            topo, AggregationStrategy("unweighted")))
+        rng = np.random.default_rng(0)
+        keep = rng.random((12, 12)) < 0.5
+        keep = np.triu(keep, 1)
+        keep = keep + keep.T + np.eye(12, dtype=bool)
+        c2 = c * keep
+        mix = make_mix_fn("edges", mix_support=support)
+        p = _params(12)
+        d = mix_dense(p, jnp.asarray(c2))
+        e = mix(p, jnp.asarray(c2))
+        for k in p:
+            np.testing.assert_allclose(np.asarray(d[k]), np.asarray(e[k]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_trainer_edges_impl_matches_einsum(self):
+        """DecentralizedConfig(mix_impl='edges') wires the topology
+        support through make_round_fn — same run as einsum to f32
+        tolerance."""
+        import dataclasses as dc
+
+        from tests.test_sweep import CFG, _run_mlp
+
+        strat = AggregationStrategy("degree", tau=0.1)
+        cfg = dc.replace(CFG, rounds=2, eval_every=1)
+        p_e, h_e = _run_mlp(strat, cfg)
+        p_s, h_s = _run_mlp(strat, dc.replace(cfg, mix_impl="edges"))
+        for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+        for ma, mb in zip(h_e, h_s):
+            np.testing.assert_allclose(ma.train_loss, mb.train_loss,
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_trainer_edges_fl_uses_full_support(self):
+        """FL's dense 1/n matrix has weight outside the topology
+        neighbourhoods — the trainer must hand mix_impl='edges' FULL
+        support so no mass is silently dropped."""
+        import dataclasses as dc
+
+        from tests.test_sweep import CFG, _run_mlp
+
+        cfg = dc.replace(CFG, rounds=2, eval_every=1)
+        p_e, _ = _run_mlp(AggregationStrategy("fl"), cfg)
+        p_s, _ = _run_mlp(AggregationStrategy("fl"),
+                          dc.replace(cfg, mix_impl="edges"))
+        for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_engine_rejects_off_support_coefficients(self):
+        """SweepEngine(mix_impl='edges') must refuse grids whose
+        coefficients exceed the neighbour tables instead of silently
+        mixing sub-stochastically."""
+        from repro.core.coeffs import ProgramCoeffs, program_for, stack_states
+        from repro.core.decentralized import DecentralizedConfig
+        from repro.core.sweep import SweepEngine
+        from repro.training.optimizer import sgd
+        from tests.test_sweep import _eval_fn, _loss_fn, _mlp_init
+
+        topo = ring(4)
+        cfg = DecentralizedConfig(rounds=2, local_epochs=1, eval_every=1,
+                                  mix_impl="edges", epoch_shuffle=False)
+        engine = SweepEngine(sgd(1e-2), _loss_fn, _eval_fn, cfg,
+                             mix_support=topo.adjacency + np.eye(4))
+        p0 = jax.tree.map(lambda x: jnp.asarray(x)[None], _mlp_init(0))
+        params0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (1, 4) + x.shape[1:]), p0)
+        bank = {"x": np.zeros((1, 4, 8, 5), np.float32),
+                "y": np.zeros((1, 4, 8, 2), np.float32)}
+        indices = np.zeros((1, 2, 4, 4), np.int32)
+        data_idx = np.zeros(1, np.int32)
+        tb = {"x": np.zeros((1, 8, 5), np.float32),
+              "y": np.zeros((1, 8, 2), np.float32)}
+        run = lambda c: engine.run(params0, c, bank, indices, data_idx,
+                                   tb, tb, batch_size=4)
+        fl_slab = np.full((1, 2, 4, 4), 0.25, np.float32)
+        with pytest.raises(ValueError, match="mix_support"):
+            run(fl_slab)
+        _, state = program_for(topo, AggregationStrategy("fl"))
+        with pytest.raises(ValueError, match="mix_support"):
+            run(ProgramCoeffs(program_for(topo, AggregationStrategy("fl"))[0],
+                              stack_states([state])))
+        # in-support coefficients pass the guard and run
+        ok = engine.run(
+            params0,
+            np.broadcast_to(
+                mixing_matrix(topo, AggregationStrategy("unweighted"))
+                .astype(np.float32), (1, 2, 4, 4)).copy(),
+            bank, indices, data_idx, tb, tb, batch_size=4)
+        assert ok.train_loss.shape == (1, 2, 4)
+
+
 class TestPlaneMix:
     """mix_impl='pallas' → the fused flat-plane kernel
     (kernels.gossip_mix.mix_plane_pallas): one pallas_call per mix,
@@ -342,7 +524,7 @@ class TestMixInFloat32:
         return jnp.asarray(mixing_matrix(
             t, AggregationStrategy("degree", tau=0.1)), jnp.float32), t
 
-    @pytest.mark.parametrize("impl", ["einsum", "pallas", "sparse"])
+    @pytest.mark.parametrize("impl", ["einsum", "pallas", "sparse", "edges"])
     def test_flag_changes_bf16_accumulation(self, impl):
         from repro.core.decentralized import make_mix_fn
 
@@ -350,8 +532,12 @@ class TestMixInFloat32:
         c, topo = self._coeffs(n)
         p = self._bf16_params(n)
         support = topo.adjacency + np.eye(n)
-        kw = dict(mix_support=support, sparse_slack=n) if impl == "sparse" \
-            else {}
+        if impl == "sparse":
+            kw = dict(mix_support=support, sparse_slack=n)
+        elif impl == "edges":
+            kw = dict(mix_support=support)
+        else:
+            kw = {}
         hi = make_mix_fn(impl, mix_in_float32=True, **kw)(p, c)
         lo = make_mix_fn(impl, mix_in_float32=False, **kw)(p, c)
         diff = any(
@@ -478,3 +664,44 @@ def test_property_circulant_exact(n, seed):
     s = np.asarray(mix_sparse_host({"x": jnp.asarray(x)}, sched)["x"])
     np.testing.assert_allclose(d, s, rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(d, c.astype(np.float32) @ x, rtol=1e-4, atol=1e-4)
+
+
+@given(n=st.integers(8, 16), seed=st.integers(0, 10),
+       family=st.sampled_from(["ba", "ws", "sb"]))
+@settings(max_examples=15, deadline=None)
+def test_property_edges_matches_dense(n, seed, family):
+    """mix_impl='edges' == dense einsum to 1e-6 on random BA/WS/SB graphs
+    with random row-stochastic coefficients, including a forced
+    isolated-node row (zero coefficient mass -> zero output) and a forced
+    self-loop-only row (identity pass-through)."""
+    if family == "ba":
+        topo = barabasi_albert(n, p=2, seed=seed)
+    elif family == "ws":
+        topo = watts_strogatz(n, k=4, u=0.3, seed=seed)
+    else:
+        topo = stochastic_block(n, n_communities=2, seed=seed)
+    rng = np.random.default_rng(seed)
+    support = np.asarray(topo.adjacency, dtype=np.float64) + np.eye(n)
+    iso, selfy = 0, 1
+    support[iso, :] = 0.0                    # isolated node: no in-edges
+    support[selfy, :] = 0.0
+    support[selfy, selfy] = 1.0              # self-loop-only node
+    c = rng.random((n, n)) * (support > 0)
+    row = c.sum(1, keepdims=True)
+    c = np.where(row > 0, c / np.where(row > 0, row, 1.0), 0.0)
+    c = c.astype(np.float32)
+
+    x = rng.normal(size=(n, 9)).astype(np.float32)
+    dense = np.asarray(mix_dense({"x": jnp.asarray(x)}, jnp.asarray(c))["x"])
+    assert np.all(dense[iso] == 0.0)
+    np.testing.assert_allclose(dense[selfy], x[selfy], rtol=1e-6, atol=1e-6)
+
+    nbr_idx, nbr_mask = padded_neighbor_tables(support)
+    ref = np.asarray(
+        mix_edges({"x": jnp.asarray(x)}, jnp.asarray(c), nbr_idx, nbr_mask)["x"])
+    np.testing.assert_allclose(ref, dense, rtol=1e-6, atol=1e-6)
+
+    from repro.core.decentralized import make_mix_fn
+    mix = make_mix_fn(mix_impl="edges", mix_support=support)
+    out = np.asarray(mix({"x": jnp.asarray(x)}, jnp.asarray(c))["x"])
+    np.testing.assert_allclose(out, dense, rtol=1e-6, atol=1e-6)
