@@ -17,7 +17,6 @@
 """
 from __future__ import annotations
 
-from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import os
 from typing import Dict, Optional
 

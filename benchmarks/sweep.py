@@ -213,7 +213,7 @@ def _multisource_verdict(rows):
                for a, b in zip(ks, ks[1:]))
     return ("multi-source OOD (more sources ⇒ faster propagation): "
             + "; ".join(parts)
-            + f"  [monotone ✓]" * mono + "  [non-monotone X]" * (not mono))
+            + "  [monotone ✓]" * mono + "  [non-monotone X]" * (not mono))
 
 
 register_preset(SweepPreset(

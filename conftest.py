@@ -2,6 +2,13 @@
 
 Deliberately does NOT touch XLA_FLAGS — tests must see the real single CPU
 device; only launch/dryrun.py (and subprocess tests) force 512/8 devices.
+
+Also opts the whole suite into strict NumPy-style rank checking
+(``jax_numpy_rank_promotion="raise"``): implicit rank promotion is how a
+``(n,)`` per-node vector silently broadcasts against an ``(n, n)``
+coefficient matrix and turns a wrong axis into a wrong *number* instead
+of an error.  Any code path that wants a broadcast states it explicitly
+(``[:, None]`` / ``jnp.broadcast_to``).
 """
 import os
 import sys
@@ -10,3 +17,10 @@ _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+import jax  # noqa: E402  (path setup must precede repro imports)
+
+jax.config.update("jax_numpy_rank_promotion", "raise")
+
+# the jaxlint fixture (repro.analysis.pytest_plugin) for all suites
+pytest_plugins = ["repro.analysis.pytest_plugin"]

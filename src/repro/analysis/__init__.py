@@ -1,0 +1,57 @@
+"""jaxpr-level static analysis ("jaxlint") — machine-checkable engine contracts.
+
+Six PRs of engine work left a pile of *implicit* trace-time contracts:
+one fused ``pallas_call`` per mix (DESIGN.md §11), O(n·dmax) — not O(n²)
+— coefficient traffic on the edge-list path (§12), no ``(R, n, n)`` slab
+constant-folded into the round scan (§7/§9's whole point), donated
+carries in chunked/sharded modes (§8), and no host callbacks inside the
+scan body.  This package makes them explicit: it walks
+``jax.make_jaxpr`` output (recursing into ``scan`` / ``pjit`` /
+``cond`` / ``pallas_call`` sub-jaxprs properly — no ``str()`` matching)
+and checks a catalog of named rules (DESIGN.md §13).
+
+Three entry points:
+
+* **library** — :func:`analyze(fn, *args, rules=...) <analyze>` returns a
+  :class:`Report` with per-rule findings;
+* **pytest** — the ``jaxlint`` fixture (``repro.analysis.pytest_plugin``,
+  loaded by the repo conftest) exposes the same API to test suites;
+* **CLI** — ``python -m repro.analysis --preset engine-matrix`` traces the
+  round/scan body of every (execution mode × mix_impl × coeff kind)
+  combination, writes ``benchmarks/artifacts/ANALYSIS.json``, and exits
+  nonzero on any violation.
+"""
+from repro.analysis.report import AnalysisError, Finding, Report, RuleOutcome
+from repro.analysis.rules import (
+    ConstantFootprint,
+    Donation,
+    DtypeFlow,
+    FusionBudget,
+    HostSync,
+    Rule,
+    analyze,
+)
+from repro.analysis.walker import (
+    all_consts,
+    count_primitives,
+    iter_eqns,
+    outermost_scan_body,
+)
+
+__all__ = [
+    "AnalysisError",
+    "Finding",
+    "Report",
+    "RuleOutcome",
+    "Rule",
+    "FusionBudget",
+    "ConstantFootprint",
+    "DtypeFlow",
+    "Donation",
+    "HostSync",
+    "analyze",
+    "iter_eqns",
+    "count_primitives",
+    "all_consts",
+    "outermost_scan_body",
+]

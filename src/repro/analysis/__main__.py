@@ -1,0 +1,85 @@
+"""CLI: ``python -m repro.analysis --preset engine-matrix``.
+
+Traces every combo in the preset, prints a one-line verdict per combo
+(findings in full for failures), writes the machine-readable report to
+``benchmarks/artifacts/ANALYSIS.json`` (``--out`` overrides), and exits
+nonzero if any rule failed — CI gates on the exit code and uploads the
+JSON artifact.
+
+``--only REGEX`` restricts to matching combo names (e.g.
+``--only 'mesh/.*program'``); ``--list`` prints combo names without
+tracing; ``--recalibrate`` re-measures the pinned einsum baselines
+(paste the printed dict into ``presets.EINSUM_BASELINE`` after an
+*intentional* round-program change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis.presets import PRESETS, recalibrate, run_preset
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level invariant checks (jaxlint) over the "
+                    "sweep engine's program matrix")
+    parser.add_argument("--preset", default="engine-matrix",
+                        choices=sorted(PRESETS))
+    parser.add_argument("--only", default=None, metavar="REGEX",
+                        help="restrict to combos whose name matches")
+    parser.add_argument("--list", action="store_true",
+                        help="print combo names and exit")
+    parser.add_argument("--out",
+                        default="benchmarks/artifacts/ANALYSIS.json",
+                        help="report path (default: %(default)s)")
+    parser.add_argument("--recalibrate", action="store_true",
+                        help="measure einsum baselines and print the "
+                             "EINSUM_BASELINE literal")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        for combo in PRESETS[args.preset]():
+            print(combo.name)
+        return 0
+
+    if args.recalibrate:
+        print("EINSUM_BASELINE = {")
+        for key, counts in sorted(recalibrate().items()):
+            print(f"    {key!r}: {counts!r},")
+        print("}")
+        return 0
+
+    reports = run_preset(args.preset, only=args.only)
+    if not reports:
+        print(f"no combos match --only {args.only!r}", file=sys.stderr)
+        return 2
+    for report in reports:
+        if report.ok:
+            print(f"ok    {report.name}")
+        else:
+            print(f"FAIL  {report.name}")
+            for finding in report.findings:
+                print(f"      - {finding}")
+
+    ok = all(r.ok for r in reports)
+    payload = {
+        "preset": args.preset,
+        "only": args.only,
+        "n_combos": len(reports),
+        "ok": ok,
+        "combos": {r.name: r.to_dict() for r in reports},
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    n_bad = sum(not r.ok for r in reports)
+    print(f"{len(reports)} combo(s) analyzed, {n_bad} failing -> {out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

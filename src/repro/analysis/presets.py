@@ -1,0 +1,309 @@
+"""The ``engine-matrix`` preset: one jaxlint report per engine program.
+
+The sweep engine is one program *family*: (execution mode: scanned /
+chunked / mesh / unrolled) × (mix_impl: einsum / pallas / sparse /
+edges) × (coefficient kind: materialized stack / in-scan program), plus
+the low-precision-plane ablations (bf16 params × ``mix_in_float32``).
+Every combination is traced through :meth:`SweepEngine.traceable` — the
+exact closure :meth:`SweepEngine.run` executes — on a tiny but
+structurally complete setting (8-node ring, 2-experiment grid, 12
+rounds, the paper's FFN classifier), and the full rule catalog runs
+against each trace (DESIGN.md §13).
+
+Fusion budgets are *derived*, not hand-typed: the einsum-mode equation
+counts per (mode × kind) are pinned below as :data:`EINSUM_BASELINE`
+(the only calibration in the file — regenerate with
+``python -m repro.analysis --recalibrate`` after intentional program
+changes), and every other mix_impl's expectation is
+``baseline − einsum-mix-budget + impl-mix-budget`` using the
+introspectable per-impl metadata
+(:func:`repro.core.decentralized.mix_impl_budget`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.report import Report
+from repro.analysis.rules import (
+    ConstantFootprint,
+    Donation,
+    DtypeFlow,
+    FusionBudget,
+    HostSync,
+    Rule,
+    analyze,
+)
+
+__all__ = [
+    "Combo",
+    "engine_matrix_combos",
+    "rules_for",
+    "run_combo",
+    "run_preset",
+    "PRESETS",
+    "EINSUM_BASELINE",
+]
+
+# ----------------------------------------------------------------------
+# the analyzed setting — tiny, but every structural axis of the real runs
+# ----------------------------------------------------------------------
+N_NODES = 8      # ring(8): circulant, so the sparse schedule covers it
+N_EXP = 2        # two strategies through one grid (stacked states)
+ROUNDS = 12      # (R, n, n) f32 slab = 3 KiB — must NOT appear as a const
+BATCH = 4
+EVAL_EVERY = 4
+CHUNK_ROUNDS = 4
+
+MODES: Tuple[str, ...] = ("scanned", "chunked", "mesh", "unrolled")
+IMPLS: Tuple[str, ...] = ("einsum", "pallas", "sparse", "edges")
+KINDS: Tuple[str, ...] = ("stack", "program")
+
+#: Constant-footprint caps, sized against the setting above: the leak
+#: this guards (a materialized (R, n, n) coefficient stack folded into
+#: the trace) is ROUNDS·N_NODES² f32 = 3072 B, well above both caps;
+#: the legitimate consts (eval scaffolding, edge-list neighbour tables)
+#: total well under 1 KiB.
+MAX_CONST_BYTES = 2048
+MAX_TOTAL_CONST_BYTES = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class Combo:
+    """One cell of the engine matrix."""
+
+    mode: str
+    impl: str
+    kind: str
+    param_dtype: str = "float32"
+    mix_in_float32: bool = True
+
+    @property
+    def name(self) -> str:
+        tag = f"{self.mode}/{self.impl}/{self.kind}"
+        if self.param_dtype != "float32":
+            tag += (f"/{self.param_dtype}-"
+                    + ("accum32" if self.mix_in_float32 else "accumlow"))
+        return tag
+
+
+def engine_matrix_combos() -> List[Combo]:
+    """32 mode × impl × kind cells + 4 low-precision-plane ablations."""
+    combos = [Combo(m, i, k) for m in MODES for i in IMPLS for k in KINDS]
+    combos += [
+        Combo("scanned", impl, "stack", "bfloat16", m32)
+        for impl in ("pallas", "edges")
+        for m32 in (True, False)
+    ]
+    return combos
+
+
+@functools.lru_cache(maxsize=None)
+def _setting():
+    """Shared engine inputs (built once, f32; params cast per combo)."""
+    from repro.core.coeffs import program_for, stack_states
+    from repro.core.decentralized import stack_params
+    from repro.core.strategies import AggregationStrategy
+    from repro.core.topology import ring
+    from repro.data.distribution import node_datasets
+    from repro.data.pipeline import NodeBatcher, make_test_batch
+    from repro.data.synthetic import make_dataset
+    from repro.models.paper_models import (
+        classifier_accuracy,
+        classifier_loss,
+        ffn_apply,
+        ffn_init,
+    )
+
+    topo = ring(N_NODES)
+    support = topo.adjacency + np.eye(N_NODES)  # neighbours ∪ self
+    train = make_dataset("mnist", 320, seed=0)
+    test = make_dataset("mnist", 64, seed=9)
+    parts = node_datasets(train, N_NODES, ood_node=0, q=0.10, seed=0)
+    nb = NodeBatcher(parts, batch_size=BATCH, steps_per_epoch=1, seed=0)
+    tb = make_test_batch(test, 16, seed=0)
+    ob = make_test_batch(test, 16, seed=1)
+
+    cells = [("unweighted", 0), ("degree", 1)]
+    progstates = [
+        program_for(topo, AggregationStrategy(k, tau=0.1, seed=s),
+                    data_counts=nb.data_counts())
+        for k, s in cells]
+    program = progstates[0][0]
+    states = stack_states([s for _, s in progstates])
+    stacks = np.stack([p.materialize(s, ROUNDS) for p, s in progstates])
+
+    bank = {k: v[None] for k, v in nb.sample_bank().items()}
+    indices = nb.all_round_indices(ROUNDS)[None]
+    data_idx = np.zeros(N_EXP, np.int32)
+    params0 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[stack_params([ffn_init(jax.random.key(s))] * N_NODES)
+          for _, s in cells])
+    st = lambda t: {k: jnp.stack([jnp.asarray(t[k])] * N_EXP) for k in t}
+    return {
+        "topo": topo,
+        "support": support,
+        "loss_fn": classifier_loss(ffn_apply),
+        "acc_fn": classifier_accuracy(ffn_apply),
+        "params0": params0,
+        "program": program,
+        "states": states,
+        "stacks": stacks,
+        "bank": bank,
+        "indices": indices,
+        "data_idx": data_idx,
+        "test_iid": st(tb),
+        "test_ood": st(ob),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _engine(impl: str, mix_in_float32: bool):
+    from repro.core.decentralized import DecentralizedConfig
+    from repro.core.sweep import SweepEngine
+    from repro.training.optimizer import sgd
+
+    s = _setting()
+    cfg = DecentralizedConfig(
+        rounds=ROUNDS, local_epochs=1, eval_every=EVAL_EVERY,
+        mix_impl=impl, mix_in_float32=mix_in_float32, epoch_shuffle=False)
+    return SweepEngine(sgd(1e-2), s["loss_fn"], s["acc_fn"], cfg,
+                       mix_support=s["support"])
+
+
+def _traceable(combo: Combo):
+    """``(fn, args, jit_kwargs)`` for one combo — the engine's own
+    :meth:`SweepEngine.traceable` on the shared setting."""
+    from repro.core.coeffs import ProgramCoeffs
+
+    s = _setting()
+    engine = _engine(combo.impl, combo.mix_in_float32)
+    params0 = jax.tree.map(
+        lambda x: x.astype(combo.param_dtype), s["params0"])
+    coeffs = (np.asarray(s["stacks"]) if combo.kind == "stack"
+              else ProgramCoeffs(s["program"], s["states"]))
+    mesh = None
+    if combo.mode == "mesh":
+        from repro.launch.mesh import make_sweep_mesh
+
+        mesh = make_sweep_mesh()
+    return engine.traceable(
+        params0, coeffs, s["bank"], s["indices"], s["data_idx"],
+        s["test_iid"], s["test_ood"], batch_size=BATCH, mode=combo.mode,
+        mesh=mesh, chunk_rounds=CHUNK_ROUNDS,
+        donate=combo.mode in ("chunked", "mesh"))
+
+
+# ----------------------------------------------------------------------
+# fusion-budget calibration
+# ----------------------------------------------------------------------
+#: Pinned einsum-mode equation counts per (mode, kind) in the scan-body
+#: scope, on the setting above.  Regenerate with
+#: ``python -m repro.analysis --recalibrate`` and paste the printed dict
+#: here when the engine's round program intentionally changes; any
+#: UNintentional drift fails the fusion-budget rule.
+EINSUM_BASELINE: Dict[Tuple[str, str], Dict[str, int]] = {
+    # Every mode traces the same per-round program (the engine's whole
+    # equivalence contract), so the counts agree: 20 = 8 training dots
+    # (FFN fwd + bwd, counted once inside the local-step scan) + 6 eval
+    # dots (iid + ood forward) + 6 einsum-mix tensordots (one per
+    # parameter leaf).
+    ("scanned", "stack"): {"pallas_call": 0, "dot_general": 20},
+    ("scanned", "program"): {"pallas_call": 0, "dot_general": 20},
+    ("chunked", "stack"): {"pallas_call": 0, "dot_general": 20},
+    ("chunked", "program"): {"pallas_call": 0, "dot_general": 20},
+    ("mesh", "stack"): {"pallas_call": 0, "dot_general": 20},
+    ("mesh", "program"): {"pallas_call": 0, "dot_general": 20},
+    ("unrolled", "stack"): {"pallas_call": 0, "dot_general": 20},
+    ("unrolled", "program"): {"pallas_call": 0, "dot_general": 20},
+}
+
+
+def _n_leaves() -> int:
+    return len(jax.tree.leaves(_setting()["params0"]))
+
+
+def _scope(combo: Combo) -> str:
+    """Counting scope per mode: the scanned family's round program is the
+    outermost scan's body; the unrolled trace IS one round (its only
+    scan is the local-epoch loop *inside* the round, which would exclude
+    the mix), so it counts the whole program."""
+    return "all" if combo.mode == "unrolled" else "scan_body"
+
+
+def expected_budget(combo: Combo) -> Dict[str, int]:
+    """``baseline − einsum mix budget + combo-impl mix budget`` — the
+    model/eval/program equations cancel, leaving the per-impl mixing
+    contract from the introspectable kernel metadata."""
+    from repro.core.decentralized import mix_impl_budget
+
+    base = EINSUM_BASELINE[(combo.mode, combo.kind)]
+    s = _setting()
+    ein = mix_impl_budget("einsum", _n_leaves())
+    imp = mix_impl_budget(combo.impl, _n_leaves(),
+                          mix_support=s["support"])
+    return {p: base[p] - ein[p] + imp[p]
+            for p in ("pallas_call", "dot_general")}
+
+
+def rules_for(combo: Combo) -> List[Rule]:
+    """The full catalog, parameterized for one combo."""
+    from repro.kernels.gossip_mix import mix_accum_upcasts
+
+    donated = combo.mode in ("chunked", "mesh")
+    upcasts = mix_accum_upcasts(
+        combo.impl, combo.mix_in_float32,
+        plane_low_precision=combo.param_dtype != "float32")
+    return [
+        FusionBudget.of(expected_budget(combo), scope=_scope(combo)),
+        ConstantFootprint(max_total_bytes=MAX_TOTAL_CONST_BYTES,
+                          max_const_bytes=MAX_CONST_BYTES),
+        DtypeFlow(expect_kernel_upcasts=upcasts),
+        Donation(expect=donated,
+                 min_donated=_n_leaves() if donated else 1),
+        HostSync(scope=_scope(combo)),
+    ]
+
+
+def run_combo(combo: Combo) -> Report:
+    fn, args, jit_kwargs = _traceable(combo)
+    return analyze(fn, *args, rules=rules_for(combo),
+                   jit_kwargs=jit_kwargs, name=combo.name)
+
+
+def run_preset(preset: str = "engine-matrix",
+               only: Optional[str] = None) -> List[Report]:
+    combos = PRESETS[preset]()
+    if only is not None:
+        pat = re.compile(only)
+        combos = [c for c in combos if pat.search(c.name)]
+    return [run_combo(c) for c in combos]
+
+
+def recalibrate() -> Dict[Tuple[str, str], Dict[str, int]]:
+    """Measure the einsum baselines on the current engine — the literal
+    to paste into :data:`EINSUM_BASELINE` after an intentional change."""
+    from repro.analysis.rules import AnalysisContext
+
+    out: Dict[Tuple[str, str], Dict[str, int]] = {}
+    for mode in MODES:
+        for kind in KINDS:
+            combo = Combo(mode, "einsum", kind)
+            fn, args, _ = _traceable(combo)
+            ctx = AnalysisContext(jax.make_jaxpr(fn)(*args))
+            rule = FusionBudget.of(
+                {"pallas_call": 0, "dot_general": 0}, scope=_scope(combo))
+            out[(mode, kind)] = rule.measure(ctx)
+    return out
+
+
+PRESETS = {
+    "engine-matrix": engine_matrix_combos,
+}

@@ -1,0 +1,74 @@
+"""The ``jaxlint`` pytest fixture — the analyzer as a test utility.
+
+Loaded by the repo-root ``conftest.py`` (``pytest_plugins``); suites use
+it instead of string-matching jaxpr pretty-prints::
+
+    def test_fused(jaxlint):
+        assert jaxlint.pallas_calls(fn, *args) == 1
+
+    def test_budget(jaxlint):
+        rule = jaxlint.FusionBudget.of({"pallas_call": 1}, scope="all")
+        jaxlint.check(fn, *args, rules=[rule])
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import pytest
+
+from repro.analysis.report import Report
+from repro.analysis.rules import (
+    ConstantFootprint,
+    Donation,
+    DtypeFlow,
+    FusionBudget,
+    HostSync,
+    analyze,
+)
+from repro.analysis.walker import count_primitives
+
+
+class Jaxlint:
+    """Thin handle over :mod:`repro.analysis` for test suites."""
+
+    FusionBudget = FusionBudget
+    ConstantFootprint = ConstantFootprint
+    DtypeFlow = DtypeFlow
+    Donation = Donation
+    HostSync = HostSync
+    analyze = staticmethod(analyze)
+
+    def count(self, fn, *args,
+              names: Optional[Sequence[str]] = None,
+              exclude_within: Sequence[str] = ("pallas_call",),
+              **kwargs):
+        """Per-primitive equation counts of ``fn(*args, **kwargs)``'s
+        jaxpr (recursing into sub-jaxprs; kernel bodies excluded by
+        default) — the eqn-walking replacement for
+        ``str(jaxpr).count(...)``."""
+        import jax
+
+        if kwargs:
+            closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+        else:
+            closed = jax.make_jaxpr(fn)(*args)
+        return count_primitives(closed, names=names,
+                                exclude_within=exclude_within)
+
+    def pallas_calls(self, fn, *args, **kwargs) -> int:
+        """Number of ``pallas_call`` equations (kernel launches) in the
+        traced program."""
+        counts = self.count(fn, *args, names=("pallas_call",), **kwargs)
+        return counts.get("pallas_call", 0)
+
+    def check(self, fn, *args, rules, jit_kwargs=None, name=None,
+              **kwargs) -> Report:
+        """:func:`repro.analysis.analyze` + raise on any finding."""
+        report = analyze(fn, *args, rules=rules, jit_kwargs=jit_kwargs,
+                         name=name, **kwargs)
+        return report.raise_if_failed()
+
+
+@pytest.fixture(scope="session")
+def jaxlint() -> Jaxlint:
+    return Jaxlint()

@@ -1,0 +1,158 @@
+"""Structural jaxpr traversal: equations, sub-jaxprs, and constants.
+
+Everything here operates on the *equation graph* that ``jax.make_jaxpr``
+returns — sub-jaxprs are pulled out of equation params (``scan`` /
+``while`` / ``cond`` / ``pjit`` / ``custom_jvp_call`` / ``shard_map`` /
+``pallas_call`` all stash theirs under different keys), never recovered
+from the pretty-printed string.  String matching miscounts as soon as a
+primitive name appears in a comment, a sub-jaxpr is printed twice, or
+the printer elides a nested call; equation walking cannot.
+
+Types are duck-checked (``eqns``/``invars`` for a raw ``Jaxpr``,
+``jaxpr``/``consts`` for a ``ClosedJaxpr``) so the walker keeps working
+across jax versions that move the classes between ``jax.core`` and
+``jax.extend.core``.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Iterable, Iterator, Optional, Sequence, Tuple
+
+__all__ = [
+    "as_jaxpr",
+    "sub_jaxprs",
+    "iter_eqns",
+    "count_primitives",
+    "all_consts",
+    "all_avals",
+    "outermost_scan_body",
+]
+
+#: Path entries are the primitive names of the enclosing equations, e.g.
+#: ``("pjit", "scan", "cond")`` for an equation inside an eval branch of
+#: the round scan.
+Path = Tuple[str, ...]
+
+
+def _is_closed(obj: Any) -> bool:
+    return hasattr(obj, "jaxpr") and hasattr(obj, "consts")
+
+
+def _is_open(obj: Any) -> bool:
+    return hasattr(obj, "eqns") and hasattr(obj, "invars")
+
+
+def as_jaxpr(obj: Any):
+    """The raw ``Jaxpr`` for a ``Jaxpr`` | ``ClosedJaxpr`` | anything with
+    a ``.jaxpr`` attribute (e.g. ``jax.make_jaxpr`` output)."""
+    if _is_closed(obj):
+        return obj.jaxpr
+    if _is_open(obj):
+        return obj
+    raise TypeError(f"not a jaxpr-like object: {type(obj).__name__}")
+
+
+def sub_jaxprs(eqn) -> Iterator[Tuple[str, Any]]:
+    """``(param_key, raw_jaxpr)`` for every sub-jaxpr in an equation's
+    params — handles bare jaxprs, closed jaxprs, and tuples/lists of
+    either (``cond`` branches)."""
+    for key, val in eqn.params.items():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for item in vals:
+            if _is_closed(item):
+                yield key, item.jaxpr
+            elif _is_open(item):
+                yield key, item
+
+
+def iter_eqns(jaxpr, path: Path = ()) -> Iterator[Tuple[Any, Path]]:
+    """Pre-order walk over every equation, recursing into sub-jaxprs.
+
+    Yields ``(eqn, path)`` where ``path`` names the enclosing equations'
+    primitives — rules use it to scope counts (e.g. "outside pallas
+    kernel bodies": ``"pallas_call" not in path``).
+    """
+    for eqn in as_jaxpr(jaxpr).eqns:
+        yield eqn, path
+        sub_path = path + (eqn.primitive.name,)
+        for _, sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub, sub_path)
+
+
+def count_primitives(
+    jaxpr,
+    names: Optional[Sequence[str]] = None,
+    exclude_within: Iterable[str] = (),
+) -> Counter:
+    """Per-primitive equation counts over the whole (recursive) jaxpr.
+
+    ``names`` restricts the tally; ``exclude_within`` skips equations
+    whose enclosing path contains any of the given primitives — e.g.
+    ``exclude_within=("pallas_call",)`` counts XLA-level ``dot_general``
+    GEMMs without the MACs inside Pallas kernel bodies.
+    """
+    excl = frozenset(exclude_within)
+    keep = None if names is None else frozenset(names)
+    counts: Counter = Counter()
+    for eqn, path in iter_eqns(jaxpr):
+        if excl and excl.intersection(path):
+            continue
+        name = eqn.primitive.name
+        if keep is None or name in keep:
+            counts[name] += 1
+    return counts
+
+
+def all_consts(closed) -> list:
+    """Every constant closed over anywhere in the program — the top-level
+    ``ClosedJaxpr.consts`` plus any consts attached to closed sub-jaxprs
+    (``pjit`` bodies sometimes keep their own), deduplicated by identity.
+    These are the arrays that get baked into the traced program — the
+    constant-footprint rule's operand."""
+    seen: dict = {}
+
+    def visit_closed(cj) -> None:
+        for const in cj.consts:
+            seen.setdefault(id(const), const)
+        visit_jaxpr(cj.jaxpr)
+
+    def visit_jaxpr(jx) -> None:
+        for eqn in jx.eqns:
+            for val in eqn.params.values():
+                items = val if isinstance(val, (tuple, list)) else (val,)
+                for item in items:
+                    if _is_closed(item):
+                        visit_closed(item)
+                    elif _is_open(item):
+                        visit_jaxpr(item)
+
+    if _is_closed(closed):
+        visit_closed(closed)
+    else:
+        visit_jaxpr(closed)
+    return list(seen.values())
+
+
+def all_avals(jaxpr) -> Iterator[Tuple[Any, Path]]:
+    """``(aval, path)`` for every variable the program touches: top-level
+    inputs, every equation's inputs and outputs (literals included) —
+    the dtype-flow rule's operand."""
+    jx = as_jaxpr(jaxpr)
+    for var in jx.invars + jx.constvars:
+        yield var.aval, ()
+    for eqn, path in iter_eqns(jx):
+        for var in tuple(eqn.invars) + tuple(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            if aval is not None:
+                yield aval, path
+
+
+def outermost_scan_body(jaxpr):
+    """The body jaxpr of the first ``scan`` equation reached in pre-order
+    that is not inside a Pallas kernel — the engine's scan-over-rounds in
+    every scanned-family trace.  ``None`` when the program contains no
+    scan (the unrolled mode)."""
+    for eqn, path in iter_eqns(jaxpr):
+        if eqn.primitive.name == "scan" and "pallas_call" not in path:
+            return eqn.params["jaxpr"].jaxpr
+    return None

@@ -6,9 +6,8 @@ so ``repro.configs`` stays cheap to import.
 from __future__ import annotations
 
 import importlib
-from typing import Tuple
 
-from repro.configs.base import ModelConfig, ParallelConfig, SHAPES, InputShape
+from repro.configs.base import ModelConfig, ParallelConfig, SHAPES
 
 __all__ = ["ARCHS", "get_config", "get_smoke_config", "get_parallel", "SHAPES"]
 

@@ -65,6 +65,7 @@ __all__ = [
     "make_local_train_fn",
     "make_round_fn",
     "make_mix_fn",
+    "mix_impl_budget",
     "edges_schedule",
     "make_scan_fn",
     "eval_round_indices",
@@ -260,6 +261,25 @@ def make_mix_fn(mix_impl: str = "einsum",
             params, coeffs, idx, msk, mix_in_float32=mix_in_float32)
     raise KeyError(f"unknown mix_impl {mix_impl!r}; "
                    f"have 'einsum', 'pallas', 'sparse', 'edges'")
+
+
+def mix_impl_budget(mix_impl: str, n_leaves: int = 1,
+                    mix_support: Optional[np.ndarray] = None,
+                    sparse_slack: int = 4) -> dict:
+    """The trace-time equation budget a configured mix contributes to one
+    round body — ``repro.kernels.gossip_mix.mix_eqn_budget`` with the
+    circulant path's dense-fallback decision resolved exactly the way
+    :func:`make_mix_fn` resolves it (offset count vs max degree + slack).
+    This is the introspectable source of truth for ``repro.analysis``
+    fusion-budget rules: when the fallback fires, the *einsum* budget is
+    the contract, not the sparse one."""
+    from repro.kernels.gossip_mix import mix_eqn_budget
+
+    if mix_impl == "sparse" and mix_support is not None:
+        offsets, _ = sparse_schedule(mix_support, sparse_slack)
+        if offsets is None:
+            return mix_eqn_budget("einsum", n_leaves)
+    return mix_eqn_budget(mix_impl, n_leaves)
 
 
 def sparse_schedule(mix_support, sparse_slack: int = 4):

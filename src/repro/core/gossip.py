@@ -16,12 +16,11 @@ multi-device CPU harness in tests/test_gossip_distributed.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.mixing import CirculantSchedule
 

@@ -25,7 +25,7 @@ them and degrade only by the explicit storage cast when it does not.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

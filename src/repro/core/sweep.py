@@ -60,6 +60,7 @@ scan never double-allocates the model/optimizer state.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -78,7 +79,14 @@ from repro.core.decentralized import (
 from repro.training.optimizer import Optimizer
 
 __all__ = ["SweepEngine", "SweepResult", "gather_round_batch",
-           "pad_experiments", "donation_supported"]
+           "pad_experiments", "donation_supported",
+           "DONATED_CARRY_ARGNUMS"]
+
+#: The (params, opt) carry positions the chunked and sharded modes donate
+#: (DESIGN.md §8) — introspectable metadata shared by the jit wrappers
+#: below and the ``repro.analysis`` donation rule, so the analyzer checks
+#: the same contract the engine declares.
+DONATED_CARRY_ARGNUMS: Tuple[int, ...] = (0, 1)
 
 
 def donation_supported() -> bool:
@@ -227,7 +235,7 @@ class SweepEngine:
             self._one_round_impl,
             static_argnames=("batch_size", "do_eval", "program",
                              "analytics"))
-        self._chunk_jit: Optional[Callable] = None
+        self._chunk_jit: Dict[bool, Callable] = {}
         self._sharded_cache: Dict[Tuple[Any, ...], Callable] = {}
 
     # ------------------------------------------------------------------
@@ -338,19 +346,13 @@ class SweepEngine:
     # ------------------------------------------------------------------
     # sharded / chunked mode
     # ------------------------------------------------------------------
-    def _make_sharded_fn(self, mesh, batch_size: int,
-                         program: Optional[CoeffProgram],
-                         analytics: Optional[AnalyticsSpec],
-                         keep_history: bool) -> Callable:
-        """``jit(shard_map(vmap_E(scan_R(...))))`` over the mesh's single
-        experiment axis.  Per-experiment inputs/outputs — including the
-        coefficient-program states and the analytics carry — shard on E;
-        the sample bank, eval mask, and absolute round indices are
-        replicated (every experiment reads them whole).  The (params, opt)
-        carry is donated where the backend supports it."""
-        key = (mesh, batch_size, program, analytics, keep_history)
-        if key in self._sharded_cache:
-            return self._sharded_cache[key]
+    def _sharded_body(self, mesh, batch_size: int,
+                      program: Optional[CoeffProgram],
+                      analytics: Optional[AnalyticsSpec],
+                      keep_history: bool) -> Callable:
+        """The un-jitted ``shard_map(vmap_E(scan_R(...)))`` program over
+        the mesh's single experiment axis — shared by the executing
+        wrapper below and by :meth:`traceable` for static analysis."""
         from jax.sharding import PartitionSpec as P
 
         from repro.core.gossip import compat_shard_map
@@ -369,30 +371,46 @@ class SweepEngine:
         # outputs: (params, opt[, acarry][, losses, iid, ood]) — all exp
         n_out = 2 + (1 if analytics is not None else 0) \
             + (3 if keep_history else 0)
-        mapped = compat_shard_map(
+        return compat_shard_map(
             body, mesh,
             in_specs=(exp, exp, exp, exp, exp, rep, rep, rep, exp, exp,
                       exp, exp),
             out_specs=(exp,) * n_out)
+
+    def _make_sharded_fn(self, mesh, batch_size: int,
+                         program: Optional[CoeffProgram],
+                         analytics: Optional[AnalyticsSpec],
+                         keep_history: bool, donate: bool) -> Callable:
+        """``jit(shard_map(vmap_E(scan_R(...))))``.  Per-experiment
+        inputs/outputs — including the coefficient-program states and the
+        analytics carry — shard on E; the sample bank, eval mask, and
+        absolute round indices are replicated (every experiment reads
+        them whole).  The (params, opt) carry is donated when ``donate``
+        (``DONATED_CARRY_ARGNUMS``)."""
+        key = (mesh, batch_size, program, analytics, keep_history, donate)
+        if key in self._sharded_cache:
+            return self._sharded_cache[key]
         fn = jax.jit(
-            mapped,
-            donate_argnums=(0, 1) if donation_supported() else ())
+            self._sharded_body(mesh, batch_size, program, analytics,
+                               keep_history),
+            donate_argnums=DONATED_CARRY_ARGNUMS if donate else ())
         self._sharded_cache[key] = fn
         return fn
 
     def _make_chunk_fn(self, batch_size: int,
                        program: Optional[CoeffProgram],
                        analytics: Optional[AnalyticsSpec],
-                       keep_history: bool) -> Callable:
+                       keep_history: bool, donate: bool) -> Callable:
         """Single-device chunk step: the scanned program with a donated
         (params, opt) carry, re-dispatched per round-chunk."""
-        if self._chunk_jit is None:
-            self._chunk_jit = jax.jit(
+        if donate not in self._chunk_jit:
+            self._chunk_jit[donate] = jax.jit(
                 self._run_impl,
                 static_argnames=("batch_size", "program", "analytics",
                                  "keep_history"),
-                donate_argnums=(0, 1) if donation_supported() else ())
-        return lambda *args: self._chunk_jit(
+                donate_argnums=DONATED_CARRY_ARGNUMS if donate else ())
+        chunk_jit = self._chunk_jit[donate]
+        return lambda *args: chunk_jit(
             *args, batch_size=batch_size, program=program,
             analytics=analytics, keep_history=keep_history)
 
@@ -400,7 +418,7 @@ class SweepEngine:
                      bank, test_iid, test_ood, batch_size, mesh,
                      chunk_rounds: Optional[int], states, program,
                      acarry, analytics: Optional[AnalyticsSpec],
-                     keep_history: bool) -> SweepResult:
+                     keep_history: bool, donate: bool) -> SweepResult:
         """Sharded and/or chunked execution.  Bit-identical to the scanned
         path: padding rows are dropped, each chunk resumes the exact scan
         carry — (params, opt) AND the analytics accumulators — round
@@ -435,14 +453,14 @@ class SweepEngine:
             bank = put(bank, rep_sh)
             rounds_idx = put(rounds_idx, rep_sh)
             fn = self._make_sharded_fn(mesh, batch_size, program,
-                                       analytics, keep_history)
+                                       analytics, keep_history, donate)
         else:
-            if donation_supported():
+            if donate:
                 # chunk 0 would donate the caller's params0 — copy once
                 params0 = jax.tree.map(
                     lambda x: jnp.asarray(x).copy(), params0)
             fn = self._make_chunk_fn(batch_size, program, analytics,
-                                     keep_history)
+                                     keep_history, donate)
 
         chunk = chunk_rounds or rounds
         params, opt = params0, opt0
@@ -477,44 +495,12 @@ class SweepEngine:
             analytics=_finalize_analytics(analytics, acarry, n_exp))
 
     # ------------------------------------------------------------------
-    def run(
-        self,
-        params0,                      # pytree, leaves (E, n, ...)
-        coeffs,                       # (E, R, n, n) stack | ProgramCoeffs
-        bank,                         # pytree, leaves (D, n, cap, ...)
-        indices: np.ndarray,          # (D, R, n, S)
-        data_idx: np.ndarray,         # (E,) rows into bank/indices
-        test_iid,                     # pytree, leaves (E, b, ...)
-        test_ood,
-        batch_size: int,
-        unroll_eval: Optional[bool] = None,
-        mesh=None,                    # 1-D jax Mesh → shard the E axis
-        chunk_rounds: Optional[int] = None,  # scan R in ⌈R/c⌉ chunks
-        analytics: Optional[AnalyticsSpec] = None,
-        keep_history: bool = True,
-    ) -> SweepResult:
-        """Run the whole grid.  ``unroll_eval`` overrides the config flag
-        (None → use ``config.unroll_eval``).  ``mesh`` (from
-        ``repro.launch.mesh.make_sweep_mesh``) shards the experiment axis
-        across devices; ``chunk_rounds`` bounds device memory for long
-        schedules.  All modes are bit-identical.
-
-        ``coeffs`` may be a :class:`repro.core.coeffs.ProgramCoeffs`
-        instead of an ``(E, R, n, n)`` stack: the per-round matrices are
-        then generated device-side inside the scan (all three modes; the
-        per-experiment program state shards on E like every other
-        per-experiment input), the round count comes from the ``indices``
-        schedule, and — for non-reactive programs — results are
-        bit-identical to running the materialized stack.
-
-        ``analytics`` (an :class:`repro.core.analytics.AnalyticsSpec`)
-        threads the streaming-analytics accumulators through the scan
-        (DESIGN.md §10) and populates ``SweepResult.analytics`` with
-        per-experiment per-node summaries — identical values in every
-        execution mode (the carry pads/shards on E and chunk boundaries
-        resume it exactly).  ``keep_history=False`` (requires
-        ``analytics``) drops the per-round ``(E, R, n)`` metric arrays
-        entirely: the summaries are the only metrics, O(E·n) memory."""
+    def _prepare_inputs(self, params0, coeffs, bank, indices, data_idx,
+                        analytics: Optional[AnalyticsSpec],
+                        keep_history: bool):
+        """Shared input normalization for :meth:`run` and
+        :meth:`traceable` — program/stack resolution, support validation,
+        index gathering, optimizer/analytics carry construction."""
         program: Optional[CoeffProgram] = None
         states: Any = {}
         if isinstance(coeffs, ProgramCoeffs):
@@ -546,6 +532,140 @@ class SweepEngine:
         n_nodes = jax.tree.leaves(params0)[0].shape[1]
         acarry = (analytics.init_batch(n_exp, n_nodes)
                   if analytics is not None else {})
+        return (params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
+                states, program, acarry, rounds, n_exp, n_nodes)
+
+    def traceable(
+        self,
+        params0,
+        coeffs,
+        bank,
+        indices: np.ndarray,
+        data_idx: np.ndarray,
+        test_iid,
+        test_ood,
+        batch_size: int,
+        mode: str = "scanned",
+        mesh=None,
+        chunk_rounds: Optional[int] = None,
+        analytics: Optional[AnalyticsSpec] = None,
+        keep_history: bool = True,
+        donate: Optional[bool] = None,
+    ) -> Tuple[Callable, Tuple[Any, ...], Dict[str, Any]]:
+        """``(fn, args, jit_kwargs)`` for static analysis — the exact
+        program each execution mode runs, as a traceable closure plus
+        concrete arguments, consumed by ``repro.analysis``
+        (``jax.make_jaxpr(fn)(*args)`` /
+        ``jax.jit(fn, **jit_kwargs).lower(*args)``).
+
+        ``mode``: ``"scanned"`` (the one-shot jit), ``"chunked"`` (one
+        donated round-chunk step — ``chunk_rounds`` bounds it),
+        ``"mesh"`` (the shard_map program over ``mesh``), or
+        ``"unrolled"`` (one per-round dispatch with eval).  ``donate``
+        defaults to the run-time decision (:func:`donation_supported`);
+        pass ``True`` to analyze donation intent on CPU, where run()
+        skips it only because the backend ignores donation."""
+        (params0, opt0, coeffs, idx, data_idx, eval_mask, bank, states,
+         program, acarry, rounds, n_exp, n_nodes) = self._prepare_inputs(
+            params0, coeffs, bank, indices, data_idx, analytics,
+            keep_history)
+        donate = donation_supported() if donate is None else donate
+        rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
+        eval_mask = jnp.asarray(eval_mask)
+        test_iid = jax.tree.map(jnp.asarray, test_iid)
+        test_ood = jax.tree.map(jnp.asarray, test_ood)
+
+        if mode == "unrolled":
+            fn = functools.partial(
+                self._one_round_impl, batch_size=batch_size, do_eval=True,
+                program=program, analytics=analytics)
+            args = (params0, opt0, coeffs[:, 0], idx[:, 0], data_idx, bank,
+                    test_iid, test_ood, states, acarry,
+                    jnp.asarray(0, jnp.int32))
+            return fn, args, {}
+
+        if mode in ("scanned", "chunked"):
+            fn = functools.partial(
+                self._run_impl, batch_size=batch_size, program=program,
+                analytics=analytics, keep_history=keep_history)
+            c = rounds if mode == "scanned" else (chunk_rounds or rounds)
+            args = (params0, opt0, coeffs[:, :c], idx[:, :c], data_idx,
+                    eval_mask[:c], rounds_idx[:c], bank, test_iid,
+                    test_ood, states, acarry)
+            jit_kwargs = ({} if mode == "scanned" else
+                          {"donate_argnums":
+                           DONATED_CARRY_ARGNUMS if donate else ()})
+            return fn, args, jit_kwargs
+
+        if mode == "mesh":
+            if mesh is None:
+                from repro.launch.mesh import make_sweep_mesh
+
+                mesh = make_sweep_mesh()
+            n_dev = int(np.prod(list(mesh.shape.values())))
+            pad = (-n_exp) % n_dev
+            (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
+             states, acarry) = (
+                pad_experiments(t, pad)
+                for t in (params0, opt0, coeffs, idx, data_idx,
+                          test_iid, test_ood, states, acarry))
+            fn = self._sharded_body(mesh, batch_size, program, analytics,
+                                    keep_history)
+            args = (params0, opt0, coeffs, idx, data_idx, eval_mask,
+                    rounds_idx, bank, test_iid, test_ood, states, acarry)
+            return fn, args, {"donate_argnums":
+                              DONATED_CARRY_ARGNUMS if donate else ()}
+
+        raise KeyError(f"unknown mode {mode!r}; have 'scanned', "
+                       f"'chunked', 'mesh', 'unrolled'")
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        params0,                      # pytree, leaves (E, n, ...)
+        coeffs,                       # (E, R, n, n) stack | ProgramCoeffs
+        bank,                         # pytree, leaves (D, n, cap, ...)
+        indices: np.ndarray,          # (D, R, n, S)
+        data_idx: np.ndarray,         # (E,) rows into bank/indices
+        test_iid,                     # pytree, leaves (E, b, ...)
+        test_ood,
+        batch_size: int,
+        unroll_eval: Optional[bool] = None,
+        mesh=None,                    # 1-D jax Mesh → shard the E axis
+        chunk_rounds: Optional[int] = None,  # scan R in ⌈R/c⌉ chunks
+        analytics: Optional[AnalyticsSpec] = None,
+        keep_history: bool = True,
+        donate: Optional[bool] = None,
+    ) -> SweepResult:
+        """Run the whole grid.  ``unroll_eval`` overrides the config flag
+        (None → use ``config.unroll_eval``).  ``mesh`` (from
+        ``repro.launch.mesh.make_sweep_mesh``) shards the experiment axis
+        across devices; ``chunk_rounds`` bounds device memory for long
+        schedules.  ``donate`` overrides carry donation in the
+        chunked/sharded paths (None → :func:`donation_supported`, i.e.
+        donate wherever XLA honors it).  All modes are bit-identical.
+
+        ``coeffs`` may be a :class:`repro.core.coeffs.ProgramCoeffs`
+        instead of an ``(E, R, n, n)`` stack: the per-round matrices are
+        then generated device-side inside the scan (all three modes; the
+        per-experiment program state shards on E like every other
+        per-experiment input), the round count comes from the ``indices``
+        schedule, and — for non-reactive programs — results are
+        bit-identical to running the materialized stack.
+
+        ``analytics`` (an :class:`repro.core.analytics.AnalyticsSpec`)
+        threads the streaming-analytics accumulators through the scan
+        (DESIGN.md §10) and populates ``SweepResult.analytics`` with
+        per-experiment per-node summaries — identical values in every
+        execution mode (the carry pads/shards on E and chunk boundaries
+        resume it exactly).  ``keep_history=False`` (requires
+        ``analytics``) drops the per-round ``(E, R, n)`` metric arrays
+        entirely: the summaries are the only metrics, O(E·n) memory."""
+        (params0, opt0, coeffs, idx, data_idx, eval_mask, bank, states,
+         program, acarry, rounds, n_exp, n_nodes) = self._prepare_inputs(
+            params0, coeffs, bank, indices, data_idx, analytics,
+            keep_history)
+        donate = donation_supported() if donate is None else donate
 
         unroll = (self.config.unroll_eval if unroll_eval is None
                   else unroll_eval)
@@ -563,7 +683,7 @@ class SweepEngine:
             return self._run_sharded(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size, mesh, chunk_rounds,
-                states, program, acarry, analytics, keep_history)
+                states, program, acarry, analytics, keep_history, donate)
 
         rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
         out = self._run_jit(

@@ -17,7 +17,7 @@ metrics.  All tensor compute stays in ``repro.core.mixing`` / ``gossip``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import networkx as nx
 import numpy as np

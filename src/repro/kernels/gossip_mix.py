@@ -65,8 +65,58 @@ __all__ = [
     "gossip_mix_pallas",
     "mix_dense_pallas",
     "mix_modeled_hbm_bytes",
+    "mix_eqn_budget",
+    "mix_accum_upcasts",
     "default_interpret",
 ]
+
+
+def mix_eqn_budget(mix_impl: str, n_leaves: int = 1) -> dict:
+    """Trace-time equation budget ONE aggregation (Eq. 2) contributes to a
+    round body — the fusion contract as introspectable metadata, consumed
+    by ``repro.analysis`` fusion-budget rules (DESIGN.md §13) instead of
+    hand-counted assertions.
+
+    * ``"einsum"`` — one XLA GEMM (``dot_general``) per pytree leaf
+      (``repro.core.mixing.mix_dense`` tensordots leaf-wise), zero Pallas
+      launches.
+    * ``"pallas"`` — the fused flat-plane kernel: exactly ONE
+      ``pallas_call`` for the whole mix, regardless of leaf count (the
+      §11 contract); the kernel's internal MAC is not an XLA GEMM.
+    * ``"edges"`` — the edge-list segment kernel: also exactly ONE
+      ``pallas_call`` (§12); the per-edge weight gather is indexing, not
+      a contraction.
+    * ``"sparse"`` — the circulant schedule is rolls + multiplies: zero
+      of both.  (The dense fallback is an *einsum* budget — resolve it
+      with ``repro.core.decentralized.mix_impl_budget``, which knows the
+      support.)
+    """
+    budgets = {
+        "einsum": {"pallas_call": 0, "dot_general": n_leaves},
+        "pallas": {"pallas_call": 1, "dot_general": 0},
+        "edges": {"pallas_call": 1, "dot_general": 0},
+        "sparse": {"pallas_call": 0, "dot_general": 0},
+    }
+    if mix_impl not in budgets:
+        raise KeyError(f"unknown mix_impl {mix_impl!r}; "
+                       f"have {sorted(budgets)}")
+    return budgets[mix_impl]
+
+
+def mix_accum_upcasts(mix_impl: str, mix_in_float32: bool,
+                      plane_low_precision: bool):
+    """Declared accumulation-point policy for the dtype-flow rule: should
+    the Pallas kernel body contain small-float→f32 upcasts?
+
+    ``True``: yes — f32 accumulation of a low-precision plane upcasts at
+    the declared accumulation points (``mix_in_float32=True`` on a bf16
+    plane).  ``False``: no — the low-precision ablation must stay in the
+    plane dtype end to end.  ``None``: nothing to check (no Pallas kernel
+    in this impl, or the plane is f32-native so no upcast can exist).
+    """
+    if mix_impl not in ("pallas", "edges") or not plane_low_precision:
+        return None
+    return bool(mix_in_float32)
 
 
 def default_interpret() -> bool:

@@ -21,7 +21,6 @@ Validated against ``ref.mla_attention_ref`` in interpret mode.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -71,7 +71,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, state_scr,
 
     # state update
     p_total = p[-1]                                       # (hd,)
-    k_scaled = k * (p_total / p)                          # (T, hd)
+    k_scaled = k * (p_total[None] / p)                    # (T, hd)
     s_new = s0 * p_total[:, None] + jax.lax.dot_general(
         k_scaled, v, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

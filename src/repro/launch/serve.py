@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.models.transformer import init_params
-from repro.serving.serve_step import make_cache, make_prefill_step, make_serve_step
+from repro.serving.serve_step import make_cache, make_serve_step
 from repro.training.checkpoint import latest_checkpoint, load_checkpoint
 
 

@@ -20,13 +20,12 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig, ParallelConfig, SHAPES
 from repro.configs.registry import get_config, get_parallel
 from repro.models.transformer import init_cache, init_params
-from repro.sharding import param_specs, opt_specs_like, cache_specs
+from repro.sharding import param_specs, opt_specs_like
 from repro.training.optimizer import make_optimizer
 
 __all__ = ["DryRunSpec", "input_specs", "applicable_shapes", "LONG_CTX_OK"]

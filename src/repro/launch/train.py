@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
@@ -23,14 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ParallelConfig
-from repro.configs.registry import get_config, get_parallel, get_smoke_config
+from repro.configs.registry import get_config, get_smoke_config
 from repro.core.strategies import AggregationStrategy, mixing_matrix
 from repro.core.topology import build_topology
 from repro.data.pipeline import lm_token_stream
 from repro.models.transformer import ForwardOptions, init_params
 from repro.training.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
 from repro.training.optimizer import make_optimizer
-from repro.training.train_step import make_train_step, reshape_for_microbatch
+from repro.training.train_step import make_train_step
 
 
 def build_topology_from_args(args, n_nodes):

@@ -41,6 +41,13 @@ def dense_init(key, shape, dtype, scale: Optional[float] = None):
     return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
 
 
+def _tail(v: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    """Align a ``(d,)`` vector to the last axis of an ``ndim``-rank
+    tensor explicitly (the suite runs with
+    ``jax_numpy_rank_promotion="raise"``)."""
+    return v.reshape((1,) * (ndim - 1) + v.shape)
+
+
 def rmsnorm_init(d, dtype):
     return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1+scale) form
 
@@ -49,7 +56,8 @@ def rmsnorm(p, x, eps):
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(var + eps)
-    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+    scale = 1.0 + p["scale"].astype(jnp.float32)
+    return (y * _tail(scale, y.ndim)).astype(x.dtype)
 
 
 def layernorm_init(d, dtype):
@@ -61,7 +69,8 @@ def layernorm(p, x, eps):
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     y = (xf - mu) * jax.lax.rsqrt(var + eps)
-    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    return (y * _tail(p["scale"].astype(jnp.float32), y.ndim)
+            + _tail(p["bias"].astype(jnp.float32), y.ndim)).astype(x.dtype)
 
 
 def norm_init(kind, d, dtype):
@@ -82,7 +91,8 @@ def softcap(x, cap: float):
 def rope(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(..., S) positions → cos/sin of shape (..., S, head_dim//2)."""
     freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
-    angles = positions.astype(jnp.float32)[..., None] * freqs
+    angles = (positions.astype(jnp.float32)[..., None]
+              * _tail(freqs, positions.ndim + 1))
     return jnp.cos(angles), jnp.sin(angles)
 
 
@@ -267,7 +277,9 @@ def _sdpa(cfg, q, k, v, mask):
     logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
     logits *= 1.0 / math.sqrt(hd)
     logits = softcap(logits, cfg.attn_logit_softcap)
-    logits = logits + mask  # mask broadcasts over (b, kv, groups)
+    # mask is (S,T) from the causal path or (B,1,1,1,T) from decode; pad
+    # explicitly to the logits rank (rank promotion is set to "raise").
+    logits = logits + mask.reshape((1,) * (logits.ndim - mask.ndim) + mask.shape)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
     return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -12,14 +12,14 @@ flow through the decentralized trainer unchanged.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init
-from repro.models.transformer import forward as tf_forward, init_params as tf_init
+from repro.models.transformer import forward as tf_forward
 
 __all__ = [
     "ffn_init", "ffn_apply",
@@ -46,9 +46,9 @@ def ffn_init(key, in_dim: int = 784, hidden: int = 128, n_classes: int = 10,
 def ffn_apply(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
     """images: (B, ...) flattened internally → logits (B, n_classes)."""
     x = images.reshape(images.shape[0], -1)
-    x = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
-    x = jax.nn.relu(x @ params["l2"]["w"] + params["l2"]["b"])
-    return x @ params["l3"]["w"] + params["l3"]["b"]
+    x = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"][None])
+    x = jax.nn.relu(x @ params["l2"]["w"] + params["l2"]["b"][None])
+    return x @ params["l3"]["w"] + params["l3"]["b"][None]
 
 
 # ----------------------------------------------------------------------
@@ -91,10 +91,10 @@ def vgg_apply(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
         x = jax.lax.conv_general_dilated(
             x, layer["w"], (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        x = jax.nn.relu(x + layer["b"])
+        x = jax.nn.relu(x + layer["b"][None, None, None])
     x = jnp.mean(x, axis=(1, 2))  # global average pool (32/2^5 = 1 anyway)
-    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
-    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"][None])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"][None]
 
 
 # ----------------------------------------------------------------------

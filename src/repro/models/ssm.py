@@ -18,7 +18,6 @@ perf path (see DESIGN.md §6).  Decode carries the state explicitly.
 """
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax
@@ -70,7 +69,7 @@ def _token_shift(x, x_prev):
 
 def _ddlerp(p, idx, x, xs):
     """Finch's data-dependent lerp between x_t and x_{t-1} (low-rank)."""
-    mix = p["mu_x"][idx] + jnp.tanh((xs - x) @ p["lora_a"][idx]) @ p["lora_b"][idx]
+    mix = p["mu_x"][idx][None, None] + jnp.tanh((xs - x) @ p["lora_a"][idx]) @ p["lora_b"][idx]
     return x + (xs - x) * mix
 
 
@@ -155,8 +154,8 @@ def rwkv_channel_mix(p, x, x_prev=None):
     if x_prev is None:
         x_prev = jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)
     xs = _token_shift(x, x_prev)
-    xk = x + (xs - x) * p["mu_k"]
-    xr = x + (xs - x) * p["mu_r"]
+    xk = x + (xs - x) * p["mu_k"][None, None]
+    xr = x + (xs - x) * p["mu_r"][None, None]
     v = jnp.square(jax.nn.relu(xk @ p["wk"])) @ p["wv"]
     return jax.nn.sigmoid(xr @ p["wr"]) * v, x[:, -1, :]
 

@@ -20,7 +20,6 @@ Decode threads a per-layer cache through the same scan.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -29,8 +28,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (
-    attention_apply,
-    attention_decode,
     attention_init,
     dense_init,
     mla_apply,

@@ -25,7 +25,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import init_cache
-from repro.serving.serve_step import make_serve_step
 
 __all__ = ["Request", "NodeScheduler", "FleetScheduler"]
 

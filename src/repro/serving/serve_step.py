@@ -11,12 +11,12 @@ seq_len-deep cache — per the assignment.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig
 from repro.models.transformer import (
     ForwardOptions,
     decode_step,

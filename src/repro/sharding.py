@@ -27,7 +27,6 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 
 __all__ = [
     "param_specs",

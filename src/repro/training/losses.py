@@ -8,7 +8,7 @@ here expressed as an XLA-level scan, the TPU-idiomatic equivalent).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

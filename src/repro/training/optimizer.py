@@ -12,7 +12,7 @@ Also: global-norm clipping and LR schedules (constant, cosine, warmup).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

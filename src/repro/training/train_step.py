@@ -15,8 +15,7 @@ trainer a "round" is a configurable number of optimizer steps).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

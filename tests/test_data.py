@@ -4,14 +4,13 @@ from tests._hypothesis import given, settings, st  # optional dep; skips if abse
 
 from repro.data.backdoor import (
     TARGET_LABEL,
-    TARGET_TOKEN,
     apply_image_backdoor,
     apply_language_backdoor,
     backdoor_dataset,
     backdoored_testset,
 )
 from repro.data.distribution import dirichlet_split, node_datasets
-from repro.data.pipeline import NodeBatcher, make_test_batch
+from repro.data.pipeline import NodeBatcher
 from repro.data.synthetic import make_dataset, make_tinymem_dataset
 
 

@@ -11,7 +11,6 @@ import pytest
 
 from repro.core.dynamic import drop_edges, dynamic_mixing_matrix
 from repro.core.strategies import (
-    STRATEGIES,
     TOPOLOGY_AWARE,
     AggregationStrategy,
     mixing_matrix,

@@ -14,17 +14,12 @@ from repro.kernels.gossip_mix import (
     gossip_plane_pallas,
     mix_dense_pallas,
     mix_edges_pallas,
+    mix_eqn_budget,
     mix_modeled_hbm_bytes,
     mix_plane_pallas,
 )
 from repro.kernels.ref import flash_attention_ref, gossip_mix_ref, rwkv_scan_ref
 from repro.kernels.ssm_scan import rwkv_scan_pallas
-
-
-def _count_pallas_calls(fn, *args) -> int:
-    """Number of pallas_call equations in fn's jaxpr (nested included —
-    the jaxpr pretty-printer inlines sub-jaxprs)."""
-    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call[")
 
 
 class TestGossipPlane:
@@ -45,10 +40,12 @@ class TestGossipPlane:
                                    np.asarray(ref, np.float32),
                                    rtol=tol, atol=tol)
 
-    def test_one_pallas_call_regardless_of_leaf_count(self):
+    def test_one_pallas_call_regardless_of_leaf_count(self, jaxlint):
         """THE fusion contract: a 4-leaf ragged pytree mixes in exactly
         one kernel launch, where the legacy path issued one per leaf
-        (each itself vmapped over n destination rows)."""
+        (each itself vmapped over n destination rows) — asserted as the
+        named fusion-budget rule over the introspectable per-impl
+        metadata, on the real equation graph (no jaxpr str() matching)."""
         n = 6
         ks = jax.random.split(jax.random.key(0), 4)
         params = {
@@ -58,8 +55,12 @@ class TestGossipPlane:
             "scalar": jax.random.normal(ks[3], (n,)),
         }
         c = jax.nn.softmax(jax.random.normal(jax.random.key(9), (n, n)), axis=1)
-        assert _count_pallas_calls(mix_plane_pallas, params, c) == 1
-        assert _count_pallas_calls(mix_dense_pallas, params, c) == 4
+        jaxlint.check(
+            mix_plane_pallas, params, c,
+            rules=[jaxlint.FusionBudget.of(mix_eqn_budget("pallas"),
+                                           scope="all")])
+        # the legacy per-leaf path: one launch per leaf, for contrast
+        assert jaxlint.pallas_calls(mix_dense_pallas, params, c) == 4
 
     def test_non_lane_multiple_bt_is_clamped(self):
         """A caller-supplied bt that is not a 128 multiple must still
@@ -184,9 +185,10 @@ class TestGossipEdges:
         np.testing.assert_allclose(np.asarray(out), np.asarray(c @ plane),
                                    rtol=1e-6, atol=1e-6)
 
-    def test_one_pallas_call_on_ragged_pytree(self):
+    def test_one_pallas_call_on_ragged_pytree(self, jaxlint):
         """Same fusion contract as the dense plane kernel: the whole
-        multi-leaf mix is ONE pallas_call."""
+        multi-leaf mix is ONE pallas_call — the named fusion-budget rule
+        over the edges-impl metadata."""
         n = 8
         ks = jax.random.split(jax.random.key(0), 3)
         params = {
@@ -195,7 +197,10 @@ class TestGossipEdges:
             "scalar": jax.random.normal(ks[2], (n,)),
         }
         _, c, idx, msk, _ = _edge_inputs(n, 8)
-        assert _count_pallas_calls(mix_edges_pallas, params, c, idx, msk) == 1
+        jaxlint.check(
+            mix_edges_pallas, params, c, idx, msk,
+            rules=[jaxlint.FusionBudget.of(mix_eqn_budget("edges"),
+                                           scope="all")])
 
     def test_mix_edges_pallas_matches_host(self):
         """Tree-level wrapper round-trips leaf shapes/dtypes and matches

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCHS, get_config, get_parallel, get_smoke_config
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
 from repro.models.transformer import decode_step, forward, init_cache, init_params
 from repro.training.losses import lm_loss_fn
 from repro.training.optimizer import adamw, apply_updates

@@ -9,7 +9,6 @@ import pytest
 
 from tests._hypothesis import given, settings, st  # optional dep; skips if absent
 
-from repro.core import propagation
 from repro.core.decentralized import RoundMetrics
 from repro.core.propagation import (
     NO_ARRIVAL,

@@ -6,17 +6,9 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
-from benchmarks.roofline import (
-    analyze_pair,
-    attention_flops,
-    cache_bytes,
-    full_table,
-    resolve_plan,
-)
-from repro.configs.base import ModelConfig, ParallelConfig, SHAPES
-from repro.configs.registry import ARCHS
+from benchmarks.roofline import attention_flops, cache_bytes, full_table, resolve_plan
+from repro.configs.base import ModelConfig, SHAPES
 
 
 class TestAnalyticPieces:

@@ -1,7 +1,5 @@
 """Unit tests for the sharding rules (param/batch/cache spec builders)."""
 import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_smoke_config

@@ -9,7 +9,7 @@ from repro.core.strategies import (
     mixing_matrix,
     validate_mixing_matrix,
 )
-from repro.core.topology import barabasi_albert, fully_connected, ring, watts_strogatz
+from repro.core.topology import barabasi_albert, ring, watts_strogatz
 
 ALL_KINDS = ["unweighted", "weighted", "random", "fl", "degree", "betweenness",
              "metropolis"]

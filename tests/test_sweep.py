@@ -36,14 +36,14 @@ CFG = DecentralizedConfig(rounds=ROUNDS, local_epochs=2, eval_every=2,
 # tiny MLP regression setting (fast; exercises multi-leaf pytrees)
 # ----------------------------------------------------------------------
 def _loss_fn(p, batch):
-    h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"])
-    pred = h @ p["w2"] + p["b2"]
+    h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"][None])
+    pred = h @ p["w2"] + p["b2"][None]
     return jnp.mean((pred - batch["y"]) ** 2)
 
 
 def _eval_fn(p, tb):
-    h = jnp.tanh(tb["x"] @ p["w1"] + p["b1"])
-    pred = h @ p["w2"] + p["b2"]
+    h = jnp.tanh(tb["x"] @ p["w1"] + p["b1"][None])
+    pred = h @ p["w2"] + p["b2"][None]
     return jnp.mean((jnp.abs(pred - tb["y"]) < 0.5).astype(jnp.float32))
 
 
