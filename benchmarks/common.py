@@ -493,8 +493,23 @@ def run_sweep_cells(
             t_ood.append(obs[d])
             metas.append((cell, ood_nodes))
 
-        engine_coeffs = (ProgramCoeffs(program, stack_states(states))
-                         if coeff_mode == "program" else np.stack(coeffs))
+        if coeff_mode == "program":
+            # one shared program serves the whole group, so prune its
+            # lax.switch to the UNION of the group's strategy kinds (and
+            # drop the per-round edge mask when no cell churns links):
+            # under vmap-over-E the batched switch computes every traced
+            # branch — for reactive programs the unused 200-iteration
+            # power-method branches were the measured ~1.8× overhead
+            # (BENCH_sweep.json `coeff_programs`).  Bit-identical for the
+            # kinds that remain.
+            program = dataclasses.replace(
+                program,
+                kinds=tuple(sorted({PROGRAM_KINDS.index(cells[i].strategy)
+                                    for i in idxs})),
+                link_failure=any(cells[i].p_fail > 0 for i in idxs))
+            engine_coeffs = ProgramCoeffs(program, stack_states(states))
+        else:
+            engine_coeffs = np.stack(coeffs)
         params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *p0s)
         stack_tests = lambda ts: {
             k: jnp.stack([jnp.asarray(t[k]) for t in ts]) for k in ts[0]}

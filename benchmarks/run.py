@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale runs")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,fig5,fig6,gossip,mix,"
-                         "roofline")
+                         "serve,roofline")
     ap.add_argument("--out", default="benchmarks/artifacts")
     args = ap.parse_args()
 
@@ -31,7 +31,7 @@ def main() -> None:
     n_nodes = 33 if args.full else 16
     sections = (args.only.split(",") if args.only
                 else ["fig2", "fig4", "fig5", "fig6", "ablations",
-                      "gossip", "mix", "roofline"])
+                      "gossip", "mix", "serve", "roofline"])
     os.makedirs(args.out, exist_ok=True)
     verdicts = []
     t_start = time.time()
@@ -120,6 +120,25 @@ def main() -> None:
                 rec["fused_vs_rows"]["wall_speedup"],
                 rec["fused_vs_rows"]["hbm_bytes_ratio"],
                 rec["impls"]["pallas_rows"]["kernel_programs_per_mix"]))
+
+    if "serve" in sections:
+        from benchmarks import serve_bench
+
+        code = serve_bench.main(
+            ["--smoke", "--out", args.out] if not args.full
+            else ["--fleets", "2,4,8", "--out", args.out])
+        rec = json.load(open(f"{args.out}/BENCH_serve.json"))
+        best = max(rec["fleets"], key=lambda f: f["vmapped_speedup"])
+        verdicts.append(
+            "serving: fleet-vmapped continuous batching %s the per-node "
+            "loop (best %.2fx at n=%d; %.0f tok/s; outputs identical and "
+            "post-gossip swap without re-jit: %s)" % (
+                "beats" if code == 0 and all(
+                    f["vmapped_speedup"] > 1 for f in rec["fleets"])
+                else "DOES NOT beat",
+                best["vmapped_speedup"], best["n_nodes"],
+                best["fleet_vmapped"]["tokens_per_sec"],
+                rec["all_checks_passed"]))
 
     if "roofline" in sections:
         from benchmarks import roofline

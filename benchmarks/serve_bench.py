@@ -1,0 +1,275 @@
+"""Fleet serving benchmark — continuous batching over gossip-trained planes.
+
+The paper's deployment mode is per-device inference from each node's own
+gossip-trained weights (no global model), so the serving hot path is a
+fleet of per-node continuous-batching schedulers.  This benchmark drives
+:class:`repro.serving.scheduler.FleetScheduler` with a seeded
+request-generator workload — Poisson-ish arrivals × a prompt-length mix ×
+round-robin per-node routing — and reports
+
+* p50/p95/p99 request latency (submit → done, wall-clock),
+* decode throughput (generated tokens per second),
+* mean slot occupancy (active slots / total slots per step),
+
+for the fleet-vmapped path (ONE compiled dispatch advances all n nodes'
+slot batches) against the per-node Python-loop baseline (n dispatches per
+step), at two or more fleet sizes.  The comparison gates on an internal
+equivalence check: greedy outputs must be token-identical between the two
+paths, and a model swap mid-workload must not re-trace the fleet step.
+
+Results land in ``benchmarks/artifacts/BENCH_serve.json`` (a tracked
+artifact — the serving counterpart of BENCH_sweep.json):
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke
+  PYTHONPATH=src python -m benchmarks.serve_bench --fleets 2,4,8 \\
+      --requests 64 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["ServeWorkload", "gen_requests", "run_fleet", "main"]
+
+# small dense config — the decode step's op mix is representative while
+# keeping CI wall-clock in seconds (same shape family as tests)
+BENCH_CFG = ModelConfig(name="serve-bench", n_layers=2, d_model=64,
+                        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                        dtype="float32", param_dtype="float32")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeWorkload:
+    """Seeded request-generator parameters.
+
+    Arrivals follow a geometric inter-arrival process measured in
+    scheduler steps (the discrete-time analogue of Poisson arrivals);
+    prompt lengths and generation budgets are drawn from small mixes so
+    slots churn at different times (the continuous-batching case).
+    """
+
+    n_requests: int = 32
+    arrival_p: float = 1.0          # P(new request per step candidate);
+    #                                 1.0 = closed-loop burst (saturation)
+    prompt_lens: tuple = (4, 8, 16)
+    prompt_mix: tuple = (0.5, 0.3, 0.2)
+    max_new: tuple = (4, 8, 16)
+    max_new_mix: tuple = (0.4, 0.4, 0.2)
+    seed: int = 0
+
+
+def gen_requests(work: ServeWorkload, vocab: int):
+    """[(arrival_step, prompt, max_new)] — deterministic in ``work.seed``."""
+    rng = np.random.default_rng(work.seed)
+    out, step = [], 0
+    for _ in range(work.n_requests):
+        while rng.random() > work.arrival_p:
+            step += 1  # geometric inter-arrival gap; p=1.0 → burst at t=0
+        plen = int(rng.choice(work.prompt_lens, p=work.prompt_mix))
+        prompt = rng.integers(1, vocab, size=plen).tolist()
+        max_new = int(rng.choice(work.max_new, p=work.max_new_mix))
+        out.append((step, prompt, max_new))
+    return out
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    arr = np.asarray(xs, float) * 1e3  # → ms
+    return {f"p{p}_ms": round(float(np.percentile(arr, p)), 2)
+            for p in (50, 95, 99)}
+
+
+def run_fleet(cfg: ModelConfig, stacked_params, n_nodes: int,
+              work: ServeWorkload, n_slots: int, max_seq: int,
+              prefill_chunk: int, vmapped: bool,
+              warmup: bool = True, repeats: int = 3) -> Dict:
+    """Drive one scheduler mode through the workload ``repeats`` times
+    (median wall-clock repeat reported — per-run walls are tens of ms);
+    returns metrics + per-request outputs (for the cross-mode
+    equivalence gate)."""
+    from repro.serving.scheduler import FleetScheduler, Request
+
+    fleet = FleetScheduler(cfg, stacked_params, n_nodes=n_nodes,
+                           n_slots=n_slots, max_seq=max_seq,
+                           prefill_chunk=prefill_chunk, vmapped=vmapped)
+    schedule = gen_requests(work, cfg.vocab_size)
+    if warmup:
+        # compile every dispatch shape on every node before measuring:
+        # a multi-chunk prompt forces the (B, chunk) call and a
+        # generation budget past the chunk forces the (B, 1) pure-decode
+        # call (self-feed can otherwise finish a short request in-chunk
+        # and leave a node's decode shape cold until mid-measurement)
+        for i in range(n_nodes):
+            fleet.submit(Request(rid=-1 - i, prompt=[1] * (prefill_chunk + 2),
+                                 max_new=prefill_chunk + 2), node=i)
+        fleet.run_until_drained()
+
+    total_slots = n_nodes * n_slots
+    runs = []
+    for _ in range(repeats):
+        reqs = [Request(rid=i, prompt=list(p), max_new=m)
+                for i, (_, p, m) in enumerate(schedule)]
+        submit_t = {}
+        done_t = {}
+        occupancy = []
+        pending = list(zip([s for s, _, _ in schedule], reqs))
+        t_start = time.time()
+        step = 0
+        guard = 100_000
+        while (pending or fleet.active or fleet.queued) and step < guard:
+            while pending and pending[0][0] <= step:
+                _, req = pending.pop(0)
+                fleet.submit(req)
+                submit_t[req.rid] = time.time()
+            fleet.step()
+            now = time.time()
+            occupancy.append(fleet.active / total_slots)
+            for req in reqs:
+                if req.done and req.rid not in done_t:
+                    done_t[req.rid] = now
+            step += 1
+        wall = time.time() - t_start
+        assert all(r.done for r in reqs), "workload did not drain"
+        gen_tokens = sum(len(r.output) for r in reqs)
+        lat = [done_t[r.rid] - submit_t[r.rid] for r in reqs]
+        metrics = {
+            "mode": "fleet-vmapped" if vmapped else "per-node-loop",
+            "requests": len(reqs),
+            "repeats": repeats,
+            "steps": step,
+            "wall_secs": round(wall, 4),
+            "generated_tokens": gen_tokens,
+            "tokens_per_sec": round(gen_tokens / max(wall, 1e-9), 1),
+            "mean_slot_occupancy": round(float(np.mean(occupancy)), 3),
+            **_percentiles(lat),
+        }
+        runs.append({"wall": wall, "metrics": metrics,
+                     "outputs": {r.rid: list(r.output) for r in reqs}})
+    runs.sort(key=lambda r: r["wall"])
+    med = runs[len(runs) // 2]
+    assert all(r["outputs"] == med["outputs"] for r in runs), \
+        "greedy decode must be deterministic across repeats"
+    return {"metrics": med["metrics"], "outputs": med["outputs"],
+            "fleet": fleet}
+
+
+def bench_fleet_size(n_nodes: int, work: ServeWorkload, n_slots: int,
+                     max_seq: int, prefill_chunk: int, seed: int) -> Dict:
+    """One fleet size: vmapped vs looped on the identical workload, plus
+    the no-re-jit model-swap check on the vmapped scheduler."""
+    import jax
+
+    from repro.models.transformer import init_params
+
+    cfg = BENCH_CFG
+    stacked = jax.vmap(lambda k: init_params(k, cfg))(
+        jax.random.split(jax.random.key(seed), n_nodes))
+    vm = run_fleet(cfg, stacked, n_nodes, work, n_slots, max_seq,
+                   prefill_chunk, vmapped=True)
+    lp = run_fleet(cfg, stacked, n_nodes, work, n_slots, max_seq,
+                   prefill_chunk, vmapped=False)
+    identical = vm["outputs"] == lp["outputs"]
+
+    # post-gossip model swap: a plane row write must re-enter the cached
+    # executables (trace counters frozen) and still drain correctly
+    fleet = vm["fleet"]
+    traces_before = (fleet.decode_traces, fleet.prefill_traces)
+    fleet.swap_node(0, init_params(jax.random.key(seed + 777), cfg))
+    from repro.serving.scheduler import Request
+
+    probe = [Request(rid=10_000 + i, prompt=[3, 5, 7], max_new=4)
+             for i in range(2 * n_nodes)]
+    for r in probe:
+        fleet.submit(r)
+    fleet.run_until_drained()
+    no_rejit = (fleet.decode_traces, fleet.prefill_traces) == traces_before
+    speedup = (lp["metrics"]["wall_secs"]
+               / max(vm["metrics"]["wall_secs"], 1e-9))
+    return {
+        "n_nodes": n_nodes,
+        "n_slots": n_slots,
+        "max_seq": max_seq,
+        "prefill_chunk": prefill_chunk,
+        "fleet_vmapped": vm["metrics"],
+        "per_node_loop": lp["metrics"],
+        "vmapped_speedup": round(speedup, 3),
+        "outputs_identical": bool(identical),
+        "swap_no_rejit": bool(no_rejit and all(r.done for r in probe)),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--fleets", default="2,4",
+                    help="comma list of fleet sizes (n nodes)")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="requests PER NODE (offered load scales with "
+                         "fleet capacity, as in serving benchmarks)")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="decode slots per node")
+    ap.add_argument("--max-seq", type=int, default=48)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="few requests (CI wall-clock in seconds)")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    args = ap.parse_args(argv)
+
+    fleets = sorted({int(f) for f in args.fleets.split(",")})
+    if len(fleets) < 2:
+        raise SystemExit("--fleets needs ≥ 2 sizes (the BENCH record "
+                         "compares scaling)")
+    per_node = 16 if args.smoke else args.requests
+
+    results = []
+    ok = True
+    for n in fleets:
+        t0 = time.time()
+        work = ServeWorkload(n_requests=per_node * n, seed=args.seed)
+        r = bench_fleet_size(n, work, args.slots, args.max_seq,
+                             args.prefill_chunk, args.seed)
+        results.append(r)
+        ok &= r["outputs_identical"] and r["swap_no_rejit"]
+        vm, lp = r["fleet_vmapped"], r["per_node_loop"]
+        print(f"fleet n={n}: vmapped {vm['wall_secs']}s "
+              f"({vm['tokens_per_sec']} tok/s, p50 {vm['p50_ms']}ms, "
+              f"p95 {vm['p95_ms']}ms, p99 {vm['p99_ms']}ms, "
+              f"occ {vm['mean_slot_occupancy']}) vs loop "
+              f"{lp['wall_secs']}s → speedup {r['vmapped_speedup']}× "
+              f"[outputs identical: {r['outputs_identical']}, "
+              f"swap no-re-jit: {r['swap_no_rejit']}] "
+              f"({time.time() - t0:.0f}s total)")
+
+    payload = {
+        "config": {
+            "model": BENCH_CFG.name,
+            "n_layers": BENCH_CFG.n_layers,
+            "d_model": BENCH_CFG.d_model,
+            "vocab_size": BENCH_CFG.vocab_size,
+            "requests_per_node": per_node,
+            "workload": dataclasses.asdict(
+                dataclasses.replace(work, n_requests=per_node)),
+        },
+        "fleets": results,
+        "all_checks_passed": bool(ok),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = f"{args.out}/BENCH_serve.json"
+    json.dump(payload, open(path, "w"), indent=1)
+    print(f"\nserving record → {path}")
+    if not ok:
+        print("EQUIVALENCE CHECK FAILED: fleet-vmapped and per-node-loop "
+              "decode disagree, or a model swap re-traced the fleet step")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -313,6 +313,12 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--chunk-rounds", type=int, default=None,
                     help="scan the round schedule in chunks of this many "
                          "rounds (bounds device memory for long runs)")
+    ap.add_argument("--shard-scale", default=None, metavar="R1,R2,...",
+                    help="with --shard: rerun the grid at each of these "
+                         "round counts, time sharded vs single-device at "
+                         "every size, and write the measured crossover "
+                         "into BENCH_sweep.json (replaces the misleading "
+                         "single-point speedup record)")
     ap.add_argument("--out", default="benchmarks/artifacts")
     args = ap.parse_args(argv)
 
@@ -358,10 +364,28 @@ def main(argv: Optional[List[str]] = None) -> None:
 
         from repro.launch.mesh import make_sweep_mesh
 
-        mesh = make_sweep_mesh(args.shard or None)
-        print(f"sharding the experiment axis over "
-              f"{len(jax.devices()) if not args.shard else args.shard} "
-              f"device(s); chunk_rounds={args.chunk_rounds}")
+        # auto mode fits the device count to the grid instead of taking
+        # every device: E experiments on n devices are padded to the next
+        # multiple of n, and the padding rows are pure wasted compute
+        # (fig4-smoke E=12 on 8 devices padded 4 dummy experiments — 33%
+        # extra work for the same ceil(E/n) serial depth).  The fewest
+        # devices that keep the minimal per-device row count waste least.
+        n_dev = args.shard
+        if not n_dev:
+            n_avail = len(jax.devices())
+            per = -(-len(cells) // n_avail)          # minimal rows/device
+            n_dev = -(-len(cells) // per)            # fewest devices at it
+        mesh = make_sweep_mesh(n_dev)
+        pad = (-len(cells)) % n_dev
+        print(f"sharding the experiment axis over {n_dev} device(s) "
+              f"(E={len(cells)}, padding {pad}); "
+              f"chunk_rounds={args.chunk_rounds}")
+
+    if args.shard_scale:
+        if mesh is None:
+            raise SystemExit("--shard-scale requires --shard")
+        _run_shard_scale(args, preset, cells, scale, mesh, n_nodes)
+        return
 
     coeff_mode = "program" if preset.programs else "stack"
     t0 = time.time()
@@ -461,11 +485,19 @@ def main(argv: Optional[List[str]] = None) -> None:
             p_fail=c0.p_fail, reactive=c0.reactive)
         program_bytes = state_nbytes(state0) * len(cells)
         stack_bytes = len(cells) * scale.rounds * n_nodes * n_nodes * 4
+        secs_ratio = engine_secs / max(stack_secs, 1e-9)
         print(f"coefficient stacks: {stack_secs:.1f}s wall-clock, "
               f"{stack_bytes / 2**20:.1f} MiB of host coefficients vs "
               f"{program_bytes / 2**10:.1f} KiB program state "
               f"({stack_bytes / max(program_bytes, 1):.0f}× smaller); "
               f"metrics bit-identical: {identical}")
+        # the pre-pruning record was programs ≈ 1.8× stacks (24.2 s vs
+        # 13.3 s): the batched lax.switch computed every reactive
+        # centrality branch per round.  Static kind pruning
+        # (CoeffProgram.kinds) must keep the in-scan path near parity.
+        verdict = "improved ✓" if secs_ratio < 1.5 else "regressed ✗"
+        print(f"programs-vs-stacks wall-clock ratio {secs_ratio:.2f}× "
+              f"(pre-pruning record 1.82×) — {verdict}")
         bench_path = _update_bench(
             args.out, f"coeff_programs/{preset.name}", {
             "preset": preset.name,
@@ -475,6 +507,9 @@ def main(argv: Optional[List[str]] = None) -> None:
             "reactive": bool(c0.reactive),
             "program_secs": round(engine_secs, 2),
             "stack_secs": round(stack_secs, 2),
+            "secs_ratio": round(secs_ratio, 3),
+            "pre_pruning_secs_ratio": 1.82,
+            "ratio_improved": bool(secs_ratio < 1.5),
             "stack_coeff_bytes": stack_bytes,
             "program_state_bytes": program_bytes,
             "bytes_ratio": round(stack_bytes / max(program_bytes, 1), 1),
@@ -503,6 +538,105 @@ def main(argv: Optional[List[str]] = None) -> None:
     path = f"{args.out}/sweep_{preset.name}.json"
     json.dump(rows, open(path, "w"), indent=1, default=_json_default)
     print(f"rows → {path}")
+
+
+def _linfit(xs, ys):
+    """Least-squares slope/intercept of secs vs rounds."""
+    import numpy as np
+
+    b, a = np.polyfit(np.asarray(xs, float), np.asarray(ys, float), 1)
+    return float(a), float(b)  # intercept (fixed secs), slope (secs/round)
+
+
+def _crossover_from_entries(entries):
+    """Single-vs-sharded crossover in rounds: measured interpolation when
+    the speedup crosses 1.0 inside the sweep, otherwise extrapolated from
+    the per-path linear fits (secs = fixed + slope·rounds); None when the
+    sharded slope is not smaller (no crossover exists — e.g. more virtual
+    devices than physical cores)."""
+    for lo, hi in zip(entries, entries[1:]):
+        s0, s1 = lo["speedup"], hi["speedup"]
+        if (s0 - 1.0) * (s1 - 1.0) <= 0 and s0 != s1:
+            frac = (1.0 - s0) / (s1 - s0)
+            return (round(lo["rounds"]
+                          + frac * (hi["rounds"] - lo["rounds"]), 1),
+                    "measured")
+    xs = [e["rounds"] for e in entries]
+    a_sh, b_sh = _linfit(xs, [e["sharded_secs"] for e in entries])
+    a_si, b_si = _linfit(xs, [e["single_device_secs"] for e in entries])
+    if b_sh < b_si and a_sh > a_si:
+        return round((a_sh - a_si) / (b_si - b_sh), 1), "extrapolated"
+    return None, ("sharded per-round cost is not below single-device "
+                  "on this host — no crossover at any scale")
+
+
+def _run_shard_scale(args, preset, cells, scale, mesh, n_nodes) -> None:
+    """--shard-scale: the same grid timed sharded AND single-device at
+    2–3 round counts, so BENCH_sweep.json records the single-vs-sharded
+    *crossover* (where amortized compute overtakes the sharded path's
+    fixed compile/dispatch overhead) instead of one misleading
+    single-point speedup."""
+    from benchmarks.common import run_sweep_cells
+
+    sizes = sorted({int(s) for s in args.shard_scale.split(",")})
+    if len(sizes) < 2:
+        raise SystemExit("--shard-scale needs ≥ 2 round counts")
+    coeff_mode = "program" if preset.programs else "stack"
+    entries = []
+    for r in sizes:
+        s = dataclasses.replace(scale, rounds=r)
+        t0 = time.time()
+        rows_sh = run_sweep_cells(cells, scale=s, mesh=mesh,
+                                  chunk_rounds=args.chunk_rounds,
+                                  coeff_mode=coeff_mode,
+                                  mix_impl=preset.mix_impl)
+        sh = time.time() - t0
+        t0 = time.time()
+        rows_si = run_sweep_cells(cells, scale=s, coeff_mode=coeff_mode,
+                                  mix_impl=preset.mix_impl)
+        si = time.time() - t0
+        identical = all(
+            a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
+            for a, b in zip(rows_sh, rows_si))
+        entries.append({
+            "rounds": r,
+            "sharded_secs": round(sh, 2),
+            "single_device_secs": round(si, 2),
+            "speedup": round(si / max(sh, 1e-9), 3),
+            "bit_identical_metrics": bool(identical),
+        })
+        print(f"  R={r}: sharded {sh:.1f}s vs single {si:.1f}s "
+              f"→ speedup {si / max(sh, 1e-9):.3f}× "
+              f"(bit-identical: {identical})")
+    crossover, how = _crossover_from_entries(entries)
+    xs = [e["rounds"] for e in entries]
+    a_sh, b_sh = _linfit(xs, [e["sharded_secs"] for e in entries])
+    a_si, b_si = _linfit(xs, [e["single_device_secs"] for e in entries])
+    payload = {
+        "preset": preset.name,
+        "experiments": len(cells),
+        "n_nodes": n_nodes,
+        "devices": int(mesh.devices.size),
+        "physical_cpus": os.cpu_count(),
+        "chunk_rounds": args.chunk_rounds,
+        "scale_sweep": entries,
+        "sharded_fixed_secs": round(a_sh, 2),
+        "sharded_secs_per_round": round(b_sh, 4),
+        "single_fixed_secs": round(a_si, 2),
+        "single_secs_per_round": round(b_si, 4),
+        "crossover_rounds": crossover,
+        "crossover_kind": how,
+    }
+    bench_path = _update_bench(args.out, f"sharded/{preset.name}", payload)
+    print("\n=== verdict ===")
+    if crossover is not None:
+        print(f" • single-vs-sharded crossover at R≈{crossover} ({how}); "
+              f"fixed overhead {a_sh - a_si:+.1f}s, per-round "
+              f"{b_sh:.3f}s vs {b_si:.3f}s")
+    else:
+        print(f" • no crossover: {how} (fixed {a_sh - a_si:+.1f}s, "
+              f"per-round sharded {b_sh:.3f}s vs single {b_si:.3f}s)")
+    print(f"sharded scale sweep → {bench_path}")
 
 
 def _update_bench(out_dir: str, section: str, payload: dict) -> str:

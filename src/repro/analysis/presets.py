@@ -1,4 +1,5 @@
-"""The ``engine-matrix`` preset: one jaxlint report per engine program.
+"""jaxlint presets: ``engine-matrix`` (one report per engine program)
+and ``serve`` (the fleet serving tier's two dispatch shapes).
 
 The sweep engine is one program *family*: (execution mode: scanned /
 chunked / mesh / unrolled) × (mix_impl: einsum / pallas / sparse /
@@ -43,8 +44,11 @@ from repro.analysis.rules import (
 
 __all__ = [
     "Combo",
+    "ServeCombo",
     "engine_matrix_combos",
+    "serve_combos",
     "rules_for",
+    "serve_rules",
     "run_combo",
     "run_preset",
     "PRESETS",
@@ -272,7 +276,91 @@ def rules_for(combo: Combo) -> List[Rule]:
     ]
 
 
-def run_combo(combo: Combo) -> Report:
+# ----------------------------------------------------------------------
+# the ``serve`` preset: fleet serving tier trace-time contracts
+# ----------------------------------------------------------------------
+SERVE_N_NODES = 2   # fleet axis (vmapped over the parameter plane)
+SERVE_SLOTS = 2     # decode slots per node
+SERVE_CHUNK = 8     # prefill chunk (mixed steps); pure decode uses 1
+SERVE_MAX_SEQ = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCombo:
+    """One serving-tier program (DESIGN.md §14).
+
+    The fleet scheduler dispatches exactly two compiled shapes — the
+    mixed (n, B, chunk) prefill step and the (n, B, 1) steady-state
+    decode step — both through the same self-feeding kernel; the
+    single-node program is the per-node-loop baseline's hot path.
+    """
+
+    program: str  # "fleet-prefill" | "fleet-decode" | "node-prefill"
+
+    @property
+    def name(self) -> str:
+        return f"serve/{self.program}"
+
+
+def serve_combos() -> List["ServeCombo"]:
+    return [ServeCombo(p)
+            for p in ("fleet-prefill", "fleet-decode", "node-prefill")]
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_setting():
+    """Tiny fleet (2 nodes × 2 slots) in the tests' config family."""
+    from repro.configs.base import ModelConfig
+    from repro.core.plane import PlaneLayout
+    from repro.models.transformer import init_params
+    from repro.serving.serve_step import make_cache
+
+    cfg = ModelConfig(name="serve-lint", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=64,
+                      dtype="float32", param_dtype="float32")
+    stacked = jax.vmap(lambda k: init_params(k, cfg))(
+        jax.random.split(jax.random.key(0), SERVE_N_NODES))
+    layout = PlaneLayout.from_tree(stacked)
+    return cfg, stacked, layout, layout.pack(stacked), make_cache(
+        cfg, SERVE_N_NODES, SERVE_SLOTS, SERVE_MAX_SEQ)
+
+
+def _serve_traceable(combo: "ServeCombo"):
+    from repro.serving.serve_step import (
+        make_fleet_prefill_step,
+        make_prefill_step,
+    )
+
+    cfg, stacked, layout, plane, cache = _serve_setting()
+    n, b = SERVE_N_NODES, SERVE_SLOTS
+    chunk = 1 if combo.program == "fleet-decode" else SERVE_CHUNK
+    toks = jnp.ones((n, b, chunk), jnp.int32)
+    feed = jnp.ones((n, b), jnp.int32)
+    lens = jnp.full((n, b), chunk, jnp.int32)
+    if combo.program == "node-prefill":
+        one = jax.tree.map(lambda x: x[0], stacked)
+        one_cache = jax.tree.map(lambda x: x[0], cache)
+        return (make_prefill_step(cfg),
+                (one, toks[0], feed[0], lens[0], one_cache), None)
+    return (make_fleet_prefill_step(cfg, layout),
+            (plane, toks, feed, lens, cache), None)
+
+
+def serve_rules(combo: "ServeCombo") -> List[Rule]:
+    """Serving contracts: no host round-trip inside the chunk scan (one
+    dispatch must advance every node's slot batch), and the decode path
+    is f32-native — no f64 anywhere, no kernel upcasts to declare."""
+    return [
+        HostSync(scope="scan_body"),
+        DtypeFlow(expect_kernel_upcasts=None),
+    ]
+
+
+def run_combo(combo) -> Report:
+    if isinstance(combo, ServeCombo):
+        fn, args, jit_kwargs = _serve_traceable(combo)
+        return analyze(fn, *args, rules=serve_rules(combo),
+                       jit_kwargs=jit_kwargs, name=combo.name)
     fn, args, jit_kwargs = _traceable(combo)
     return analyze(fn, *args, rules=rules_for(combo),
                    jit_kwargs=jit_kwargs, name=combo.name)
@@ -306,4 +394,5 @@ def recalibrate() -> Dict[Tuple[str, str], Dict[str, int]]:
 
 PRESETS = {
     "engine-matrix": engine_matrix_combos,
+    "serve": serve_combos,
 }

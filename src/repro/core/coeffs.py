@@ -276,6 +276,48 @@ class CoeffProgram:
     pagerank_iters: int = 200
     pagerank_alpha: float = 0.85
     sparse: bool = False
+    # static branch pruning: the sorted tuple of PROGRAM_KINDS indices this
+    # program will ever be asked for (None → all nine).  Under the engine's
+    # vmap-over-E the batched switch lowers to compute-all-branches +
+    # select, so an unpruned reactive program pays the 200-iteration
+    # power-method scans and the closeness matrix-power scan EVERY round
+    # even when the grid never uses those kinds — the measured ~1.8×
+    # program-vs-stack slowdown (BENCH_sweep.json `coeff_programs`).
+    # Pruning is bit-identical for every kind it keeps.
+    kinds: Optional[tuple] = None
+    # static link-churn gate: False skips the per-round Bernoulli edge
+    # mask entirely (bit-identical to p_fail = 0, which keeps every edge
+    # exactly — see dynamic.edge_mask).  Grids with any p_fail > 0 must
+    # keep True.
+    link_failure: bool = True
+
+    def __post_init__(self):
+        if self.kinds is None:
+            return
+        kinds = tuple(sorted({int(k) for k in self.kinds}))
+        if not kinds or kinds[0] < 0 or kinds[-1] >= len(PROGRAM_KINDS):
+            raise ValueError(
+                f"CoeffProgram.kinds must be non-empty indices into "
+                f"PROGRAM_KINDS (0..{len(PROGRAM_KINDS) - 1}); got "
+                f"{self.kinds!r}")
+        object.__setattr__(self, "kinds", kinds)
+
+    # ------------------------------------------------------------------
+    def validate_state_kinds(self, state) -> None:
+        """Host-side guard for pruned programs: a state whose ``kind`` is
+        not among the traced branches would be silently remapped to the
+        nearest kept branch by the compact switch — refuse instead.
+        ``state`` may carry a leading experiment axis."""
+        if self.kinds is None:
+            return
+        present = {int(k) for k in np.asarray(state["kind"]).ravel()}
+        bad = sorted(present - set(self.kinds))
+        if bad:
+            raise ValueError(
+                f"CoeffProgram pruned to kinds {self.kinds} "
+                f"({[PROGRAM_KINDS[k] for k in self.kinds]}) got state "
+                f"kind(s) {bad} ({[PROGRAM_KINDS[k] for k in bad]}); "
+                f"rebuild the program with the union of the grid's kinds")
 
     # ------------------------------------------------------------------
     def matrix(self, state, round_idx) -> jnp.ndarray:
@@ -291,15 +333,20 @@ class CoeffProgram:
         k_scores = jax.random.fold_in(
             jax.random.fold_in(base, r * state["resample"]), 1)
 
-        em = edge_mask(k_edges, n, state["p_fail"], dtype=adj.dtype)
-        adj_r = adj * em
+        if self.link_failure:
+            em = edge_mask(k_edges, n, state["p_fail"], dtype=adj.dtype)
+            adj_r = adj * em
+        else:
+            adj_r = adj
         mask = adj_r + jnp.eye(n, dtype=adj.dtype)
         tau = state["tau"]
         if self.sparse and self.reactive:
             # per-EDGE survival, gathered from the SAME edge-mask draw the
             # dense path multiplies in — surviving support is bit-identical
             nbr_idx = state["nbr_idx"]
-            nbr_val = state["nbr_val"] * em[jnp.arange(n)[:, None], nbr_idx]
+            nbr_val = state["nbr_val"]
+            if self.link_failure:
+                nbr_val = nbr_val * em[jnp.arange(n)[:, None], nbr_idx]
         else:
             nbr_idx = nbr_val = None
 
@@ -319,11 +366,13 @@ class CoeffProgram:
         # `kind` is per-experiment STATE so one compiled program serves a
         # mixed-strategy grid (fig4!): under the engine's vmap-over-E the
         # batched switch index lowers to compute-all-branches + select.
-        # That dead-branch work is a few (n, n) softmax/normalize ops —
-        # the reactive centrality kernels below are only traced at all
-        # when `self.reactive` (a static program field) is set, and even
-        # then cost ~400 n² matvecs + n n³-products per round, noise next
-        # to LocalTrain.  Grids that want zero waste can split by kind.
+        # For reactive programs that dead-branch work is the 200-iteration
+        # power methods + the closeness matrix-power scan per round —
+        # measurably NOT noise (the ~1.8× program-vs-stack gap in
+        # BENCH_sweep.json) — which is what the static `kinds` pruning
+        # below removes: only the branches a grid actually uses are
+        # traced, with `state["kind"]` remapped to the compact branch
+        # index by position in the sorted static tuple.
         branches = (
             lambda: linear(jnp.ones((n,), adj.dtype)),         # unweighted
             lambda: linear(state["counts"]),                   # weighted
@@ -349,7 +398,13 @@ class CoeffProgram:
             # closeness is inherently all-pairs — dense even when sparse
             lambda: soft(centrality(closeness_centrality)),
         )
-        return jax.lax.switch(state["kind"], branches)
+        if self.kinds is None:
+            return jax.lax.switch(state["kind"], branches)
+        if len(self.kinds) == 1:
+            return branches[self.kinds[0]]()
+        compact = jnp.searchsorted(jnp.asarray(self.kinds, jnp.int32),
+                                   jnp.asarray(state["kind"], jnp.int32))
+        return jax.lax.switch(compact, tuple(branches[k] for k in self.kinds))
 
     # ------------------------------------------------------------------
     def materialize(self, state, rounds: Optional[int] = None,
@@ -363,6 +418,7 @@ class CoeffProgram:
             if rounds is None:
                 raise ValueError("materialize needs rounds or round_indices")
             round_indices = np.arange(int(rounds))
+        self.validate_state_kinds(state)
         fn = _materialize_fn(self)
         state = jax.tree.map(jnp.asarray, state)
         return np.asarray(fn(state, jnp.asarray(round_indices, jnp.int32)))

@@ -124,6 +124,37 @@ class PlaneLayout:
                 for l in leaves]
         return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
 
+    def pack_row(self, params_one, dtype: Optional[Any] = None) -> jnp.ndarray:
+        """SINGLE node's pytree (no leading node axis) → ``(P,)`` row.
+
+        The serving-tier bridge: after a gossip round one node's freshly
+        mixed params become its serving weights by writing this row into
+        the fleet plane (``plane.at[i].set(row)``) — a data write, not a
+        new traced program.
+        """
+        dtype = self.widest_dtype if dtype is None else jnp.dtype(dtype)
+        leaves, treedef = jax.tree.flatten(params_one)
+        if treedef != self.treedef or any(
+                tuple(l.shape) != s.shape for l, s in zip(leaves, self.slots)):
+            raise ValueError(
+                f"PlaneLayout.pack_row: layout packs leaf shapes "
+                f"{[s.shape for s in self.slots]}, got "
+                f"{[tuple(l.shape) for l in leaves]}")
+        cols = [jnp.reshape(l, (-1,)).astype(dtype) for l in leaves]
+        return cols[0] if len(cols) == 1 else jnp.concatenate(cols)
+
+    def unpack_row(self, row: jnp.ndarray):
+        """``(P,)`` row → one node's pytree (inverse of :meth:`pack_row`)."""
+        if row.shape[-1] != self.n_params:
+            raise ValueError(
+                f"PlaneLayout.unpack_row: row has {row.shape[-1]} columns, "
+                f"layout packs {self.n_params}")
+        leaves = [
+            jnp.reshape(row[s.offset:s.offset + s.size], s.shape).astype(s.dtype)
+            for s in self.slots
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
     def unpack(self, plane: jnp.ndarray):
         """``(n, P)`` plane → stacked pytree, each leaf back in its own
         shape and dtype (the inverse of :meth:`pack` up to the storage

@@ -505,6 +505,8 @@ class SweepEngine:
         states: Any = {}
         if isinstance(coeffs, ProgramCoeffs):
             program = coeffs.program
+            # a kind-pruned program silently remaps unlisted kinds — refuse
+            program.validate_state_kinds(coeffs.states)
             states = jax.tree.map(jnp.asarray, coeffs.states)
             n_exp = coeffs.n_experiments
             rounds = int(np.asarray(indices).shape[1])

@@ -41,7 +41,7 @@ from repro.launch.specs import (
     input_specs,
 )
 from repro.models.transformer import ForwardOptions
-from repro.serving.serve_step import make_prefill_step, make_serve_step
+from repro.serving.serve_step import make_forward_prefill, make_serve_step
 from repro.training.optimizer import make_optimizer
 from repro.training.train_step import make_train_step
 
@@ -122,7 +122,7 @@ def build_step(spec: DryRunSpec, cfg, pcfg):
         opt = make_optimizer("adamw", 3e-4)
         return make_train_step(cfg, pcfg, opt, opts=opts)
     if spec.kind == "prefill":
-        return make_prefill_step(cfg, opts=opts, last_only=True)
+        return make_forward_prefill(cfg, opts=opts, last_only=True)
     return make_serve_step(cfg, opts=ForwardOptions(remat=False,
                                                     use_scan=pcfg.scan_layers))
 

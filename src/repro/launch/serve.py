@@ -1,9 +1,14 @@
-"""Serving driver: per-node batched generation over a gossip-trained fleet.
+"""Serving driver: continuous batching over a gossip-trained fleet.
 
 Loads a checkpoint produced by ``repro.launch.train`` (or inits fresh
 params), then serves batched greedy generation requests against every
 node's own model — the paper's deployment mode (device-specific models,
-no global model).
+no global model).  The fleet runs behind :class:`FleetScheduler`: the
+stacked per-node params are packed into ONE ``(n, P)`` parameter plane
+and every scheduler step advances all nodes' slot batches in a single
+compiled dispatch (chunked prefill with self-feeding decode lanes).
+``--loop`` falls back to the per-node Python-loop baseline that
+``benchmarks/serve_bench.py`` measures against.
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --nodes 4 --batch 2 --prompt-len 8 --new-tokens 16
@@ -19,7 +24,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.models.transformer import init_params
-from repro.serving.serve_step import make_cache, make_serve_step
+from repro.serving.scheduler import FleetScheduler, Request
 from repro.training.checkpoint import latest_checkpoint, load_checkpoint
 
 
@@ -31,13 +36,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=2, help="requests per node")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--loop", action="store_true",
+                    help="per-node Python loop instead of the fleet-vmapped "
+                         "plane-fed step")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     n, b = args.nodes, args.batch
-    max_seq = args.prompt_len + args.new_tokens
+    max_seq = args.prompt_len + args.new_tokens + 1
 
     one = init_params(jax.random.key(args.seed), cfg)
     params = jax.tree.map(
@@ -48,33 +57,31 @@ def main(argv=None):
             params, _, meta = load_checkpoint(path, params)
             print(f"loaded {path} (round {meta.get('step')})")
 
-    serve = jax.jit(make_serve_step(cfg))
-    cache = make_cache(cfg, n, b, max_seq)
+    fleet = FleetScheduler(cfg, params, n_nodes=n, n_slots=b,
+                           max_seq=max_seq, prefill_chunk=args.prefill_chunk,
+                           vmapped=not args.loop)
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, size=(n, b, args.prompt_len)), jnp.int32)
+    prompts = rng.integers(0, cfg.vocab_size, size=(n, b, args.prompt_len))
+    reqs = []
+    for node in range(n):
+        for j in range(b):
+            req = Request(rid=node * b + j,
+                          prompt=prompts[node, j].tolist(),
+                          max_new=args.new_tokens)
+            fleet.submit(req, node=node)
+            reqs.append(req)
 
-    # prefill token-by-token through the decode path (exercises the cache)
     t0 = time.time()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, cache = serve(params, prompts[:, :, i : i + 1], cache)
-    prefill_s = time.time() - t0
+    steps = fleet.run_until_drained()
+    wall = time.time() - t0
+    assert all(r.done for r in reqs)
 
-    out = [prompts]
-    t0 = time.time()
-    for _ in range(args.new_tokens):
-        nxt = jnp.argmax(logits[:, :, -1], axis=-1)[..., None]
-        out.append(nxt)
-        logits, cache = serve(params, nxt, cache)
-    decode_s = time.time() - t0
-    tokens = jnp.concatenate(out, axis=-1)
-
-    tput = n * b * args.new_tokens / decode_s
-    print(f"served {n} nodes × {b} requests: prefill {prefill_s:.2f}s, "
-          f"decode {decode_s:.2f}s ({tput:.1f} tok/s aggregate)")
-    print("node 0, request 0:", np.asarray(tokens[0, 0]).tolist())
-    return tokens
+    gen = sum(len(r.output) for r in reqs)
+    mode = "per-node loop" if args.loop else "fleet-vmapped plane"
+    print(f"served {n} nodes × {b} requests ({mode}): {steps} steps, "
+          f"{wall:.2f}s ({gen / max(wall, 1e-9):.1f} tok/s aggregate)")
+    print("node 0, request 0:", reqs[0].prompt + reqs[0].output)
+    return reqs
 
 
 if __name__ == "__main__":

@@ -5,14 +5,25 @@ different prompt lengths and stop at different times.  This scheduler
 keeps each node's decode batch full by packing active requests into a
 fixed set of slots, admitting queued requests into freed slots between
 steps, and evicting on EOS/max-length — continuous batching (Orca-style)
-on top of the SPMD ``serve_step``.
+on top of the SPMD serving steps.
 
 Host-side state (queues, slot maps) stays in numpy; device state is the
-stacked KV cache whose slots are written in place.  Because the decode
-step is jit'd over fixed shapes, admission works by *resetting a slot's
-cache column* (position ← 0) and replaying the prompt token-by-token
-through the same decode path — no separate prefill graph needed for the
-CPU demo (a real deployment would chunk-prefill; noted below).
+stacked KV cache whose slots are written in place.  Admission resets a
+slot's cache column (position ← 0) and feeds the prompt through
+*chunked prefill* (``make_prefill_step``): one jitted call advances up to
+``prefill_chunk`` prompt tokens, so a length-L prompt costs
+⌈L/chunk⌉ dispatches instead of L decode steps.  The legacy token-by-token
+replay is kept behind ``prefill_chunk=None`` as the bit-equality reference
+(``tests/test_scheduler.py``).
+
+:class:`FleetScheduler` holds the whole fleet as ONE ``(n, P)`` parameter
+plane (``core.plane.PlaneLayout``) plus a node-stacked cache, and advances
+all n nodes' slot batches in one compiled step (``make_fleet_decode_step``
+/ ``make_fleet_prefill_step``) instead of a Python loop over nodes.
+Because ``layout.unpack`` happens inside the traced step, swapping a
+node's model after a gossip round (:meth:`FleetScheduler.swap_node`) is a
+plane row write that re-enters the cached executable — no re-jit
+(asserted via the scheduler's trace counters).
 """
 from __future__ import annotations
 
@@ -24,7 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import init_cache
+from repro.core.plane import PlaneLayout
+from repro.models.transformer import decode_step, init_cache
+from repro.serving.serve_step import (
+    make_cache,
+    make_fleet_decode_step,
+    make_fleet_prefill_step,
+    make_prefill_step,
+)
 
 __all__ = ["Request", "NodeScheduler", "FleetScheduler"]
 
@@ -40,117 +58,382 @@ class Request:
     done: bool = False
 
 
-class NodeScheduler:
-    """Slot manager for ONE node's model (batch dimension = slots)."""
+class _SlotBook:
+    """Host-side slot bookkeeping for one node — no device state.
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int, max_seq: int):
-        self.cfg = cfg
-        self.params = params
+    Shared by :class:`NodeScheduler` (one book + per-node jit) and
+    :class:`FleetScheduler` (n books + one fleet-wide jit): the book
+    plans token batches and consumes sampled tokens; the owner decides
+    how the plans are executed.
+    """
+
+    def __init__(self, n_slots: int):
         self.n_slots = n_slots
-        self.max_seq = max_seq
-        self.cache = init_cache(cfg, n_slots, max_seq)
-        self._step = jax.jit(
-            lambda p, t, c: __import__("repro.models.transformer",
-                                       fromlist=["decode_step"]).decode_step(
-                p, cfg, t, c))
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self._pending_prompt: Dict[int, List[int]] = {}  # slot → tokens to feed
         self.queue: List[Request] = []
-        self._last_token = np.zeros(n_slots, np.int64)
+        self._pending: Dict[int, List[int]] = {}  # slot → tokens to feed
+        self._last = np.zeros(n_slots, np.int64)
+        self._count = np.zeros(n_slots, np.int64)  # tokens fed since admit
 
-    # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
-
-    def _admit(self):
-        for i in range(self.n_slots):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                # reset this slot's cache column: position ← 0
-                self.cache["position"] = self.cache["position"].at[i].set(0)
-                self._pending_prompt[i] = list(req.prompt)
-                self._last_token[i] = req.prompt[0]
-
-    def _evict(self):
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            hit_eos = req.eos is not None and req.output and req.output[-1] == req.eos
-            full = len(req.output) >= req.max_new
-            over = int(self.cache["position"][i]) >= self.max_seq - 1
-            if hit_eos or full or over:
-                req.done = True
-                self.slots[i] = None
-                self._pending_prompt.pop(i, None)
 
     @property
     def active(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
-    # ------------------------------------------------------------------
-    def step(self) -> int:
-        """One decode step across all slots.  Returns #active slots."""
-        self._admit()
-        if self.active == 0:
-            return 0
-        # build the token vector: prompt tokens still being fed, else the
-        # last sampled token; idle slots feed token 0 (masked out).
+    @property
+    def has_pending(self) -> bool:
+        return bool(self._pending)
+
+    def admit(self) -> List[int]:
+        """Fill free slots from the queue; returns newly admitted slot
+        indices (their cache columns must be reset by the owner)."""
+        fresh = []
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self._pending[i] = list(req.prompt)
+                self._last[i] = req.prompt[0]
+                self._count[i] = 0
+                fresh.append(i)
+        return fresh
+
+    # -- continuous step plan (chunked prefill + self-feeding decode) ----
+    def plan(self, chunk: int, max_seq: int):
+        """Token plan for ONE fused dispatch advancing every active slot.
+
+        Slots mid-prompt feed up to ``chunk`` pending tokens; a slot whose
+        prompt completes inside the chunk keeps *generating* through the
+        remaining scan steps (the kernel self-feeds its greedy sample);
+        slots already decoding feed their last sampled token and self-feed
+        up to ``chunk`` new tokens — so no lane idles behind another
+        slot's prefill.  Generation is capped host-side by the request's
+        remaining ``max_new`` budget and the cache headroom
+        (``max_seq - 1`` total fed tokens — the legacy over-length
+        eviction boundary), so the kernel never writes past either.
+
+        Returns (toks (B, chunk) int32, feed (B,) int32, lens (B,) int32,
+        info {slot: (pend_k, start, gen, lens)}) where consume() takes
+        slot i's generated tokens from ``sampled[i, start : start + gen]``.
+        """
+        toks = np.zeros((self.n_slots, chunk), np.int32)
+        feed = np.zeros(self.n_slots, np.int32)
+        lens = np.zeros(self.n_slots, np.int32)
+        info: Dict[int, tuple] = {}
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            headroom = max_seq - 1 - int(self._count[i])
+            if headroom <= 0:
+                continue  # at the eviction boundary; evict() fires this step
+            remaining = req.max_new - len(req.output)
+            pend = self._pending.get(i)
+            if pend:
+                k = min(chunk, len(pend), headroom)
+                toks[i, :k] = pend[:k]
+                feed[i] = k
+                if k < len(pend):           # prompt continues next chunk
+                    lens[i] = k
+                    info[i] = (k, 0, 0, k)
+                else:                       # completes → generate in-chunk
+                    gen = max(min(remaining, chunk - k + 1, headroom - k + 1),
+                              1)
+                    lens[i] = k + gen - 1
+                    info[i] = (k, k - 1, gen, k + gen - 1)
+            else:                           # decoding: self-feed from _last
+                toks[i, 0] = self._last[i]
+                feed[i] = 1
+                gen = max(min(remaining, chunk, headroom), 1)
+                lens[i] = gen
+                info[i] = (0, 0, gen, gen)
+        return toks, feed, lens, info
+
+    def consume(self, info: Dict[int, tuple], sampled: np.ndarray):
+        """Advance the book by one dispatch's results: pending prompts
+        shrink by what was fed; generated tokens (``sampled`` rows, the
+        per-step greedy argmax) append to each slot's output, truncated at
+        the request's EOS if one shows up mid-chunk."""
+        for i, (pend_k, start, gen, fed_total) in info.items():
+            self._count[i] += fed_total
+            if pend_k:
+                pend = self._pending[i]
+                del pend[:pend_k]
+                if not pend:
+                    self._pending.pop(i)
+            if gen:
+                req = self.slots[i]
+                new = [int(t) for t in sampled[i, start:start + gen]]
+                if req.eos is not None and req.eos in new:
+                    new = new[: new.index(req.eos) + 1]
+                req.output.extend(new)
+                self._last[i] = req.output[-1]
+
+    # -- legacy token-by-token replay (bit-equality reference) -----------
+    def replay_plan(self) -> np.ndarray:
+        """(B, 1) batch for the legacy path: prompt tokens still being
+        fed, else the last sampled token."""
         toks = np.zeros((self.n_slots, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            pend = self._pending_prompt.get(i)
-            toks[i, 0] = pend[0] if pend else self._last_token[i]
-        logits, self.cache = self._step(self.params, jnp.asarray(toks),
-                                        self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            pend = self._pending.get(i)
+            toks[i, 0] = pend[0] if pend else self._last[i]
+        return toks
+
+    def consume_replay(self, nxt: np.ndarray):
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            pend = self._pending_prompt.get(i)
+            pend = self._pending.get(i)
             if pend:
                 pend.pop(0)              # still prefill-feeding this slot
                 if not pend:
-                    self._pending_prompt.pop(i, None)
+                    self._pending.pop(i, None)
                     req.output.append(int(nxt[i]))
-                    self._last_token[i] = int(nxt[i])
+                    self._last[i] = int(nxt[i])
             else:
                 req.output.append(int(nxt[i]))
-                self._last_token[i] = int(nxt[i])
-        self._evict()
-        return self.active
+                self._last[i] = int(nxt[i])
+
+    # -- eviction --------------------------------------------------------
+    def evict(self, positions: np.ndarray, max_seq: int):
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            hit_eos = req.eos is not None and req.output and req.output[-1] == req.eos
+            full = len(req.output) >= req.max_new
+            over = int(positions[i]) >= max_seq - 1
+            if hit_eos or full or over:
+                req.done = True
+                self.slots[i] = None
+                self._pending.pop(i, None)
+
+
+class NodeScheduler:
+    """Slot manager for ONE node's model (batch dimension = slots).
+
+    ``prefill_chunk`` selects the admission path: an int C admits prompts
+    through chunked prefill (⌈L/C⌉ dispatches per length-L prompt);
+    ``None`` keeps the legacy token-by-token replay (O(L) decode steps) —
+    retained as the bit-equality reference for tests.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int, max_seq: int,
+                 prefill_chunk: Optional[int] = 8):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.cache = init_cache(cfg, n_slots, max_seq)
+        self.decode_traces = 0
+        self.prefill_traces = 0
+
+        def _dec(p, t, c):
+            self.decode_traces += 1  # trace-time only: counts (re)compiles
+            return decode_step(p, cfg, t, c)
+
+        self._step = jax.jit(_dec)
+        prefill = make_prefill_step(cfg)
+
+        def _pre(p, t, f, l, c):
+            self.prefill_traces += 1
+            return prefill(p, t, f, l, c)
+
+        self._prefill = jax.jit(_pre)
+        self.book = _SlotBook(n_slots)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.book.submit(req)
+
+    @property
+    def queue(self) -> List[Request]:
+        return self.book.queue
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return self.book.slots
+
+    @property
+    def active(self) -> int:
+        return self.book.active
+
+    def _admit(self):
+        fresh = self.book.admit()
+        if fresh:
+            # reset the admitted slots' cache columns: position ← 0.
+            # Fixed-shape mask (not a gather over the fresh indices): the
+            # eager reset op compiles ONCE instead of once per distinct
+            # admission count (~100ms of XLA compile each, mid-workload).
+            mask = np.zeros(self.n_slots, bool)
+            mask[fresh] = True
+            self.cache["position"] = jnp.where(jnp.asarray(mask), 0,
+                                               self.cache["position"])
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduler step = ONE dispatch advancing every active slot:
+        a ``(B, chunk)`` fused call while any prompt is mid-prefill
+        (decoding slots ride along with ``lens = 1``), a ``(B, 1)`` call
+        in the pure-decode steady state.  Returns #active slots."""
+        self._admit()
+        if self.book.active == 0:
+            return 0
+        if self.prefill_chunk is None:
+            # legacy replay: every step is a single-token decode
+            toks = self.book.replay_plan()
+            logits, self.cache = self._step(self.params, jnp.asarray(toks),
+                                            self.cache)
+            self.book.consume_replay(np.asarray(jnp.argmax(logits[:, -1],
+                                                           axis=-1)))
+        else:
+            chunk = self.prefill_chunk if self.book.has_pending else 1
+            toks, feed, lens, info = self.book.plan(chunk, self.max_seq)
+            _, sampled, self.cache = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(feed),
+                jnp.asarray(lens), self.cache)
+            self.book.consume(info, np.asarray(sampled))
+        self.book.evict(np.asarray(self.cache["position"]), self.max_seq)
+        return self.book.active
 
     def run_until_drained(self, max_steps: int = 10_000) -> int:
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (self.book.queue or self.book.active) and steps < max_steps:
             self.step()
             steps += 1
         return steps
 
 
 class FleetScheduler:
-    """Round-robin request routing across a fleet of per-node schedulers —
-    the paper's deployment (each device serves its own model)."""
+    """The whole fleet behind ONE compiled step — the paper's deployment
+    (each device serves its own model), plane-fed.
+
+    ``vmapped=True`` packs the stacked params into an ``(n, P)`` plane and
+    advances all nodes' slot batches in a single fleet-vmapped dispatch
+    per step; ``vmapped=False`` keeps a Python loop over per-node
+    schedulers (n dispatches per step) — the baseline
+    ``benchmarks/serve_bench.py`` measures against.
+    """
 
     def __init__(self, cfg: ModelConfig, stacked_params, n_nodes: int,
-                 n_slots: int, max_seq: int):
-        from repro.core.decentralized import unstack_params
-
-        node_params = unstack_params(stacked_params, n_nodes)
-        self.nodes = [NodeScheduler(cfg, p, n_slots, max_seq)
-                      for p in node_params]
+                 n_slots: int, max_seq: int,
+                 prefill_chunk: Optional[int] = 8, vmapped: bool = True):
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.vmapped = vmapped
         self._rr = 0
+        self.decode_traces = 0
+        self.prefill_traces = 0
+        if not vmapped:
+            from repro.core.decentralized import unstack_params
 
+            self.nodes = [NodeScheduler(cfg, p, n_slots, max_seq,
+                                        prefill_chunk=prefill_chunk)
+                          for p in unstack_params(stacked_params, n_nodes)]
+            return
+        self.layout = PlaneLayout.from_tree(stacked_params)
+        self.plane = self.layout.pack(stacked_params)
+        self.cache = make_cache(cfg, n_nodes, n_slots, max_seq)
+        self.books = [_SlotBook(n_slots) for _ in range(n_nodes)]
+        fleet_dec = make_fleet_decode_step(cfg, self.layout)
+        fleet_pre = make_fleet_prefill_step(cfg, self.layout)
+
+        def _dec(plane, toks, cache):
+            self.decode_traces += 1  # trace-time only: counts (re)compiles
+            return fleet_dec(plane, toks, cache)
+
+        def _pre(plane, toks, feed, lens, cache):
+            self.prefill_traces += 1
+            return fleet_pre(plane, toks, feed, lens, cache)
+
+        self._decode = jax.jit(_dec)
+        self._prefill = jax.jit(_pre)
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request, node: Optional[int] = None):
         if node is None:
-            node = self._rr % len(self.nodes)
+            node = self._rr % self.n_nodes
             self._rr += 1
-        self.nodes[node].submit(req)
+        if self.vmapped:
+            self.books[node].submit(req)
+        else:
+            self.nodes[node].submit(req)
         return node
 
+    @property
+    def active(self) -> int:
+        if self.vmapped:
+            return sum(b.active for b in self.books)
+        return sum(nd.active for nd in self.nodes)
+
+    @property
+    def queued(self) -> int:
+        books = self.books if self.vmapped else [nd.book for nd in self.nodes]
+        return sum(len(b.queue) for b in books)
+
+    def swap_node(self, node: int, params_one):
+        """Install one node's freshly gossip-mixed params: a plane row
+        write — same executable on the next step (no re-jit)."""
+        if not self.vmapped:
+            self.nodes[node].params = params_one
+            return
+        row = self.layout.pack_row(params_one, dtype=self.plane.dtype)
+        self.plane = self.plane.at[node].set(row)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Advance every node one scheduler step.  Vmapped mode: ONE
+        compiled dispatch for the whole fleet per step — an
+        ``(n, B, chunk)`` fused call while any node has prompt tokens
+        mid-prefill (decoding slots everywhere ride along with
+        ``lens = 1``), an ``(n, B, 1)`` call in the pure-decode steady
+        state.  No slot ever stalls on another node's prefill.
+        Returns total active slots."""
+        if not self.vmapped:
+            return sum(nd.step() for nd in self.nodes)
+        fresh = np.zeros((self.n_nodes, self.n_slots), bool)
+        for n, b in enumerate(self.books):
+            for i in b.admit():
+                fresh[n, i] = True
+        if fresh.any():
+            # fixed-shape masked reset — compiles once, not once per
+            # distinct admission count (see NodeScheduler._admit)
+            self.cache["position"] = jnp.where(jnp.asarray(fresh), 0,
+                                               self.cache["position"])
+        if all(b.active == 0 for b in self.books):
+            return 0
+        chunk = ((self.prefill_chunk or 1)
+                 if any(b.has_pending for b in self.books) else 1)
+        toks = np.zeros((self.n_nodes, self.n_slots, chunk), np.int32)
+        feed = np.zeros((self.n_nodes, self.n_slots), np.int32)
+        lens = np.zeros((self.n_nodes, self.n_slots), np.int32)
+        plans = []
+        for n, b in enumerate(self.books):
+            t, f, l, info = b.plan(chunk, self.max_seq)
+            toks[n], feed[n], lens[n] = t, f, l
+            plans.append(info)
+        _, sampled, self.cache = self._prefill(
+            self.plane, jnp.asarray(toks), jnp.asarray(feed),
+            jnp.asarray(lens), self.cache)
+        sampled = np.asarray(sampled)  # (n, B, chunk)
+        for n, b in enumerate(self.books):
+            b.consume(plans[n], sampled[n])
+        positions = np.asarray(self.cache["position"])  # (n, B)
+        for n, b in enumerate(self.books):
+            b.evict(positions[n], self.max_seq)
+        return self.active
+
     def run_until_drained(self, max_steps: int = 10_000) -> int:
-        total = 0
-        for nd in self.nodes:
-            total += nd.run_until_drained(max_steps)
-        return total
+        if not self.vmapped:
+            return sum(nd.run_until_drained(max_steps) for nd in self.nodes)
+        steps = 0
+        while (self.active or self.queued) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

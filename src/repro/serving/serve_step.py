@@ -1,10 +1,34 @@
-"""Serving: batched prefill + cached decode over the stacked node models.
+"""Serving: chunked prefill + cached decode over the stacked node models.
 
 In the paper's setting each device serves inference from its OWN model
 (there is no global model) — so the serving path keeps the node axis: a
 request batch is routed to a node and decoded against that node's params.
 The SPMD formulation batches this: requests (N, B_local, ...) decode in
 lockstep against params (N, ...), vmapped over nodes.
+
+Two prefill shapes live here:
+
+* :func:`make_forward_prefill` — full-sequence forward, last-position
+  logits only.  This is the ``prefill_32k`` assignment surface lowered by
+  ``launch.dryrun``; it never touches the decode cache.
+* :func:`make_prefill_step` — *chunked* prefill through the decode path:
+  one jitted call advances up to ``chunk`` tokens per slot (a ``lax.scan``
+  of :func:`decode_step` with per-slot valid-length masking), so admitting
+  a prompt costs ⌈prompt_len/chunk⌉ dispatches instead of O(prompt_len).
+  Lanes whose planned tokens run out *self-feed* their own greedy sample,
+  so slots mid-decode generate through the same call instead of stalling
+  behind another slot's prefill; slots whose ``lens`` entry is 0 are
+  frozen bit-exactly — their cache columns (and position counters) pass
+  through untouched.  One fused call therefore serves slots in every
+  lifecycle phase.
+
+The fleet variants (:func:`make_fleet_decode_step`,
+:func:`make_fleet_prefill_step`) are fed by the sweep engine's ``(n, P)``
+parameter plane: ``PlaneLayout.unpack`` runs *inside* the jitted step, so
+the traced program is keyed on the plane's shape, not on parameter
+identity — swapping one node's model after a gossip round is a plane row
+write and hits the same executable (no re-jit; asserted in
+``tests/test_scheduler.py``).
 
 ``decode_32k`` / ``long_500k`` lower ``serve_step`` — ONE token against a
 seq_len-deep cache — per the assignment.
@@ -17,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.plane import PlaneLayout
 from repro.models.transformer import (
     ForwardOptions,
     decode_step,
@@ -24,12 +49,20 @@ from repro.models.transformer import (
     init_cache,
 )
 
-__all__ = ["make_prefill_step", "make_serve_step", "make_cache", "greedy_generate"]
+__all__ = [
+    "make_forward_prefill",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_fleet_decode_step",
+    "make_fleet_prefill_step",
+    "make_cache",
+    "greedy_generate",
+]
 
 
-def make_prefill_step(cfg: ModelConfig, opts: Optional[ForwardOptions] = None,
-                      last_only: bool = True):
-    """prefill(params(N,...), batch(N,B,S)) → logits.
+def make_forward_prefill(cfg: ModelConfig, opts: Optional[ForwardOptions] = None,
+                         last_only: bool = True):
+    """prefill(params(N,...), batch(N,B,S)) → logits (full-sequence forward).
 
     ``last_only`` unembeds only the final position — (N, B, V) — which is
     what serving needs (first sampled token) and avoids a (B, S, V) logits
@@ -48,6 +81,70 @@ def make_prefill_step(cfg: ModelConfig, opts: Optional[ForwardOptions] = None,
             return logits
 
         return jax.vmap(one)(stacked_params, batch)
+
+    return prefill
+
+
+def _slot_mask(valid: jnp.ndarray, key: str, ref: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (B,) validity mask against cache leaf ``ref``.
+
+    ``position`` is (B,); every other cache leaf is (L, B, ...) — the
+    batch axis is 0 for the former, 1 for the rest (see ``init_cache``).
+    """
+    axis = 0 if key == "position" else 1
+    shape = [1] * ref.ndim
+    shape[axis] = valid.shape[0]
+    return valid.reshape(shape)
+
+
+def make_prefill_step(cfg: ModelConfig, opts: Optional[ForwardOptions] = None):
+    """Chunked prefill with self-feeding decode lanes:
+    prefill(params, toks(B, C), feed(B,), lens(B,), cache) →
+    (last_logits (B, V), sampled (B, C) int, cache).
+
+    Scans :func:`decode_step` over the C chunk positions inside ONE traced
+    program.  Per step t, slot b participates iff ``t < lens[b]``; its
+    input token is ``toks[b, t]`` while ``t < feed[b]`` (planned prompt
+    tokens) and its own previous greedy sample after that — so a slot
+    whose prompt is exhausted (or was already decoding, ``feed[b] = 1``
+    with its last sampled token in column 0) keeps *generating* through
+    the remaining valid steps instead of stalling.  One fused call
+    therefore serves slots in every lifecycle phase at full utilisation:
+    prefilling slots absorb prompt tokens, decoding slots emit up to
+    ``lens[b]`` new tokens.
+
+    Frozen slots (``lens[b] = 0``) keep their cache leaves — including
+    ``position`` — bit-exactly.  ``sampled[b, t]`` is the greedy argmax
+    after step t (host code reads only the valid range);
+    ``last_logits[b]`` is the logits row of slot b's final valid step
+    (zeros where ``lens[b] = 0``).
+    """
+    opts = opts or ForwardOptions(remat=False)
+
+    def prefill(params, toks, feed, lens, cache):
+        def body(carry, xs):
+            cache, last, prev = carry
+            tok_col, t = xs
+            tok = jnp.where(t < feed, tok_col, prev)  # (B,)
+            logits, stepped = decode_step(params, cfg, tok[:, None], cache, opts)
+            valid = t < lens  # (B,)
+            new_cache = {
+                k: jnp.where(_slot_mask(valid, k, v), v, cache[k])
+                for k, v in stepped.items()
+            }
+            samp = jnp.argmax(logits[:, 0], axis=-1).astype(tok_col.dtype)
+            prev = jnp.where(valid, samp, prev)
+            last = jnp.where(valid[:, None], logits[:, 0].astype(last.dtype),
+                             last)
+            return (new_cache, last, prev), samp
+
+        b, c = toks.shape
+        last0 = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+        prev0 = jnp.zeros((b,), toks.dtype)
+        (cache, last, _), samples = jax.lax.scan(
+            body, (cache, last0, prev0),
+            (toks.T, jnp.arange(c, dtype=lens.dtype)))
+        return last, samples.T, cache
 
     return prefill
 
@@ -73,6 +170,44 @@ def make_serve_step(cfg: ModelConfig, opts: Optional[ForwardOptions] = None):
         return jax.vmap(one)(stacked_params, tokens, cache)
 
     return serve
+
+
+def make_fleet_decode_step(cfg: ModelConfig, layout: PlaneLayout,
+                           opts: Optional[ForwardOptions] = None):
+    """fleet_decode(plane(n, P), tokens(n, B, 1), cache(n, ...)) →
+    (logits (n, B, 1, V), new cache) — ONE compiled step for the fleet.
+
+    The plane row → params bridge (``layout.unpack``) is part of the
+    traced program: the jit cache keys on the plane's shape/dtype, so a
+    post-gossip model swap (a row write into the plane) re-enters the
+    same executable.
+    """
+    opts = opts or ForwardOptions(remat=False)
+
+    def fleet(plane, tokens, cache):
+        params = layout.unpack(plane)
+
+        def one(p, toks, c):
+            return decode_step(p, cfg, toks, c, opts)
+
+        return jax.vmap(one)(params, tokens, cache)
+
+    return fleet
+
+
+def make_fleet_prefill_step(cfg: ModelConfig, layout: PlaneLayout,
+                            opts: Optional[ForwardOptions] = None):
+    """fleet_prefill(plane(n, P), toks(n, B, C), feed(n, B), lens(n, B),
+    cache(n, ...)) → (last_logits (n, B, V), sampled (n, B, C), new cache)
+    — the self-feeding chunked prefill vmapped over the fleet, plane-fed
+    like :func:`make_fleet_decode_step`."""
+    prefill = make_prefill_step(cfg, opts)
+
+    def fleet(plane, toks, feed, lens, cache):
+        params = layout.unpack(plane)
+        return jax.vmap(prefill)(params, toks, feed, lens, cache)
+
+    return fleet
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,

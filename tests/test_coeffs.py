@@ -400,3 +400,79 @@ def test_sparse_program_state_stacks():
     dmax = topo.max_degree()
     assert stacked["nbr_idx"].shape == (2, 10, dmax)
     assert stacked["nbr_val"].shape == (2, 10, dmax)
+
+
+# ----------------------------------------------------------------------
+# static branch pruning (CoeffProgram.kinds) + the link-failure gate
+# ----------------------------------------------------------------------
+def test_pruned_kinds_bit_identical_for_kept_kinds():
+    """A program pruned to the grid's kinds must produce bit-identical
+    matrices for every kind it keeps (the searchsorted remap only drops
+    dead branches)."""
+    import dataclasses
+
+    topo = barabasi_albert(12, 2, seed=0)
+    for kind in ("degree", "betweenness", "unweighted"):
+        strat = AggregationStrategy(kind, tau=0.1, seed=3)
+        program, state = program_for(topo, strat, p_fail=0.3, reactive=True)
+        kept = (PROGRAM_KINDS.index(kind),)
+        pruned = dataclasses.replace(program, kinds=kept)
+        np.testing.assert_array_equal(
+            np.asarray(program.materialize(state, rounds=3)),
+            np.asarray(pruned.materialize(state, rounds=3)))
+
+
+def test_pruned_kinds_union_covers_stacked_states():
+    """The engine reuses ONE program across a stacked mixed-kind grid: a
+    program pruned to the union of the stack's kinds must reproduce each
+    state's full-program matrices bit-exactly."""
+    import dataclasses
+
+    topo = barabasi_albert(10, 2, seed=1)
+    kinds = ("unweighted", "degree", "betweenness")
+    programs_states = [
+        program_for(topo, AggregationStrategy(k, tau=0.1, seed=5),
+                    p_fail=0.3, reactive=True)
+        for k in kinds
+    ]
+    union = tuple(sorted(PROGRAM_KINDS.index(k) for k in kinds))
+    pruned = dataclasses.replace(programs_states[0][0], kinds=union)
+    for program, state in programs_states:
+        pruned.validate_state_kinds(state)
+        np.testing.assert_array_equal(
+            np.asarray(program.materialize(state, rounds=2)),
+            np.asarray(pruned.materialize(state, rounds=2)))
+
+
+def test_pruned_kinds_validation():
+    import dataclasses
+
+    topo = ring(6)
+    program, state = program_for(topo, AggregationStrategy("degree", tau=0.1))
+    with pytest.raises(ValueError, match="non-empty"):
+        dataclasses.replace(program, kinds=())
+    with pytest.raises(ValueError, match="indices"):
+        dataclasses.replace(program, kinds=(99,))
+    other = dataclasses.replace(
+        program, kinds=(PROGRAM_KINDS.index("unweighted"),))
+    with pytest.raises(ValueError, match="rebuild the program"):
+        other.validate_state_kinds(state)
+    with pytest.raises(ValueError, match="rebuild the program"):
+        other.materialize(state, rounds=1)
+
+
+def test_link_failure_gate_bit_identical_to_p0():
+    """link_failure=False must equal the p_fail=0 path bit-exactly (an
+    all-ones edge mask keeps every edge and every softmax weight)."""
+    import dataclasses
+
+    topo = barabasi_albert(12, 2, seed=4)
+    for kind, reactive in (("degree", True), ("betweenness", False),
+                           ("unweighted", False)):
+        strat = AggregationStrategy(kind, tau=0.1, seed=9)
+        program, state = program_for(topo, strat, p_fail=0.0,
+                                     reactive=reactive)
+        gated = dataclasses.replace(program, link_failure=False)
+        np.testing.assert_array_equal(
+            np.asarray(program.materialize(state, rounds=3)),
+            np.asarray(gated.materialize(state, rounds=3)))

@@ -129,3 +129,46 @@ def test_property_roundtrip(n, seed):
     out = lo.unpack(lo.pack(p))
     for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestRowBridge:
+    """pack_row / unpack_row — the serving-side bridge: one node's params
+    ↔ one plane row (FleetScheduler.swap_node)."""
+
+    def test_pack_row_matches_full_pack(self):
+        p = _ragged(5)
+        lo = PlaneLayout.from_tree(p)
+        plane = lo.pack(p)
+        one = jax.tree.map(lambda x: x[2], p)
+        np.testing.assert_array_equal(np.asarray(lo.pack_row(one)),
+                                      np.asarray(plane[2]))
+
+    def test_row_roundtrip_exact(self):
+        p = _ragged(4)
+        lo = PlaneLayout.from_tree(p)
+        one = jax.tree.map(lambda x: x[3], p)
+        out = lo.unpack_row(lo.pack_row(one))
+        for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_swap_row_equals_repack(self):
+        """plane.at[k].set(pack_row(new)) must equal packing a tree whose
+        row k was replaced — the no-re-jit model swap is a pure row
+        write."""
+        p = _ragged(4, seed=0)
+        q = _ragged(4, seed=1)
+        lo = PlaneLayout.from_tree(p)
+        new_row = jax.tree.map(lambda x: x[1], q)
+        swapped = lo.pack(p).at[1].set(lo.pack_row(new_row))
+        repacked = lo.pack(jax.tree.map(
+            lambda a, b: a.at[1].set(b[1]), p, q))
+        np.testing.assert_array_equal(np.asarray(swapped),
+                                      np.asarray(repacked))
+
+    def test_pack_row_rejects_foreign_tree(self):
+        lo = PlaneLayout.from_tree({"w": jnp.ones((3, 6))})
+        with pytest.raises(ValueError, match="pack_row"):
+            lo.pack_row({"w": jnp.ones((7,))})
+        with pytest.raises(ValueError, match="pack_row"):
+            lo.pack_row({"w": jnp.ones((6,)), "v": jnp.ones((2,))})

@@ -88,3 +88,87 @@ def test_stacked_serve_step():
     # different node params ⇒ different logits
     assert not np.allclose(np.asarray(logits[0]), np.asarray(logits[1]))
     assert (np.asarray(cache["position"]) == 1).all()
+
+
+# ----------------------------------------------------------------------
+# chunked prefill kernel (make_prefill_step): bit-equality + self-feed
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [DENSE, SSM], ids=lambda c: c.name)
+def test_chunked_prefill_bit_equals_decode_loop(cfg):
+    """One fused (B, C) prefill call must be BIT-identical — logits and
+    every cache leaf — to C sequential decode_step dispatches (same math,
+    one trace)."""
+    from repro.serving.serve_step import make_prefill_step
+
+    params = init_params(jax.random.key(0), cfg)
+    b, c, max_seq = 2, 6, 16
+    toks = jax.random.randint(jax.random.key(1), (b, c), 0, cfg.vocab_size)
+
+    ref_cache = init_cache(cfg, b, max_seq)
+    step = jax.jit(lambda p, t, ca: decode_step(p, cfg, t, ca))
+    ref_logits = None
+    for i in range(c):
+        ref_logits, ref_cache = step(params, toks[:, i : i + 1], ref_cache)
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    full = jnp.full((b,), c, jnp.int32)
+    last, sampled, cache = prefill(params, toks, full, full,
+                                   init_cache(cfg, b, max_seq))
+    np.testing.assert_array_equal(np.asarray(last),
+                                  np.asarray(ref_logits[:, 0]))
+    np.testing.assert_array_equal(np.asarray(sampled[:, -1]),
+                                  np.asarray(jnp.argmax(ref_logits[:, 0], -1)))
+    for k in cache:
+        np.testing.assert_array_equal(np.asarray(cache[k]),
+                                      np.asarray(ref_cache[k]), err_msg=k)
+
+
+def test_chunked_prefill_freezes_masked_slots():
+    """lens[b] = 0 lanes must pass every cache leaf through untouched
+    (bit-exact) while other lanes advance — the invariant that lets one
+    call serve slots in different lifecycle phases."""
+    from repro.serving.serve_step import make_prefill_step
+
+    cfg = DENSE
+    params = init_params(jax.random.key(0), cfg)
+    b, c, max_seq = 3, 5, 12
+    cache0 = init_cache(cfg, b, max_seq)
+    # advance all lanes a little first so the frozen state is nontrivial
+    warm = jax.random.randint(jax.random.key(2), (b, 2), 0, cfg.vocab_size)
+    for i in range(2):
+        _, cache0 = decode_step(params, cfg, warm[:, i : i + 1], cache0)
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    toks = jax.random.randint(jax.random.key(3), (b, c), 0, cfg.vocab_size)
+    feed = jnp.asarray([c, 0, 3], jnp.int32)
+    lens = jnp.asarray([c, 0, 3], jnp.int32)
+    _, _, cache = prefill(params, toks, feed, lens, cache0)
+    for k in cache:
+        axis = 0 if k == "position" else 1
+        frozen = jnp.take(cache[k], jnp.asarray([1]), axis=axis)
+        orig = jnp.take(cache0[k], jnp.asarray([1]), axis=axis)
+        np.testing.assert_array_equal(np.asarray(frozen), np.asarray(orig),
+                                      err_msg=k)
+    assert int(cache["position"][0]) == 2 + c
+    assert int(cache["position"][1]) == 2
+    assert int(cache["position"][2]) == 2 + 3
+
+
+def test_prefill_self_feed_matches_greedy():
+    """A lane that exhausts its planned tokens self-feeds its greedy
+    sample: prompt + in-chunk generation must equal greedy_generate."""
+    from repro.serving.serve_step import make_prefill_step
+
+    cfg = DENSE
+    params = init_params(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(4), (1, 4), 0, cfg.vocab_size)
+    n_new = 5
+    ref = np.asarray(greedy_generate(cfg, params, prompt, n_new))[0, 4:]
+
+    c = 4 + n_new - 1  # prompt feeds 4, then 4 more self-fed steps
+    toks = jnp.zeros((1, c), jnp.int32).at[0, :4].set(prompt[0])
+    prefill = jax.jit(make_prefill_step(cfg))
+    _, sampled, _ = prefill(params, toks, jnp.asarray([4], jnp.int32),
+                            jnp.asarray([c], jnp.int32),
+                            init_cache(cfg, 1, 16))
+    np.testing.assert_array_equal(np.asarray(sampled[0, 3:3 + n_new]), ref)
