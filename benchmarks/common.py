@@ -35,7 +35,9 @@ from repro.core.decentralized import (
     coeffs_stack,
     stack_params,
 )
-from repro.core.analytics import AnalyticsSpec, analytics_summary
+from repro.core.analytics import (AnalyticsSpec, analytics_summary,
+                                  participation_summary)
+from repro.core.dynamic import ParticipationSpec
 from repro.core.sweep import SweepEngine
 from repro.core.propagation import per_node_auc, propagation_summary
 from repro.core.strategies import AggregationStrategy
@@ -204,6 +206,11 @@ class SweepCell:
     subset — ``data.distribution.place_ood``).  When set it overrides the
     single-source ``ood_k``; hop fields and arrival bins then use the
     min-over-sources distance.
+
+    ``participation`` is the cell's node-activation rate under a
+    partial-participation sweep (``run_sweep_cells(participation=...)``,
+    DESIGN.md §15); ``None`` means fully synchronous — in a mixed group
+    such cells run at rate 1.0, which is bit-identical.
     """
 
     dataset: str
@@ -217,6 +224,7 @@ class SweepCell:
     p_fail: float = 0.0
     reactive: bool = False
     ood_ks: Optional[Tuple[int, ...]] = None
+    participation: Optional[float] = None
 
     @property
     def label(self) -> str:
@@ -321,6 +329,39 @@ def edges_cells(
     return cells
 
 
+def participation_cells(
+    datasets=("mnist",),
+    seeds=(0,),
+    n_nodes: int = 16,
+    strategy: str = "degree",
+    rates=(1.0, 0.7, 0.4),
+    prefix: str = "participation",
+) -> List[SweepCell]:
+    """Partial-participation grid (the ``benchmarks/sweep.py
+    participation`` preset): activation rate × topology (ring vs per-seed
+    BA) × OOD placement (hub ``ood_k=1`` vs periphery ``ood_k=n``), run
+    with ``run_sweep_cells(..., participation=ParticipationSpec())``.
+    Rate 1.0 rides along as the synchronous control — bit-identical to a
+    no-participation run — so every row's staleness × arrival digest has
+    an in-grid baseline."""
+    from repro.core.topology import barabasi_albert, ring
+
+    cells = []
+    for ds in datasets:
+        for seed in seeds:
+            topos = (ring(n_nodes), barabasi_albert(n_nodes, 2, seed=seed))
+            for topo in topos:
+                for place, k in (("hub", 1), ("leaf", n_nodes)):
+                    for rate in rates:
+                        cells.append(SweepCell(
+                            ds, topo, strategy, ood_k=k, seed=seed,
+                            participation=rate,
+                            name=(f"{prefix}/{ds}/{topo.name}/{place}"
+                                  f"/r{rate}"),
+                            sweep=("participation", topo.name, place, rate)))
+    return cells
+
+
 def group_cells(cells: List[SweepCell]) -> Dict[Tuple[str, int], List[int]]:
     """Cells sharing one compiled program: same dataset (model + sample
     shapes) and same node count (topology/coeffs shapes)."""
@@ -349,6 +390,7 @@ def run_sweep_cells(
     mix_impl: str = "einsum",
     analytics: bool = True,
     arrival_threshold: float = DEFAULT_ARRIVAL_THRESHOLD,
+    participation: Optional[ParticipationSpec] = None,
     log=None,
 ) -> List[Dict]:
     """Evaluate a whole grid of cells through the sweep engine.
@@ -384,9 +426,21 @@ def run_sweep_cells(
     against the cell's OOD source set at ``arrival_threshold``), and the
     max per-node deviation from the host-side ``propagation.py`` oracle
     (``stream_vs_host_max_dev`` — the equivalence the golden suite locks).
+
+    ``participation`` (a :class:`ParticipationSpec`) switches the group
+    onto the partial-participation round (DESIGN.md §15): each cell's
+    ``participation`` rate rides the vmap axis (cells without one run at
+    1.0, bit-identical to the synchronous round), and each row gains a
+    ``"participation"`` digest (:func:`participation_summary`) — realized
+    activity, staleness statistics, and the staleness × arrival-round
+    interaction when analytics are on.  Cells that set a rate without a
+    spec get the default ``ParticipationSpec()``.
     """
     if coeff_mode not in ("stack", "program"):
         raise KeyError(f"coeff_mode {coeff_mode!r}; have 'stack', 'program'")
+    if participation is None and any(c.participation is not None
+                                     for c in cells):
+        participation = ParticipationSpec()
     spec = (AnalyticsSpec(arrival_threshold=arrival_threshold)
             if analytics else None)
     rows: List[Optional[Dict]] = [None] * len(cells)
@@ -513,11 +567,19 @@ def run_sweep_cells(
         params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *p0s)
         stack_tests = lambda ts: {
             k: jnp.stack([jnp.asarray(t[k]) for t in ts]) for k in ts[0]}
+        part_kwargs = {}
+        if participation is not None:
+            part_kwargs = dict(
+                participation=participation,
+                participation_rates=np.asarray(
+                    [1.0 if cells[i].participation is None
+                     else cells[i].participation for i in idxs], np.float32))
         result = engine.run(
             params0, engine_coeffs, bank, indices,
             np.asarray(data_idx), stack_tests(t_iid), stack_tests(t_ood),
             batch_size=scale.batch, unroll_eval=unroll_eval,
-            mesh=mesh, chunk_rounds=chunk_rounds, analytics=spec)
+            mesh=mesh, chunk_rounds=chunk_rounds, analytics=spec,
+            **part_kwargs)
 
         secs = time.time() - t0
         for e, (i, (cell, ood_nodes)) in enumerate(zip(idxs, metas)):
@@ -546,6 +608,17 @@ def run_sweep_cells(
                     np.abs(stream["ood_auc"]
                            - per_node_auc(hist, "ood")).max()))
                 summary["analytics"] = a
+            if result.participation is not None:
+                part_row = {k: v[e]
+                            for k, v in result.participation.items()}
+                part_stream = (
+                    {k: v[e] for k, v in result.analytics.items()}
+                    if result.analytics is not None else None)
+                summary["participation_rate"] = (
+                    1.0 if cell.participation is None
+                    else cell.participation)
+                summary["participation"] = participation_summary(
+                    part_row, scale.rounds, part_stream)
             if cell.p_fail or cell.reactive:
                 summary.update(p_fail=cell.p_fail, reactive=cell.reactive)
             if cell.sweep is not None:

@@ -142,7 +142,12 @@ register_preset(SweepPreset(
     _fig6_build, _fig6_verdict, seeds=(0,)))
 
 
-LINKFAIL_STRATEGIES = ("unweighted", "degree", "betweenness")
+# betweenness is deliberately absent: it has no fixed-shape reactive
+# kernel, so a reactive grid would silently serve NOMINAL scores for it —
+# validate_state_kinds now rejects that combination (DESIGN.md §9);
+# eigenvector is the topology-global centrality that DOES recompute
+# on the surviving subgraph in-scan.
+LINKFAIL_STRATEGIES = ("unweighted", "degree", "eigenvector")
 LINKFAIL_P = (0.0, 0.3, 0.6)
 
 
@@ -247,6 +252,47 @@ register_preset(SweepPreset(
     "edge-list sparse gossip smoke (BA graphs through the padded-ELL "
     "segment kernel; pair with --n-nodes 64+)",
     _edges_build, _edges_verdict, seeds=(0,), mix_impl="edges"))
+
+
+def _participation_build(datasets, seeds, n_nodes):
+    """Partial-participation grid (DESIGN.md §15): activation rate ×
+    topology (ring vs BA) × OOD placement (hub vs leaf).  The cells carry
+    per-experiment rates, so ``run_sweep_cells`` threads the default
+    Bernoulli ``ParticipationSpec`` through the round scan; rate 1.0 rows
+    are the bit-identical synchronous control."""
+    from benchmarks.common import participation_cells
+
+    return participation_cells(datasets=datasets, seeds=seeds,
+                               n_nodes=n_nodes)
+
+
+def _participation_verdict(rows):
+    mean = lambda xs: (sum(xs) / len(xs)) if xs else float("nan")
+    by: Dict[float, Dict[str, list]] = {}
+    for r in rows:
+        p = r["participation"]
+        d = by.setdefault(r["participation_rate"],
+                          {"auc": [], "act": [], "stale": []})
+        d["auc"].append(r["ood_auc"])
+        d["act"].append(p["activity_rate"])
+        d["stale"].append(p["mean_staleness"])
+    parts = [f"rate={rate}: ood_auc={mean(d['auc']):.3f} "
+             f"activity={mean(d['act']):.2f} "
+             f"staleness≈{mean(d['stale']):.2f}"
+             for rate, d in sorted(by.items(), reverse=True)]
+    ctrl = by.get(1.0)
+    ctrl_ok = ctrl is not None and max(ctrl["stale"], default=0.0) == 0.0
+    return ("partial participation (stale-plane gossip): "
+            + "; ".join(parts)
+            + ("  [rate-1.0 control stale-free ✓]" if ctrl_ok
+               else "  [rate-1.0 control has staleness X]"))
+
+
+register_preset(SweepPreset(
+    "participation",
+    "partial-participation gossip (activation rate × topology × OOD "
+    "placement, staleness-aware stale-plane mixing)",
+    _participation_build, _participation_verdict, seeds=(0,)))
 
 
 # ----------------------------------------------------------------------
@@ -432,6 +478,43 @@ def main(argv: Optional[List[str]] = None) -> None:
               f"({history_bytes / summary_bytes:.0f}× smaller)")
         print(f"analytics record → {bench_path} (sections extracted to "
               f"{apath})")
+
+    if rows and "participation" in rows[0]:
+        # partial-participation record (DESIGN.md §15): per-rate realized
+        # activity / staleness / OOD-AUC aggregates, plus the rate-1.0
+        # control invariant (no staleness anywhere ⇒ the synchronous
+        # bit-identity held on this run).
+        mean = lambda xs: (sum(xs) / len(xs)) if xs else None
+        by_rate: Dict[float, List[dict]] = {}
+        for r in rows:
+            by_rate.setdefault(r["participation_rate"], []).append(r)
+        rate_rec = {
+            f"{rate:g}": {
+                "cells": len(rs),
+                "ood_auc": round(mean([r["ood_auc"] for r in rs]), 4),
+                "activity_rate": round(mean(
+                    [r["participation"]["activity_rate"] for r in rs]), 4),
+                "mean_staleness": round(mean(
+                    [r["participation"]["mean_staleness"] for r in rs]), 4),
+                "max_final_staleness": max(
+                    r["participation"]["max_final_staleness"] for r in rs),
+                "local_steps_total": sum(
+                    r["participation"]["local_steps_total"] for r in rs),
+            }
+            for rate, rs in sorted(by_rate.items(), reverse=True)
+        }
+        ctrl = by_rate.get(1.0, [])
+        bench_path = _update_bench(args.out, f"participation/{preset.name}", {
+            "preset": preset.name,
+            "experiments": len(cells),
+            "rounds": scale.rounds,
+            "n_nodes": n_nodes,
+            "mode": "bernoulli",
+            "rates": rate_rec,
+            "rate1_control_stale_free": bool(ctrl) and all(
+                r["participation"]["mean_staleness"] == 0.0 for r in ctrl),
+        })
+        print(f"participation record → {bench_path}")
 
     if mesh is not None:
         # sharded-vs-single comparison → BENCH_sweep.json (perf trajectory)

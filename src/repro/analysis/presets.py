@@ -87,6 +87,12 @@ class Combo:
     kind: str
     param_dtype: str = "float32"
     mix_in_float32: bool = True
+    # thread the partial-participation round (DESIGN.md §15) through the
+    # trace: the active-set draw + stale-plane selects must add ZERO
+    # dot_generals/pallas_calls to the round program (the einsum budgets
+    # are shared with the synchronous combos), and the pub-plane carry
+    # must not break the chunked/mesh donation contract.
+    participation: bool = False
 
     @property
     def name(self) -> str:
@@ -94,17 +100,24 @@ class Combo:
         if self.param_dtype != "float32":
             tag += (f"/{self.param_dtype}-"
                     + ("accum32" if self.mix_in_float32 else "accumlow"))
+        if self.participation:
+            tag += "/part"
         return tag
 
 
 def engine_matrix_combos() -> List[Combo]:
-    """32 mode × impl × kind cells + 4 low-precision-plane ablations."""
+    """32 mode × impl × kind cells + 4 low-precision-plane ablations
+    + 5 partial-participation cells (every mode on einsum, plus one
+    kernel backend)."""
     combos = [Combo(m, i, k) for m in MODES for i in IMPLS for k in KINDS]
     combos += [
         Combo("scanned", impl, "stack", "bfloat16", m32)
         for impl in ("pallas", "edges")
         for m32 in (True, False)
     ]
+    combos += [Combo(m, "einsum", "stack", participation=True)
+               for m in MODES]
+    combos += [Combo("scanned", "pallas", "stack", participation=True)]
     return combos
 
 
@@ -198,11 +211,18 @@ def _traceable(combo: Combo):
         from repro.launch.mesh import make_sweep_mesh
 
         mesh = make_sweep_mesh()
+    part_kwargs = {}
+    if combo.participation:
+        from repro.core.dynamic import ParticipationSpec
+
+        part_kwargs = dict(
+            participation=ParticipationSpec(),
+            participation_rates=np.asarray([1.0, 0.5], np.float32))
     return engine.traceable(
         params0, coeffs, s["bank"], s["indices"], s["data_idx"],
         s["test_iid"], s["test_ood"], batch_size=BATCH, mode=combo.mode,
         mesh=mesh, chunk_rounds=CHUNK_ROUNDS,
-        donate=combo.mode in ("chunked", "mesh"))
+        donate=combo.mode in ("chunked", "mesh"), **part_kwargs)
 
 
 # ----------------------------------------------------------------------

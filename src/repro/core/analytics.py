@@ -39,7 +39,8 @@ import numpy as np
 
 from repro.core.propagation import NO_ARRIVAL, arrival_by_hop, hops_from
 
-__all__ = ["AnalyticsSpec", "analytics_summary", "NO_ARRIVAL"]
+__all__ = ["AnalyticsSpec", "analytics_summary", "participation_summary",
+           "NO_ARRIVAL"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,4 +168,52 @@ def analytics_summary(
     if adjacency is not None and sources is not None:
         out["ood_arrival_by_hop"] = arrival_by_hop(
             arr, hops_from(adjacency, sources))
+    return out
+
+
+def participation_summary(
+    part: Dict[str, np.ndarray],
+    rounds: int,
+    stream: Optional[Dict[str, np.ndarray]] = None,
+) -> Dict[str, object]:
+    """Digest ONE experiment's participation counters (one row of
+    ``SweepResult.participation``, DESIGN.md §15) — realized activity
+    rate, staleness statistics, time-skewed local-step totals — and,
+    given that experiment's finalized analytics ``stream``, the
+    staleness × arrival-round interaction the partial-participation
+    preset reports: among nodes the OOD knowledge *reached*, how much
+    later it arrives at the nodes that sat out more (Pearson correlation
+    plus a median-split of mean arrival by mean staleness).
+
+    Nodes that never arrive are excluded from the interaction (they
+    already report under ``n_no_arrival``); degenerate spreads (all
+    staleness equal, e.g. rate 1.0) report ``None`` correlations.
+    """
+    ra = np.asarray(part["rounds_active"], np.float64)
+    ms = np.asarray(part["mean_staleness"], np.float64)
+    out: Dict[str, object] = {
+        "activity_rate": float(ra.mean() / max(rounds, 1)),
+        "min_rounds_active": int(ra.min()),
+        "mean_staleness": float(ms.mean()),
+        "max_final_staleness": int(np.max(part["final_staleness"])),
+        "local_steps_total": int(np.sum(part["local_steps"])),
+    }
+    if stream is None:
+        return out
+    arr = np.asarray(stream["ood_arrival"], np.float64)
+    arrived = arr != NO_ARRIVAL
+    out["n_no_arrival"] = int((~arrived).sum())
+    corr = None
+    if arrived.sum() >= 2:
+        x, y = ms[arrived], arr[arrived]
+        if x.std() > 0 and y.std() > 0:
+            corr = float(np.corrcoef(x, y)[0, 1])
+    out["staleness_arrival_corr"] = corr
+    med = float(np.median(ms))
+    lo = arrived & (ms <= med)
+    hi = arrived & (ms > med)
+    out["arrival_low_staleness"] = (float(arr[lo].mean())
+                                    if lo.any() else None)
+    out["arrival_high_staleness"] = (float(arr[hi].mean())
+                                     if hi.any() else None)
     return out

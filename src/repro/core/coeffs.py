@@ -30,6 +30,9 @@ program is pure data-in/data-out, so it runs
 ``fold_in(fold_in(base, r·resample), 1)`` for the Random baseline's score
 draw — so link churn varies per round even when Random resampling is
 frozen, and every round's matrix is a pure function of (state, r).
+Fold index 2 belongs to the node-level participation draw
+(``repro.core.dynamic.ParticipationSpec``, DESIGN.md §15) so the three
+in-scan randomness streams never collide.
 
 **Centrality kernels** (pure jnp, fixed iteration counts so they trace):
 degree is exact; eigenvector/PageRank run a fixed-length power method;
@@ -59,6 +62,7 @@ from repro.core.strategies import (
     AggregationStrategy,
     masked_normalize,
     masked_softmax,
+    renormalize_rows,
     strategy_scores,
 )
 from repro.core.topology import Topology
@@ -69,6 +73,7 @@ __all__ = [
     "CoeffProgram",
     "ProgramCoeffs",
     "program_for",
+    "participation_renormalize",
     "stack_states",
     "state_nbytes",
     "degree_centrality",
@@ -290,6 +295,13 @@ class CoeffProgram:
     # exactly — see dynamic.edge_mask).  Grids with any p_fail > 0 must
     # keep True.
     link_failure: bool = True
+    # betweenness has NO reactive jnp kernel (Brandes is data-dependent
+    # control flow) — a reactive program asked for betweenness would
+    # silently serve the nominal host-computed scores while every other
+    # kind recomputes on the surviving subgraph.  validate_state_kinds
+    # refuses that mixed semantics unless a caller opts into the nominal
+    # fallback explicitly here (DESIGN.md §9).
+    allow_nominal_betweenness: bool = False
 
     def __post_init__(self):
         if self.kinds is None:
@@ -304,13 +316,35 @@ class CoeffProgram:
 
     # ------------------------------------------------------------------
     def validate_state_kinds(self, state) -> None:
-        """Host-side guard for pruned programs: a state whose ``kind`` is
-        not among the traced branches would be silently remapped to the
-        nearest kept branch by the compact switch — refuse instead.
+        """Host-side guard run before every materialize/engine dispatch:
+
+        * pruned programs — a state whose ``kind`` is not among the
+          traced branches would be silently remapped to the nearest kept
+          branch by the compact switch — refuse instead;
+        * reactive betweenness — there is no fixed-shape jnp betweenness
+          kernel, so a reactive program would silently serve NOMINAL
+          host-computed scores while every other kind recomputes on the
+          surviving subgraph — refuse that mixed semantics unless
+          ``allow_nominal_betweenness=True`` opts in (DESIGN.md §9).
+
         ``state`` may carry a leading experiment axis."""
+        present = {int(k) for k in np.asarray(state["kind"]).ravel()}
+        b_idx = PROGRAM_KINDS.index("betweenness")
+        if (self.reactive and b_idx in present
+                and not self.allow_nominal_betweenness):
+            raise ValueError(
+                "reactive CoeffProgram got a 'betweenness' state: "
+                "betweenness has no fixed-shape jnp kernel, so the "
+                "program would serve NOMINAL (host-computed) scores while "
+                "every other kind recomputes on the surviving subgraph. "
+                "Either use reactive=False, switch to a reactive "
+                "centrality (degree/eigenvector/pagerank/closeness), or "
+                "opt into the nominal fallback explicitly with "
+                "CoeffProgram(allow_nominal_betweenness=True) / "
+                "program_for(..., allow_nominal_betweenness=True) "
+                "(DESIGN.md §9)")
         if self.kinds is None:
             return
-        present = {int(k) for k in np.asarray(state["kind"]).ravel()}
         bad = sorted(present - set(self.kinds))
         if bad:
             raise ValueError(
@@ -490,6 +524,28 @@ def program_for(
         state["nbr_idx"] = np.asarray(nbr_idx, np.int32)
         state["nbr_val"] = np.asarray(nbr_mask, np.float32)
     return program, state
+
+
+def participation_renormalize(c: jnp.ndarray,
+                              active: jnp.ndarray) -> jnp.ndarray:
+    """Drop inactive *columns* from a row-stochastic mixing matrix and
+    renormalize the surviving rows — the ``stale_mixing=False`` variant
+    of partial participation (DESIGN.md §15), where an absent node's
+    plane is excluded from its neighbours' averages instead of being
+    served stale.
+
+    Rows that lost no mass (none of their support columns were inactive)
+    are returned BIT-IDENTICAL — the row-level ``changed`` gate skips the
+    renormalizing divide — so an all-active round reproduces the
+    synchronous matrix exactly.  Rows whose entire support went inactive
+    fall back to self-weight 1 (:func:`strategies.renormalize_rows`);
+    inactive rows' results are discarded by the round select anyway.
+    """
+    col = active.astype(c.dtype).reshape(
+        (1,) * (c.ndim - 1) + active.shape)  # explicit: rank_promotion=raise
+    masked = c * col
+    changed = (masked != c).any(axis=-1, keepdims=True)
+    return jnp.where(changed, renormalize_rows(masked, xp=jnp), c)
 
 
 @dataclasses.dataclass

@@ -64,6 +64,8 @@ __all__ = [
     "coeffs_stack",
     "make_local_train_fn",
     "make_round_fn",
+    "make_participation_round_fn",
+    "participation_carry_init",
     "make_mix_fn",
     "mix_impl_budget",
     "edges_schedule",
@@ -387,11 +389,118 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
     return round_fn
 
 
+def participation_carry_init(params, rate, pseed) -> dict:
+    """Per-experiment participation carry (the traced half of
+    :class:`repro.core.dynamic.ParticipationSpec`, DESIGN.md §15):
+
+    * ``rate`` / ``pseed`` — the per-experiment activation rate and PRNG
+      seed (carried, not static, so one compiled program serves a whole
+      rate grid and both shard on the experiment axis);
+    * ``pub`` — the *published* plane: each node's row as last seen by
+      its neighbours.  A COPY of the initial stacked params (the engines
+      donate the params argument, so aliasing it here would hand XLA the
+      same buffer twice);
+    * ``staleness`` — rounds since each node last participated (0 right
+      after an active round);
+    * ``staleness_sum`` — Σ over rounds of post-round staleness (host
+      side divides by R for the mean);
+    * ``rounds_active`` / ``local_steps`` — participation and
+      time-skewed local-step counts per node.
+    """
+    n = jax.tree.leaves(params)[0].shape[0]
+    zeros = jnp.zeros((n,), jnp.int32)
+    return {
+        "rate": jnp.asarray(rate, jnp.float32),
+        "pseed": jnp.asarray(pseed, jnp.uint32),
+        "pub": jax.tree.map(lambda x: jnp.asarray(x).copy(), params),
+        "staleness": zeros,
+        "staleness_sum": zeros,
+        "rounds_active": zeros,
+        "local_steps": zeros,
+    }
+
+
+def make_participation_round_fn(loss_fn: Callable, optimizer: Optimizer,
+                                local_epochs: int,
+                                participation,
+                                mix_impl: str = "einsum",
+                                epoch_shuffle: bool = True,
+                                mix_support: Optional[np.ndarray] = None,
+                                sparse_slack: int = 4,
+                                mix_in_float32: bool = True) -> Callable:
+    """Partial-participation round (DESIGN.md §15): ``(stacked_params,
+    stacked_opt, pcarry, node_batches, coeffs, round_idx) → (params, opt,
+    pcarry, losses)``.
+
+    Per round: draw the active set from ``participation`` (a
+    ``repro.core.dynamic.ParticipationSpec``), run LocalTrain on every
+    node (the scan needs fixed shapes; inactive results are discarded by
+    an elementwise select on the plane row), publish active nodes' fresh
+    post-train rows into the stale plane ``pcarry["pub"]``, mix the
+    published plane (so active nodes gossip against each neighbour's
+    LAST published row — stale if that neighbour sat out), and select:
+    active rows take the mixed result + fresh optimizer state, inactive
+    rows keep params/opt/published row untouched.  Inactive losses
+    report 0 (same convention as skipped evals).
+
+    Because ``jnp.where`` with an all-true mask is elementwise-exact and
+    ``rate=1.0`` activates every node exactly (see
+    ``ParticipationSpec.active_mask``), a participation-1.0 run is
+    BIT-IDENTICAL to :func:`make_round_fn`'s synchronous round under
+    every mixing backend — the equivalence tests in
+    tests/test_participation.py hold to ``==``, not allclose.
+    """
+    local_train = make_local_train_fn(loss_fn, optimizer, local_epochs,
+                                      epoch_shuffle)
+    mix = make_mix_fn(mix_impl, mix_support=mix_support,
+                      sparse_slack=sparse_slack,
+                      mix_in_float32=mix_in_float32)
+    from repro.core.coeffs import participation_renormalize  # no cycle
+
+    def select(active, new, old):
+        # explicit reshape: rank-promoting broadcasts are disabled
+        # repo-wide (jax_numpy_rank_promotion="raise")
+        def sel(a, b):
+            return jnp.where(
+                active.reshape(active.shape + (1,) * (a.ndim - 1)), a, b)
+        return jax.tree.map(sel, new, old)
+
+    def round_fn(stacked_params, stacked_opt, pcarry, node_batches,
+                 coeffs, round_idx):
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        steps = jax.tree.leaves(node_batches)[0].shape[1]
+        active = participation.active_mask(
+            pcarry["rate"], pcarry["pseed"], round_idx, n)
+        trained, opt_t, losses = jax.vmap(local_train)(
+            stacked_params, stacked_opt, node_batches)
+        pub = select(active, trained, pcarry["pub"])
+        if not participation.stale_mixing:
+            coeffs = participation_renormalize(coeffs, active)
+        mixed = mix(pub, coeffs)
+        params = select(active, mixed, stacked_params)
+        opt = select(active, opt_t, stacked_opt)
+        losses = jnp.where(active, losses, jnp.zeros((), losses.dtype))
+        act = active.astype(jnp.int32)
+        staleness = jnp.where(active, 0, pcarry["staleness"] + 1)
+        pcarry = {
+            **pcarry,
+            "pub": pub,
+            "staleness": staleness,
+            "staleness_sum": pcarry["staleness_sum"] + staleness,
+            "rounds_active": pcarry["rounds_active"] + act,
+            "local_steps": pcarry["local_steps"] + act * steps,
+        }
+        return params, opt, pcarry, losses
+
+    return round_fn
+
+
 def make_scan_fn(round_fn: Callable, evaluate: Callable,
                  make_batch: Optional[Callable] = None,
                  coeff_fn: Optional[Callable] = None,
                  analytics=None,
-                 keep_history: bool = True) -> Callable:
+                 keep_history: bool = True,
+                 participation=None) -> Callable:
     """Scan-over-rounds factory shared by ``DecentralizedTrainer`` (stacked
     batches) and ``repro.core.sweep`` (per-round index gather).
 
@@ -419,60 +528,83 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
     ``keep_history=False`` (requires ``analytics``) drops the per-round
     ys entirely — the scan's memory footprint for metrics becomes O(n).
 
+    ``participation`` (a ``repro.core.dynamic.ParticipationSpec``)
+    switches ``round_fn`` to the extended
+    :func:`make_participation_round_fn` signature and grows the carry by
+    the participation state (``participation_carry`` ←
+    :func:`participation_carry_init`, threaded back out for chunk
+    chaining like the analytics carry); the scan then also consumes the
+    ``round_idx`` absolute-round input (the active-set draw folds it).
+
     Returns ``scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
-    test_ood[, round_idx, analytics_carry])`` →
+    test_ood[, round_idx, analytics_carry, participation_carry])`` →
+    ``(params, opt[, participation_carry][, analytics_carry][, losses,
+    iid, ood])`` — the participation carry slots in before the analytics
+    carry, the per-round history tail is present unless
+    ``keep_history=False``, and the no-analytics/no-participation order
+    is unchanged from the original ``(params, opt, losses, iid, ood)``.
 
-    * ``(params, opt, losses, iid, ood)`` — no analytics (unchanged);
-    * ``(params, opt, analytics_carry, losses, iid, ood)`` — analytics;
-    * ``(params, opt, analytics_carry)`` — analytics, no history.
-
-    The carry comes back out so callers can chain round-chunks (chunked
-    mode donates it back in, keeping device accumulators bounded at one
+    The carries come back out so callers can chain round-chunks (chunked
+    mode donates them back in, keeping device accumulators bounded at one
     chunk).  ``eval_mask`` gates eval to the rounds ``eval_every`` keeps;
     skipped rounds report zeros (and leave the analytics carry untouched).
+    Eval ALWAYS covers every node — an inactive node's frozen model is
+    still a model the arrival analytics must see.
     """
     if make_batch is None:
         make_batch = lambda b: b
     if not keep_history and analytics is None:
         raise ValueError("keep_history=False without an analytics spec "
                          "would return no metrics at all")
+    needs_rounds = analytics is not None or participation is not None
 
     def scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
-                test_ood, round_idx=None, analytics_carry=None):
+                test_ood, round_idx=None, analytics_carry=None,
+                participation_carry=None):
         n = jax.tree.leaves(params)[0].shape[0]
 
         def body(carry, xs):
-            if analytics is None:
-                p, o = carry
-                bx, c, do_eval = xs
-            else:
-                p, o, ac = carry
+            carry = list(carry)
+            p, o = carry[0], carry[1]
+            pc = carry[2] if participation is not None else None
+            ac = carry[-1] if analytics is not None else None
+            if needs_rounds:
                 bx, c, do_eval, r_abs = xs
+            else:
+                bx, c, do_eval = xs
             if coeff_fn is not None:
                 c = coeff_fn(c)  # c is this step's absolute round index
-            p, o, losses = round_fn(p, o, make_batch(bx), c)
+            if participation is None:
+                p, o, losses = round_fn(p, o, make_batch(bx), c)
+            else:
+                p, o, pc, losses = round_fn(p, o, pc, make_batch(bx), c,
+                                            r_abs)
             iid, ood = jax.lax.cond(
                 do_eval,
                 lambda q: evaluate(q, test_iid, test_ood),
                 lambda q: (jnp.zeros((n,)), jnp.zeros((n,))),
                 p)
-            if analytics is None:
-                return (p, o), (losses, iid, ood)
-            ac = analytics.update(ac, r_abs, do_eval, iid, ood)
-            return (p, o, ac), ((losses, iid, ood) if keep_history
-                                else None)
+            out = [p, o]
+            if participation is not None:
+                out.append(pc)
+            if analytics is not None:
+                out.append(analytics.update(ac, r_abs, do_eval, iid, ood))
+            ys = ((losses, iid, ood)
+                  if (keep_history or analytics is None) else None)
+            return tuple(out), ys
 
-        if analytics is None:
-            (params, opt), (losses, iid, ood) = jax.lax.scan(
-                body, (params, opt), (batch_xs, coeffs, eval_mask))
-            return params, opt, losses, iid, ood
-        (params, opt, analytics_carry), ys = jax.lax.scan(
-            body, (params, opt, analytics_carry),
-            (batch_xs, coeffs, eval_mask, round_idx))
-        if keep_history:
-            losses, iid, ood = ys
-            return params, opt, analytics_carry, losses, iid, ood
-        return params, opt, analytics_carry
+        carry0 = [params, opt]
+        if participation is not None:
+            carry0.append(participation_carry)
+        if analytics is not None:
+            carry0.append(analytics_carry)
+        xs = ((batch_xs, coeffs, eval_mask, round_idx) if needs_rounds
+              else (batch_xs, coeffs, eval_mask))
+        final, ys = jax.lax.scan(body, tuple(carry0), xs)
+        out = list(final)
+        if ys is not None:
+            out.extend(ys)   # losses, iid, ood
+        return tuple(out)
 
     return scan_fn
 

@@ -27,17 +27,19 @@ Two executions of the same idea:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.strategies import AggregationStrategy, mixing_matrix
+from repro.core.strategies import (AggregationStrategy, mixing_matrix,
+                                   renormalize_rows)
 from repro.core.topology import Topology
 
 __all__ = ["drop_edges", "dynamic_mixing_matrix", "link_failure_schedule",
-           "edge_mask"]
+           "edge_mask", "ParticipationSpec", "PARTICIPATION_MODES"]
 
 
 def edge_mask(key, n: int, p_fail, dtype=jnp.float32) -> jnp.ndarray:
@@ -61,13 +63,79 @@ def edge_mask(key, n: int, p_fail, dtype=jnp.float32) -> jnp.ndarray:
     return keep.astype(dtype)
 
 
-def drop_edges(topo: Topology, p_fail: float, rng: np.random.Generator,
-               keep_connected_to_self: bool = True) -> Topology:
+PARTICIPATION_MODES = ("bernoulli", "duty")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Node-level partial participation: which nodes train+gossip a round.
+
+    The static (hashable → jit-static) half of the participation
+    machinery; the traced half — per-experiment ``rate``/``pseed`` plus
+    the stale plane and staleness counters — lives in the participation
+    carry built by ``repro.core.sweep.SweepEngine`` and threaded through
+    the round scan (DESIGN.md §15).
+
+    ``mode="bernoulli"`` draws each node active i.i.d. with probability
+    ``rate`` per round, folded from the same PRNG-key convention as
+    :func:`edge_mask` (``fold_in(fold_in(key(pseed), round), 2)`` — fold
+    index 2; indices 0/1 belong to the edge mask and the Random-strategy
+    resample in ``repro.core.coeffs``).  Because uniform draws live in
+    [0, 1), ``rate=1.0`` activates every node *exactly*, which is what
+    keeps participation-1.0 runs bit-identical to the synchronous engine.
+
+    ``mode="duty"`` is a deterministic staggered duty cycle: node i is
+    active in round r iff ``(r + i) % period < k`` with
+    ``k = floor(rate·period + 0.5)`` — round-half-up so ``rate=1.0``
+    gives ``k=period`` (always active) and ``rate=1/period`` gives
+    ``k=1`` (exactly one active node per round) despite float32 rounding.
+
+    ``stale_mixing=True`` (default): inactive nodes' rows of the plane
+    are frozen and *published* stale to their neighbours — active nodes
+    gossip against the last plane each neighbour ever published.
+    ``stale_mixing=False``: inactive neighbours are dropped from the mix
+    instead, and surviving rows are renormalized
+    (``repro.core.coeffs.participation_renormalize``).
+    """
+
+    mode: str = "bernoulli"
+    stale_mixing: bool = True
+    period: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in PARTICIPATION_MODES:
+            raise ValueError(f"participation mode {self.mode!r} not in "
+                             f"{PARTICIPATION_MODES}")
+        if self.mode == "duty" and self.period < 1:
+            raise ValueError("duty-cycle participation needs period >= 1")
+
+    def active_mask(self, rate, pseed, round_idx, n: int) -> jnp.ndarray:
+        """(n,) bool active mask for one round; ``rate``/``pseed``/
+        ``round_idx`` may be traced scalars, ``n`` is static."""
+        if self.mode == "bernoulli":
+            key = jax.random.fold_in(jax.random.fold_in(
+                jax.random.key(pseed), round_idx), 2)
+            return jax.random.uniform(key, (n,)) < jnp.asarray(rate)
+        # duty: static staggered schedule, independent of the PRNG stream
+        period = jnp.asarray(self.period, jnp.int32)
+        k = jnp.floor(jnp.asarray(rate) * self.period + 0.5).astype(jnp.int32)
+        phase = (jnp.asarray(round_idx, jnp.int32) +
+                 jnp.arange(n, dtype=jnp.int32)) % period
+        return phase < k
+
+
+def drop_edges(topo: Topology, p_fail: float,
+               rng: np.random.Generator) -> Topology:
     """Remove each undirected edge with probability ``p_fail``.
 
     The result may be disconnected — that is the point (knowledge must
     survive partitions); every node always keeps its self-loop in the
     neighbourhood, so isolated nodes simply train locally that round.
+    Self-loops are not droppable here: :class:`Topology` requires a zero
+    diagonal, and a node absent *including* its own contribution is
+    node-level dropout — that is :class:`ParticipationSpec`'s job, not a
+    link-failure draw.
     """
     a = topo.adjacency.copy()
     n = topo.n_nodes
@@ -100,11 +168,8 @@ def dynamic_mixing_matrix(
     # nominal centralities, surviving support
     full = mixing_matrix(topo, strategy, data_counts=data_counts)
     mask = surv.adjacency + np.eye(topo.n_nodes)
-    c = full * mask
-    rowsum = c.sum(axis=1, keepdims=True)
     # rows that lost all neighbours fall back to self-weight 1
-    c = np.where(rowsum > 0, c / np.maximum(rowsum, 1e-12), np.eye(topo.n_nodes))
-    return c
+    return renormalize_rows(full * mask)
 
 
 def link_failure_schedule(

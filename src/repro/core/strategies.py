@@ -51,6 +51,7 @@ __all__ = [
     "validate_mixing_matrix",
     "masked_softmax",
     "masked_normalize",
+    "renormalize_rows",
     "strategy_scores",
     "random_round_seed",
 ]
@@ -129,6 +130,37 @@ def masked_normalize(weights, mask, xp=np):
     (every node keeps its self-loop)."""
     wm = mask * weights[None, :]
     return wm / wm.sum(axis=1, keepdims=True)
+
+
+def renormalize_rows(c, fallback=None, xp=np):
+    """Re-normalize the rows of a masked coefficient matrix.
+
+    Rows with positive mass are divided by their sum; rows whose support
+    was entirely masked away fall back to the matching row of
+    ``fallback`` (identity — self-weight 1 — when omitted).  There is no
+    epsilon: a row sum is either genuinely positive or the row takes the
+    fallback, so near-zero sums cannot be silently inflated.  On the
+    numpy host path an assert rejects sums in (0, 1e-9) outright — those
+    indicate a masking bug upstream, not a row that lost its neighbours.
+
+    Shared by :func:`repro.core.dynamic.dynamic_mixing_matrix` (link
+    failure) and ``repro.core.coeffs.participation_renormalize`` (node
+    dropout); written against the array namespace ``xp`` like
+    :func:`masked_softmax` so both the numpy and traced-jnp paths apply
+    the identical rule.
+    """
+    n = c.shape[-1]
+    rowsum = c.sum(axis=-1, keepdims=True)
+    if fallback is None:
+        fallback = xp.eye(n, dtype=c.dtype)
+        fallback = xp.broadcast_to(fallback, c.shape)
+    if xp is np:
+        tiny = (rowsum > 0) & (rowsum < 1e-9)
+        assert not np.any(tiny), (
+            f"renormalize_rows: row sums in (0, 1e-9) — masking bug? "
+            f"rows={np.nonzero(tiny)[0].tolist()}")
+    safe = xp.where(rowsum > 0, rowsum, xp.ones_like(rowsum))
+    return xp.where(rowsum > 0, c / safe, fallback)
 
 
 _masked_softmax = masked_softmax  # internal alias kept for readability below

@@ -73,9 +73,12 @@ from repro.core.decentralized import (
     DecentralizedConfig,
     RoundMetrics,
     eval_round_indices,
+    make_participation_round_fn,
     make_round_fn,
     make_scan_fn,
+    participation_carry_init,
 )
+from repro.core.dynamic import ParticipationSpec
 from repro.training.optimizer import Optimizer
 
 __all__ = ["SweepEngine", "SweepResult", "gather_round_batch",
@@ -145,6 +148,33 @@ def _finalize_analytics(analytics: Optional[AnalyticsSpec], acarry,
     return {k: np.asarray(v)[:n_exp] for k, v in out.items()}
 
 
+def _finalize_participation(participation: Optional[ParticipationSpec],
+                            pcarry, n_exp: int,
+                            rounds: int) -> Optional[Dict[str, np.ndarray]]:
+    """Host digest of the participation carry, padding rows dropped — the
+    ``SweepResult.participation`` payload (all ``(E, n)``)."""
+    if participation is None:
+        return None
+    return {
+        "rounds_active": np.asarray(pcarry["rounds_active"])[:n_exp],
+        "final_staleness": np.asarray(pcarry["staleness"])[:n_exp],
+        "mean_staleness": (np.asarray(pcarry["staleness_sum"], np.float64)
+                           [:n_exp] / max(rounds, 1)),
+        "local_steps": np.asarray(pcarry["local_steps"])[:n_exp],
+    }
+
+
+def _split_engine_out(out, participation, analytics):
+    """Unpack a ``make_scan_fn`` output tuple — ``(params, opt[, pcarry]
+    [, acarry][, losses, iid, ood])`` — into its five slots (missing ones
+    come back ``None``/``{}``/history ``None``)."""
+    params, opt = out[0], out[1]
+    rest = list(out[2:])
+    pcarry = rest.pop(0) if participation is not None else None
+    acarry = rest.pop(0) if analytics is not None else {}
+    return params, opt, pcarry, acarry, (tuple(rest) if rest else None)
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Stacked metrics for an E-experiment sweep.
@@ -164,6 +194,11 @@ class SweepResult:
     ``keep_history=False`` these are the ONLY metrics: the per-round
     arrays come back zero-length (``(E, 0, n)``, ``history(e) == []``),
     so a sweep's metric memory is O(E·n) instead of O(E·R·n).
+
+    ``participation`` (``SweepEngine.run(participation=...)``) holds the
+    per-node participation digest (DESIGN.md §15) — ``(E, n)`` arrays
+    keyed ``rounds_active`` / ``final_staleness`` / ``mean_staleness``
+    (Σ post-round staleness / R) / ``local_steps``.
     """
 
     train_loss: np.ndarray
@@ -172,6 +207,7 @@ class SweepResult:
     params: Any
     eval_every: int = 1
     analytics: Optional[Dict[str, np.ndarray]] = None
+    participation: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def n_experiments(self) -> int:
@@ -230,13 +266,29 @@ class SweepEngine:
         self._run_jit = jax.jit(
             self._run_impl,
             static_argnames=("batch_size", "program", "analytics",
-                             "keep_history"))
+                             "keep_history", "participation"))
         self._round_jit = jax.jit(
             self._one_round_impl,
             static_argnames=("batch_size", "do_eval", "program",
-                             "analytics"))
+                             "analytics", "participation"))
         self._chunk_jit: Dict[bool, Callable] = {}
         self._sharded_cache: Dict[Tuple[Any, ...], Callable] = {}
+        self._part_round_fns: Dict[ParticipationSpec, Callable] = {}
+
+    def _participation_round_fn(self, spec: ParticipationSpec) -> Callable:
+        """Lazily-built (and cached — the fn's identity keys the jit
+        traces) partial-participation round for this engine's config."""
+        fn = self._part_round_fns.get(spec)
+        if fn is None:
+            fn = make_participation_round_fn(
+                self.loss_fn, self.optimizer, self.config.local_epochs,
+                spec, mix_impl=self.config.mix_impl,
+                epoch_shuffle=self.config.epoch_shuffle,
+                mix_support=self._mix_support,
+                sparse_slack=self.config.sparse_slack,
+                mix_in_float32=self.config.mix_in_float32)
+            self._part_round_fns[spec] = fn
+        return fn
 
     # ------------------------------------------------------------------
     def _check_sparse_support(self, coeffs, program, states) -> None:
@@ -286,50 +338,63 @@ class SweepEngine:
 
     def _experiment_scan(self, bank, batch_size, eval_mask, rounds_idx,
                          params, opt, coeffs_e, idx_e, data_idx, test_iid,
-                         test_ood, acarry_e, program=None, state_e=None,
-                         analytics=None, keep_history=True):
+                         test_ood, acarry_e, pcarry_e, program=None,
+                         state_e=None, analytics=None, keep_history=True,
+                         participation=None):
         """All R rounds of ONE experiment (vmapped over E by the callers):
         :func:`repro.core.decentralized.make_scan_fn` with the per-round
         batch realized as an in-scan gather from the shared bank.  With a
         ``program``, ``coeffs_e`` carries the (R,) absolute round indices
         and each step's matrix is computed in-scan from ``state_e``.  With
         an ``analytics`` spec, ``acarry_e`` is this experiment's streaming
-        accumulator carry and ``rounds_idx`` the (R,) absolute indices."""
+        accumulator carry and ``rounds_idx`` the (R,) absolute indices;
+        with a ``participation`` spec, ``pcarry_e`` its participation
+        carry (stale plane + staleness counters, DESIGN.md §15)."""
         coeff_fn = (None if program is None
                     else (lambda r: program.matrix(state_e, r)))
+        round_fn = (self._round_fn if participation is None
+                    else self._participation_round_fn(participation))
         scan_fn = make_scan_fn(
-            self._round_fn, self._eval,
+            round_fn, self._eval,
             make_batch=lambda ix: gather_round_batch(
                 bank, data_idx, ix, batch_size),
             coeff_fn=coeff_fn, analytics=analytics,
-            keep_history=keep_history)
-        if analytics is None:
-            return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
-                           test_iid, test_ood)
+            keep_history=keep_history, participation=participation)
+        kwargs = {}
+        if analytics is not None:
+            kwargs.update(round_idx=rounds_idx, analytics_carry=acarry_e)
+        if participation is not None:
+            kwargs.update(round_idx=rounds_idx,
+                          participation_carry=pcarry_e)
         return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
-                       test_iid, test_ood, round_idx=rounds_idx,
-                       analytics_carry=acarry_e)
+                       test_iid, test_ood, **kwargs)
 
     def _run_impl(self, params0, opt0, coeffs, indices, data_idx, eval_mask,
-                  rounds_idx, bank, test_iid, test_ood, states, acarry, *,
-                  batch_size, program=None, analytics=None,
-                  keep_history=True):
-        run_one = lambda p, o, c, ix, d, ti, to, st, ac: (
+                  rounds_idx, bank, test_iid, test_ood, states, acarry,
+                  pcarry, *, batch_size, program=None, analytics=None,
+                  keep_history=True, participation=None):
+        run_one = lambda p, o, c, ix, d, ti, to, st, ac, pc: (
             self._experiment_scan(
                 bank, batch_size, eval_mask, rounds_idx, p, o, c, ix, d,
-                ti, to, ac, program, st, analytics, keep_history))
+                ti, to, ac, pc, program, st, analytics, keep_history,
+                participation))
         return jax.vmap(run_one)(
             params0, opt0, coeffs, indices, data_idx, test_iid, test_ood,
-            states, acarry)
+            states, acarry, pcarry)
 
     def _one_round_impl(self, params, opt, coeffs_r, idx_r, data_idx, bank,
-                        test_iid, test_ood, states, acarry, round_r, *,
-                        batch_size, do_eval, program=None, analytics=None):
-        def one(p, o, c, ix, d, ti, to, st, ac):
+                        test_iid, test_ood, states, acarry, pcarry,
+                        round_r, *, batch_size, do_eval, program=None,
+                        analytics=None, participation=None):
+        def one(p, o, c, ix, d, ti, to, st, ac, pc):
             if program is not None:
                 c = program.matrix(st, c)  # c is this round's index
             batch = gather_round_batch(bank, d, ix, batch_size)
-            p, o, losses = self._round_fn(p, o, batch, c)
+            if participation is None:
+                p, o, losses = self._round_fn(p, o, batch, c)
+            else:
+                p, o, pc, losses = self._participation_round_fn(
+                    participation)(p, o, pc, batch, c, round_r)
             if do_eval:
                 iid, ood = self._eval(p, ti, to)
             else:
@@ -337,11 +402,11 @@ class SweepEngine:
                 iid = ood = jnp.zeros((n,))
             if analytics is not None and do_eval:
                 ac = analytics.update(ac, round_r, True, iid, ood)
-            return p, o, losses, iid, ood, ac
+            return p, o, losses, iid, ood, ac, pc
 
         return jax.vmap(one)(
             params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood,
-            states, acarry)
+            states, acarry, pcarry)
 
     # ------------------------------------------------------------------
     # sharded / chunked mode
@@ -349,7 +414,9 @@ class SweepEngine:
     def _sharded_body(self, mesh, batch_size: int,
                       program: Optional[CoeffProgram],
                       analytics: Optional[AnalyticsSpec],
-                      keep_history: bool) -> Callable:
+                      keep_history: bool,
+                      participation: Optional[ParticipationSpec] = None,
+                      ) -> Callable:
         """The un-jitted ``shard_map(vmap_E(scan_R(...)))`` program over
         the mesh's single experiment axis — shared by the executing
         wrapper below and by :meth:`traceable` for static analysis."""
@@ -360,39 +427,45 @@ class SweepEngine:
         exp, rep = P(mesh.axis_names[0]), P()
 
         def body(params, opt, coeffs, idx, data_idx, eval_mask, rounds_idx,
-                 bank, test_iid, test_ood, states, acarry):
+                 bank, test_iid, test_ood, states, acarry, pcarry):
             return self._run_impl(params, opt, coeffs, idx, data_idx,
                                   eval_mask, rounds_idx, bank, test_iid,
-                                  test_ood, states, acarry,
+                                  test_ood, states, acarry, pcarry,
                                   batch_size=batch_size, program=program,
                                   analytics=analytics,
-                                  keep_history=keep_history)
+                                  keep_history=keep_history,
+                                  participation=participation)
 
-        # outputs: (params, opt[, acarry][, losses, iid, ood]) — all exp
-        n_out = 2 + (1 if analytics is not None else 0) \
+        # outputs: (params, opt[, pcarry][, acarry][, losses, iid, ood])
+        # — all exp
+        n_out = 2 + (1 if participation is not None else 0) \
+            + (1 if analytics is not None else 0) \
             + (3 if keep_history else 0)
         return compat_shard_map(
             body, mesh,
             in_specs=(exp, exp, exp, exp, exp, rep, rep, rep, exp, exp,
-                      exp, exp),
+                      exp, exp, exp),
             out_specs=(exp,) * n_out)
 
     def _make_sharded_fn(self, mesh, batch_size: int,
                          program: Optional[CoeffProgram],
                          analytics: Optional[AnalyticsSpec],
-                         keep_history: bool, donate: bool) -> Callable:
+                         keep_history: bool, donate: bool,
+                         participation: Optional[ParticipationSpec],
+                         ) -> Callable:
         """``jit(shard_map(vmap_E(scan_R(...))))``.  Per-experiment
         inputs/outputs — including the coefficient-program states and the
-        analytics carry — shard on E; the sample bank, eval mask, and
-        absolute round indices are replicated (every experiment reads
-        them whole).  The (params, opt) carry is donated when ``donate``
-        (``DONATED_CARRY_ARGNUMS``)."""
-        key = (mesh, batch_size, program, analytics, keep_history, donate)
+        analytics/participation carries — shard on E; the sample bank,
+        eval mask, and absolute round indices are replicated (every
+        experiment reads them whole).  The (params, opt) carry is donated
+        when ``donate`` (``DONATED_CARRY_ARGNUMS``)."""
+        key = (mesh, batch_size, program, analytics, keep_history, donate,
+               participation)
         if key in self._sharded_cache:
             return self._sharded_cache[key]
         fn = jax.jit(
             self._sharded_body(mesh, batch_size, program, analytics,
-                               keep_history),
+                               keep_history, participation),
             donate_argnums=DONATED_CARRY_ARGNUMS if donate else ())
         self._sharded_cache[key] = fn
         return fn
@@ -400,30 +473,36 @@ class SweepEngine:
     def _make_chunk_fn(self, batch_size: int,
                        program: Optional[CoeffProgram],
                        analytics: Optional[AnalyticsSpec],
-                       keep_history: bool, donate: bool) -> Callable:
+                       keep_history: bool, donate: bool,
+                       participation: Optional[ParticipationSpec],
+                       ) -> Callable:
         """Single-device chunk step: the scanned program with a donated
         (params, opt) carry, re-dispatched per round-chunk."""
         if donate not in self._chunk_jit:
             self._chunk_jit[donate] = jax.jit(
                 self._run_impl,
                 static_argnames=("batch_size", "program", "analytics",
-                                 "keep_history"),
+                                 "keep_history", "participation"),
                 donate_argnums=DONATED_CARRY_ARGNUMS if donate else ())
         chunk_jit = self._chunk_jit[donate]
         return lambda *args: chunk_jit(
             *args, batch_size=batch_size, program=program,
-            analytics=analytics, keep_history=keep_history)
+            analytics=analytics, keep_history=keep_history,
+            participation=participation)
 
     def _run_sharded(self, params0, opt0, coeffs, idx, data_idx, eval_mask,
                      bank, test_iid, test_ood, batch_size, mesh,
                      chunk_rounds: Optional[int], states, program,
                      acarry, analytics: Optional[AnalyticsSpec],
-                     keep_history: bool, donate: bool) -> SweepResult:
+                     keep_history: bool, donate: bool, pcarry,
+                     participation: Optional[ParticipationSpec],
+                     ) -> SweepResult:
         """Sharded and/or chunked execution.  Bit-identical to the scanned
         path: padding rows are dropped, each chunk resumes the exact scan
-        carry — (params, opt) AND the analytics accumulators — round
-        indices stay absolute in program and analytics mode, and per-shard
-        programs are the same per-experiment math."""
+        carry — (params, opt) AND the analytics/participation
+        accumulators — round indices stay absolute in program, analytics
+        and participation mode, and per-shard programs are the same
+        per-experiment math."""
         n_exp, rounds = coeffs.shape[:2]
         test_iid = jax.tree.map(jnp.asarray, test_iid)
         test_ood = jax.tree.map(jnp.asarray, test_ood)
@@ -433,10 +512,10 @@ class SweepEngine:
             n_dev = int(np.prod(list(mesh.shape.values())))
             pad = (-n_exp) % n_dev
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states, acarry) = (
+             states, acarry, pcarry) = (
                 pad_experiments(t, pad)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states, acarry))
+                          test_iid, test_ood, states, acarry, pcarry))
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             exp_sh = NamedSharding(mesh, P(mesh.axis_names[0]))
@@ -446,21 +525,22 @@ class SweepEngine:
             # device_put materializes fresh buffers laid out on the mesh,
             # so donating the carry never invalidates caller arrays.
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states, acarry) = (
+             states, acarry, pcarry) = (
                 put(t, exp_sh)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states, acarry))
+                          test_iid, test_ood, states, acarry, pcarry))
             bank = put(bank, rep_sh)
             rounds_idx = put(rounds_idx, rep_sh)
             fn = self._make_sharded_fn(mesh, batch_size, program,
-                                       analytics, keep_history, donate)
+                                       analytics, keep_history, donate,
+                                       participation)
         else:
             if donate:
                 # chunk 0 would donate the caller's params0 — copy once
                 params0 = jax.tree.map(
                     lambda x: jnp.asarray(x).copy(), params0)
             fn = self._make_chunk_fn(batch_size, program, analytics,
-                                     keep_history, donate)
+                                     keep_history, donate, participation)
 
         chunk = chunk_rounds or rounds
         params, opt = params0, opt0
@@ -470,14 +550,15 @@ class SweepEngine:
             out = fn(
                 params, opt, coeffs[:, a:b], idx[:, a:b], data_idx,
                 jnp.asarray(eval_mask[a:b]), rounds_idx[a:b], bank,
-                test_iid, test_ood, states, acarry)
-            if analytics is None:
-                params, opt, l_c, iid_c, ood_c = out
-            elif keep_history:
-                params, opt, acarry, l_c, iid_c, ood_c = out
-            else:
-                params, opt, acarry = out
+                test_iid, test_ood, states, acarry, pcarry)
+            params, opt, pc_out, ac_out, hist = _split_engine_out(
+                out, participation, analytics)
+            if participation is not None:
+                pcarry = pc_out
+            if analytics is not None:
+                acarry = ac_out
             if keep_history:
+                l_c, iid_c, ood_c = hist
                 losses.append(np.asarray(l_c))
                 iids.append(np.asarray(iid_c))
                 oods.append(np.asarray(ood_c))
@@ -492,15 +573,27 @@ class SweepEngine:
         return SweepResult(
             train_loss=l, iid_acc=i, ood_acc=o, params=out_params,
             eval_every=self.config.eval_every,
-            analytics=_finalize_analytics(analytics, acarry, n_exp))
+            analytics=_finalize_analytics(analytics, acarry, n_exp),
+            participation=_finalize_participation(
+                participation, pcarry, n_exp, rounds))
 
     # ------------------------------------------------------------------
     def _prepare_inputs(self, params0, coeffs, bank, indices, data_idx,
                         analytics: Optional[AnalyticsSpec],
-                        keep_history: bool):
+                        keep_history: bool,
+                        participation: Optional[ParticipationSpec] = None,
+                        participation_rates=None,
+                        participation_seeds=None):
         """Shared input normalization for :meth:`run` and
         :meth:`traceable` — program/stack resolution, support validation,
-        index gathering, optimizer/analytics carry construction."""
+        index gathering, optimizer/analytics/participation carry
+        construction."""
+        if participation is not None:
+            # build (and cache) the participation round fn OUTSIDE any jit
+            # trace: make_mix_fn bakes trace-time constants (e.g. the
+            # padded-ELL neighbour tables) into the closure, which must
+            # not be tracers of whichever program first used the fn
+            self._participation_round_fn(participation)
         program: Optional[CoeffProgram] = None
         states: Any = {}
         if isinstance(coeffs, ProgramCoeffs):
@@ -534,8 +627,28 @@ class SweepEngine:
         n_nodes = jax.tree.leaves(params0)[0].shape[1]
         acarry = (analytics.init_batch(n_exp, n_nodes)
                   if analytics is not None else {})
+        if participation is None:
+            if participation_rates is not None or \
+                    participation_seeds is not None:
+                raise ValueError("participation_rates/participation_seeds "
+                                 "need a ParticipationSpec (participation=)")
+            pcarry = {}
+        else:
+            rates = (np.ones(n_exp, np.float32)
+                     if participation_rates is None
+                     else np.broadcast_to(
+                         np.asarray(participation_rates, np.float32),
+                         (n_exp,)))
+            seeds = (np.asarray(participation.seed + np.arange(n_exp),
+                                np.uint32)
+                     if participation_seeds is None
+                     else np.broadcast_to(
+                         np.asarray(participation_seeds, np.uint32),
+                         (n_exp,)))
+            pcarry = jax.vmap(participation_carry_init)(
+                params0, jnp.asarray(rates), jnp.asarray(seeds))
         return (params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
-                states, program, acarry, rounds, n_exp, n_nodes)
+                states, program, acarry, pcarry, rounds, n_exp, n_nodes)
 
     def traceable(
         self,
@@ -553,6 +666,9 @@ class SweepEngine:
         analytics: Optional[AnalyticsSpec] = None,
         keep_history: bool = True,
         donate: Optional[bool] = None,
+        participation: Optional[ParticipationSpec] = None,
+        participation_rates=None,
+        participation_seeds=None,
     ) -> Tuple[Callable, Tuple[Any, ...], Dict[str, Any]]:
         """``(fn, args, jit_kwargs)`` for static analysis — the exact
         program each execution mode runs, as a traceable closure plus
@@ -568,9 +684,11 @@ class SweepEngine:
         pass ``True`` to analyze donation intent on CPU, where run()
         skips it only because the backend ignores donation."""
         (params0, opt0, coeffs, idx, data_idx, eval_mask, bank, states,
-         program, acarry, rounds, n_exp, n_nodes) = self._prepare_inputs(
-            params0, coeffs, bank, indices, data_idx, analytics,
-            keep_history)
+         program, acarry, pcarry, rounds, n_exp, n_nodes) = \
+            self._prepare_inputs(
+                params0, coeffs, bank, indices, data_idx, analytics,
+                keep_history, participation, participation_rates,
+                participation_seeds)
         donate = donation_supported() if donate is None else donate
         rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
         eval_mask = jnp.asarray(eval_mask)
@@ -580,20 +698,22 @@ class SweepEngine:
         if mode == "unrolled":
             fn = functools.partial(
                 self._one_round_impl, batch_size=batch_size, do_eval=True,
-                program=program, analytics=analytics)
+                program=program, analytics=analytics,
+                participation=participation)
             args = (params0, opt0, coeffs[:, 0], idx[:, 0], data_idx, bank,
-                    test_iid, test_ood, states, acarry,
+                    test_iid, test_ood, states, acarry, pcarry,
                     jnp.asarray(0, jnp.int32))
             return fn, args, {}
 
         if mode in ("scanned", "chunked"):
             fn = functools.partial(
                 self._run_impl, batch_size=batch_size, program=program,
-                analytics=analytics, keep_history=keep_history)
+                analytics=analytics, keep_history=keep_history,
+                participation=participation)
             c = rounds if mode == "scanned" else (chunk_rounds or rounds)
             args = (params0, opt0, coeffs[:, :c], idx[:, :c], data_idx,
                     eval_mask[:c], rounds_idx[:c], bank, test_iid,
-                    test_ood, states, acarry)
+                    test_ood, states, acarry, pcarry)
             jit_kwargs = ({} if mode == "scanned" else
                           {"donate_argnums":
                            DONATED_CARRY_ARGNUMS if donate else ()})
@@ -607,14 +727,15 @@ class SweepEngine:
             n_dev = int(np.prod(list(mesh.shape.values())))
             pad = (-n_exp) % n_dev
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states, acarry) = (
+             states, acarry, pcarry) = (
                 pad_experiments(t, pad)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states, acarry))
+                          test_iid, test_ood, states, acarry, pcarry))
             fn = self._sharded_body(mesh, batch_size, program, analytics,
-                                    keep_history)
+                                    keep_history, participation)
             args = (params0, opt0, coeffs, idx, data_idx, eval_mask,
-                    rounds_idx, bank, test_iid, test_ood, states, acarry)
+                    rounds_idx, bank, test_iid, test_ood, states, acarry,
+                    pcarry)
             return fn, args, {"donate_argnums":
                               DONATED_CARRY_ARGNUMS if donate else ()}
 
@@ -638,6 +759,9 @@ class SweepEngine:
         analytics: Optional[AnalyticsSpec] = None,
         keep_history: bool = True,
         donate: Optional[bool] = None,
+        participation: Optional[ParticipationSpec] = None,
+        participation_rates=None,   # (E,) or scalar; None → all 1.0
+        participation_seeds=None,   # (E,) or scalar; None → seed+arange(E)
     ) -> SweepResult:
         """Run the whole grid.  ``unroll_eval`` overrides the config flag
         (None → use ``config.unroll_eval``).  ``mesh`` (from
@@ -662,11 +786,23 @@ class SweepEngine:
         execution mode (the carry pads/shards on E and chunk boundaries
         resume it exactly).  ``keep_history=False`` (requires
         ``analytics``) drops the per-round ``(E, R, n)`` metric arrays
-        entirely: the summaries are the only metrics, O(E·n) memory."""
+        entirely: the summaries are the only metrics, O(E·n) memory.
+
+        ``participation`` (a ``repro.core.dynamic.ParticipationSpec``)
+        switches every mode to partial-participation rounds (DESIGN.md
+        §15): ``participation_rates`` gives the per-experiment activation
+        rate (scalar broadcasts; None → 1.0, which is bit-identical to
+        the synchronous path) and ``participation_seeds`` the per-
+        experiment PRNG seeds (None → ``spec.seed + arange(E)``).  Rates
+        and seeds are CARRIED data, not static, so one compiled program
+        serves a whole rate grid.  ``SweepResult.participation`` holds
+        the staleness digest."""
         (params0, opt0, coeffs, idx, data_idx, eval_mask, bank, states,
-         program, acarry, rounds, n_exp, n_nodes) = self._prepare_inputs(
-            params0, coeffs, bank, indices, data_idx, analytics,
-            keep_history)
+         program, acarry, pcarry, rounds, n_exp, n_nodes) = \
+            self._prepare_inputs(
+                params0, coeffs, bank, indices, data_idx, analytics,
+                keep_history, participation, participation_rates,
+                participation_seeds)
         donate = donation_supported() if donate is None else donate
 
         unroll = (self.config.unroll_eval if unroll_eval is None
@@ -679,54 +815,64 @@ class SweepEngine:
             return self._run_unrolled(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size, states, program,
-                acarry, analytics, keep_history)
+                acarry, analytics, keep_history, pcarry, participation)
 
         if mesh is not None or chunk_rounds:
             return self._run_sharded(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size, mesh, chunk_rounds,
-                states, program, acarry, analytics, keep_history, donate)
+                states, program, acarry, analytics, keep_history, donate,
+                pcarry, participation)
 
         rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
         out = self._run_jit(
             params0, opt0, coeffs, idx, data_idx, jnp.asarray(eval_mask),
-            rounds_idx, bank, test_iid, test_ood, states, acarry,
+            rounds_idx, bank, test_iid, test_ood, states, acarry, pcarry,
             batch_size=batch_size, program=program, analytics=analytics,
-            keep_history=keep_history)
-        if analytics is None:
-            params, _, losses, iid, ood = out
-            acarry = {}
-        elif keep_history:
-            params, _, acarry, losses, iid, ood = out
+            keep_history=keep_history, participation=participation)
+        params, _, pc_out, ac_out, hist = _split_engine_out(
+            out, participation, analytics)
+        if participation is not None:
+            pcarry = pc_out
+        if analytics is not None:
+            acarry = ac_out
+        if hist is not None:
+            losses, iid, ood = hist
         else:
-            params, _, acarry = out
             losses = iid = ood = np.zeros((n_exp, 0, n_nodes), np.float32)
         return SweepResult(
             train_loss=np.asarray(losses), iid_acc=np.asarray(iid),
             ood_acc=np.asarray(ood), params=params,
             eval_every=self.config.eval_every,
-            analytics=_finalize_analytics(analytics, acarry, n_exp))
+            analytics=_finalize_analytics(analytics, acarry, n_exp),
+            participation=_finalize_participation(
+                participation, pcarry, n_exp, rounds))
 
     def _run_unrolled(self, params, opt, coeffs, idx, data_idx, eval_mask,
                       bank, test_iid, test_ood, batch_size, states=None,
                       program=None, acarry=None, analytics=None,
-                      keep_history=True) -> SweepResult:
+                      keep_history=True, pcarry=None,
+                      participation=None) -> SweepResult:
         """Escape hatch: per-round dispatch, incremental metrics (the
         analytics carry is folded one eval round at a time)."""
         if states is None:
             states = {}
         if acarry is None:
             acarry = {}
+        if pcarry is None:
+            pcarry = {}
         n_exp = jax.tree.leaves(params)[0].shape[0]
         n_nodes = jax.tree.leaves(params)[0].shape[1]
+        rounds = coeffs.shape[1]
         losses, iids, oods = [], [], []
-        for r in range(coeffs.shape[1]):
-            params, opt, l_r, iid_r, ood_r, acarry = self._round_jit(
+        for r in range(rounds):
+            (params, opt, l_r, iid_r, ood_r, acarry,
+             pcarry) = self._round_jit(
                 params, opt, coeffs[:, r], idx[:, r], data_idx, bank,
-                test_iid, test_ood, states, acarry,
+                test_iid, test_ood, states, acarry, pcarry,
                 jnp.asarray(r, jnp.int32), batch_size=batch_size,
                 do_eval=bool(eval_mask[r]), program=program,
-                analytics=analytics)
+                analytics=analytics, participation=participation)
             if keep_history:
                 losses.append(np.asarray(l_r))
                 iids.append(np.asarray(iid_r))
@@ -740,4 +886,6 @@ class SweepEngine:
         return SweepResult(
             train_loss=l, iid_acc=i, ood_acc=o,
             params=params, eval_every=self.config.eval_every,
-            analytics=_finalize_analytics(analytics, acarry, n_exp))
+            analytics=_finalize_analytics(analytics, acarry, n_exp),
+            participation=_finalize_participation(
+                participation, pcarry, n_exp, rounds))

@@ -76,13 +76,18 @@ def _pad_cap(bank: Dict[str, np.ndarray], cap: int) -> Dict[str, np.ndarray]:
     }
 
 
-def build_engine_inputs():
+def build_engine_inputs(scens=None):
     """The scenario grid as one set of SweepEngine inputs (E=4, D=3
-    distinct data configurations keyed by OOD source tuple)."""
+    distinct data configurations keyed by OOD source tuple).  ``scens``
+    overrides the default :func:`scenarios` grid with another list of
+    ``(name, topology, strategy, sources)`` cells at the same scale
+    (the participation suite reuses this builder)."""
     from repro.models.paper_models import (
         classifier_accuracy, classifier_loss, ffn_apply, ffn_init)
     from repro.training.optimizer import sgd
 
+    if scens is None:
+        scens = scenarios()
     train = make_dataset("mnist", 360, seed=0)
     test = make_dataset("mnist", 96, seed=9)
     cfg = DecentralizedConfig(rounds=ROUNDS, local_epochs=2,
@@ -90,7 +95,7 @@ def build_engine_inputs():
 
     dconf: Dict[Tuple[int, ...], int] = {}
     batchers: List[NodeBatcher] = []
-    for _, _, _, srcs in scenarios():
+    for _, _, _, srcs in scens:
         if srcs not in dconf:
             parts = node_datasets(train, N, ood_node=srcs, q=0.10, seed=0)
             dconf[srcs] = len(batchers)
@@ -105,7 +110,7 @@ def build_engine_inputs():
 
     data_idx, coeffs, p0s = [], [], []
     init = ffn_init(jax.random.key(0))
-    for _, topo, strat, srcs in scenarios():
+    for _, topo, strat, srcs in scens:
         d = dconf[srcs]
         data_idx.append(d)
         coeffs.append(coeffs_stack(
@@ -116,7 +121,7 @@ def build_engine_inputs():
 
     tb = make_test_batch(test, 48, seed=0)
     ob = make_test_batch(backdoored_testset(test, seed=0), 48, seed=0)
-    e = len(scenarios())
+    e = len(scens)
     stack_e = lambda t: {k: jnp.stack([jnp.asarray(t[k])] * e) for k in t}
 
     engine = SweepEngine(sgd(1e-2), classifier_loss(ffn_apply),
@@ -293,6 +298,93 @@ def compute_edges_goldens(mesh=None, chunk_rounds: Optional[int] = None,
     return out
 
 
+# ----------------------------------------------------------------------
+# partial-participation golden suite (DESIGN.md §15): staleness counters,
+# time-skewed local steps, and the staleness × arrival interaction on one
+# ring and one BA topology, pinned per rate
+# ----------------------------------------------------------------------
+PARTICIPATION_GOLDEN_PATH = os.path.join(GOLDEN_DIR,
+                                         "sweep_participation.json")
+
+
+def participation_scenarios():
+    """(name, topology, strategy, OOD sources, participation rate) — the
+    rate-1.0 ring cell doubles as the synchronous bit-identity control
+    (asserted inside :func:`compute_participation_goldens`)."""
+    from repro.core.topology import barabasi_albert
+
+    ba = barabasi_albert(N, 2, seed=0)
+    hub = ba.kth_highest_degree_node(1)
+    return [
+        ("ring6/unweighted/src0/r1.0", ring(N), "unweighted", (0,), 1.0),
+        ("ring6/unweighted/src0/r0.5", ring(N), "unweighted", (0,), 0.5),
+        ("ba6/degree/hub/r0.5", ba, "degree", (hub,), 0.5),
+        ("ba6/degree/hub/r0.25", ba, "degree", (hub,), 0.25),
+    ]
+
+
+def compute_participation_goldens(mesh=None,
+                                  chunk_rounds: Optional[int] = None,
+                                  keep_history: bool = True) -> Dict:
+    """Run the participation grid (one compiled program; the rates ride
+    the vmap axis) and digest it into the golden payload.
+
+    On the primary call (no mesh/chunking, history kept) the rate-1.0
+    scenario is additionally asserted BIT-identical to the synchronous
+    engine on the same inputs — a regenerated golden can never encode a
+    drifted all-active path."""
+    from repro.core.analytics import participation_summary
+    from repro.core.dynamic import ParticipationSpec
+
+    pscens = participation_scenarios()
+    engine, args = build_engine_inputs(scens=[s[:4] for s in pscens])
+    rates = np.asarray([s[4] for s in pscens], np.float32)
+    spec = ParticipationSpec()  # bernoulli, stale-plane mixing, seed 0
+    res = engine.run(*args, batch_size=BATCH, mesh=mesh,
+                     chunk_rounds=chunk_rounds,
+                     analytics=AnalyticsSpec(arrival_threshold=THRESHOLD),
+                     keep_history=keep_history,
+                     participation=spec, participation_rates=rates)
+    if mesh is None and chunk_rounds is None and keep_history:
+        sync = engine.run(*args, batch_size=BATCH,
+                          analytics=AnalyticsSpec(
+                              arrival_threshold=THRESHOLD))
+        e1 = [i for i, s in enumerate(pscens) if s[4] == 1.0]
+        for e in e1:
+            np.testing.assert_array_equal(res.train_loss[e],
+                                          sync.train_loss[e])
+            np.testing.assert_array_equal(res.iid_acc[e], sync.iid_acc[e])
+            np.testing.assert_array_equal(res.ood_acc[e], sync.ood_acc[e])
+            for k in sync.analytics:
+                np.testing.assert_array_equal(res.analytics[k][e],
+                                              sync.analytics[k][e])
+    out: Dict = {
+        "meta": {"n_nodes": N, "rounds": ROUNDS, "eval_every": EVAL_EVERY,
+                 "arrival_threshold": THRESHOLD, "batch": BATCH,
+                 "participation_mode": spec.mode,
+                 "stale_mixing": spec.stale_mixing,
+                 "participation_seed": spec.seed},
+        "scenarios": {},
+    }
+    for e, (name, topo, _, srcs, rate) in enumerate(pscens):
+        part = {k: v[e] for k, v in res.participation.items()}
+        stream = {k: v[e] for k, v in res.analytics.items()}
+        digest = participation_summary(part, ROUNDS, stream)
+        out["scenarios"][name] = {
+            "rate": rate,
+            "ood_sources": list(srcs),
+            "rounds_active": [int(v) for v in part["rounds_active"]],
+            "final_staleness": [int(v) for v in part["final_staleness"]],
+            "mean_staleness": [float(v) for v in part["mean_staleness"]],
+            "local_steps": [int(v) for v in part["local_steps"]],
+            "ood_arrival": [int(v) for v in stream["ood_arrival"]],
+            "ood_auc_mean": float(stream["ood_auc"].mean()),
+            "activity_rate": digest["activity_rate"],
+            "staleness_arrival_corr": digest["staleness_arrival_corr"],
+        }
+    return out
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     goldens = compute_goldens()
@@ -311,6 +403,15 @@ def main() -> None:
     for name, g in edges["scenarios"].items():
         print(f"  {name}: ood_auc_mean={g['ood_auc_mean']:.4f} "
               f"arrival_mean={g['ood_arrival_mean']:.2f}")
+    part = compute_participation_goldens()
+    with open(PARTICIPATION_GOLDEN_PATH, "w") as f:
+        json.dump(part, f, indent=1)
+        f.write("\n")
+    print(f"wrote {PARTICIPATION_GOLDEN_PATH}")
+    for name, g in part["scenarios"].items():
+        print(f"  {name}: ood_auc_mean={g['ood_auc_mean']:.4f} "
+              f"activity={g['activity_rate']:.2f} "
+              f"staleness={np.mean(g['mean_staleness']):.2f}")
 
 
 if __name__ == "__main__":

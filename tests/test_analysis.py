@@ -289,12 +289,19 @@ class TestBudgetMetadata:
 # engine-matrix preset + CLI (one-cell smokes; full matrix runs in CI)
 # ----------------------------------------------------------------------
 class TestPreset:
-    def test_engine_matrix_lists_36_combos(self):
+    def test_engine_matrix_lists_41_combos(self):
         from repro.analysis.presets import engine_matrix_combos
 
         combos = engine_matrix_combos()
-        assert len(combos) == 36
-        assert len({c.name for c in combos}) == 36
+        assert len(combos) == 41
+        assert len({c.name for c in combos}) == 41
+        # the partial-participation cells: every mode on einsum + one
+        # kernel backend, sharing the synchronous einsum budgets
+        part = [c for c in combos if c.participation]
+        assert {(c.mode, c.impl) for c in part} == {
+            ("scanned", "einsum"), ("chunked", "einsum"),
+            ("mesh", "einsum"), ("unrolled", "einsum"),
+            ("scanned", "pallas")}
 
     @pytest.mark.parametrize("mode,impl", [
         ("scanned", "pallas"), ("unrolled", "einsum")])

@@ -414,7 +414,10 @@ def test_pruned_kinds_bit_identical_for_kept_kinds():
     topo = barabasi_albert(12, 2, seed=0)
     for kind in ("degree", "betweenness", "unweighted"):
         strat = AggregationStrategy(kind, tau=0.1, seed=3)
-        program, state = program_for(topo, strat, p_fail=0.3, reactive=True)
+        # betweenness under reactive=True needs the explicit nominal
+        # opt-in since the validate_state_kinds guard (DESIGN.md §9)
+        program, state = program_for(topo, strat, p_fail=0.3, reactive=True,
+                                     allow_nominal_betweenness=True)
         kept = (PROGRAM_KINDS.index(kind),)
         pruned = dataclasses.replace(program, kinds=kept)
         np.testing.assert_array_equal(
@@ -432,7 +435,8 @@ def test_pruned_kinds_union_covers_stacked_states():
     kinds = ("unweighted", "degree", "betweenness")
     programs_states = [
         program_for(topo, AggregationStrategy(k, tau=0.1, seed=5),
-                    p_fail=0.3, reactive=True)
+                    p_fail=0.3, reactive=True,
+                    allow_nominal_betweenness=True)
         for k in kinds
     ]
     union = tuple(sorted(PROGRAM_KINDS.index(k) for k in kinds))

@@ -138,3 +138,74 @@ def test_edges_golden_mesh_mode_identical(computed_edges):
 
 def test_edges_golden_no_history_identical(computed_edges):
     assert rg.compute_edges_goldens(keep_history=False) == computed_edges
+
+
+# ----------------------------------------------------------------------
+# partial-participation suite (goldens/sweep_participation.json):
+# staleness counters, time-skewed local steps, arrival under node-level
+# dropout on ring + BA — DESIGN.md §15.  compute_participation_goldens
+# additionally asserts the rate-1.0 scenario bit-identical to the
+# synchronous engine on every primary run.
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def computed_participation():
+    return rg.compute_participation_goldens()
+
+
+def _load_participation_goldens():
+    assert os.path.exists(rg.PARTICIPATION_GOLDEN_PATH), (
+        f"missing {rg.PARTICIPATION_GOLDEN_PATH}; generate it with "
+        f"`PYTHONPATH=src python -m tests.regen_goldens`")
+    with open(rg.PARTICIPATION_GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_participation_golden_values_match(computed_participation):
+    want = _load_participation_goldens()
+    assert want["meta"] == computed_participation["meta"], (
+        "participation golden meta (scale/spec) drifted — regenerate the "
+        "goldens if the change was intentional")
+    assert set(want["scenarios"]) == set(computed_participation["scenarios"])
+    for name, g in want["scenarios"].items():
+        c = computed_participation["scenarios"][name]
+        # the active-set draw is a pinned PRNG stream: every counter is
+        # an exact integer, not a tolerance value
+        for key in ("rate", "ood_sources", "rounds_active",
+                    "final_staleness", "local_steps", "ood_arrival"):
+            assert c[key] == g[key], (name, key)
+        np.testing.assert_allclose(c["mean_staleness"], g["mean_staleness"],
+                                   atol=1e-9, err_msg=name)
+        np.testing.assert_allclose(c["ood_auc_mean"], g["ood_auc_mean"],
+                                   atol=rg.TOL, err_msg=name)
+        np.testing.assert_allclose(c["activity_rate"], g["activity_rate"],
+                                   atol=1e-9, err_msg=name)
+        if g["staleness_arrival_corr"] is None:
+            assert c["staleness_arrival_corr"] is None, name
+        else:
+            np.testing.assert_allclose(c["staleness_arrival_corr"],
+                                       g["staleness_arrival_corr"],
+                                       atol=1e-6, err_msg=name)
+
+
+def test_participation_golden_chunked_mode_identical(computed_participation):
+    """Absolute round indices drive the active-set draw, so chunk
+    boundaries cannot shift it — digested payload EQUAL."""
+    assert (rg.compute_participation_goldens(chunk_rounds=2)
+            == computed_participation)
+
+
+def test_participation_golden_mesh_mode_identical(computed_participation):
+    """The participation carry shards on E like the analytics carry;
+    E-padding + shard_map cannot change any counter."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    assert (rg.compute_participation_goldens(mesh=make_sweep_mesh())
+            == computed_participation)
+    assert (rg.compute_participation_goldens(mesh=make_sweep_mesh(),
+                                             chunk_rounds=2)
+            == computed_participation)
+
+
+def test_participation_golden_no_history_identical(computed_participation):
+    assert (rg.compute_participation_goldens(keep_history=False)
+            == computed_participation)
