@@ -36,8 +36,8 @@ from repro.core.decentralized import (
     stack_params,
 )
 from repro.core.analytics import (AnalyticsSpec, analytics_summary,
-                                  participation_summary)
-from repro.core.dynamic import ParticipationSpec
+                                  participation_summary, quarantine_summary)
+from repro.core.dynamic import FaultSpec, ParticipationSpec
 from repro.core.sweep import SweepEngine
 from repro.core.propagation import per_node_auc, propagation_summary
 from repro.core.strategies import AggregationStrategy
@@ -211,6 +211,14 @@ class SweepCell:
     partial-participation sweep (``run_sweep_cells(participation=...)``,
     DESIGN.md §15); ``None`` means fully synchronous — in a mixed group
     such cells run at rate 1.0, which is bit-identical.
+
+    ``fault_rate`` is the cell's per-node-round Byzantine fault
+    probability under a fault-injection sweep
+    (``run_sweep_cells(fault=...)``, DESIGN.md §16); ``None`` runs at
+    rate 0.0, bit-identical to the fault-free round.  ``robust`` selects
+    the cell's aggregation rule (``make_mix_fn``); it is static engine
+    configuration, so cells with different ``robust`` compile into
+    separate groups.
     """
 
     dataset: str
@@ -225,6 +233,8 @@ class SweepCell:
     reactive: bool = False
     ood_ks: Optional[Tuple[int, ...]] = None
     participation: Optional[float] = None
+    fault_rate: Optional[float] = None
+    robust: str = "mean"
 
     @property
     def label(self) -> str:
@@ -362,12 +372,52 @@ def participation_cells(
     return cells
 
 
-def group_cells(cells: List[SweepCell]) -> Dict[Tuple[str, int], List[int]]:
+def byzantine_cells(
+    datasets=("mnist",),
+    seeds=(0,),
+    n_nodes: int = 16,
+    strategy: str = "degree",
+    rates=(0.0, 0.1, 0.3),
+    robusts=("mean", "trimmed", "median"),
+    prefix: str = "byzantine",
+) -> List[SweepCell]:
+    """Byzantine-fault grid (the ``benchmarks/sweep.py byzantine``
+    preset): fault rate × topology (ring vs per-seed BA) × OOD placement
+    (hub vs periphery) × aggregation rule, run with
+    ``run_sweep_cells(..., fault=FaultSpec(...))``.  Rate 0.0 rides
+    along as the fault-free control — bit-identical to the synchronous
+    round under ``robust="mean"`` — and every (topology, placement,
+    rate) cell appears under each aggregator so the robust-vs-mean
+    recovery gap is read off within one artifact."""
+    from repro.core.topology import barabasi_albert, ring
+
+    cells = []
+    for ds in datasets:
+        for seed in seeds:
+            topos = (ring(n_nodes), barabasi_albert(n_nodes, 2, seed=seed))
+            for topo in topos:
+                for place, k in (("hub", 1), ("leaf", n_nodes)):
+                    for rate in rates:
+                        for robust in robusts:
+                            cells.append(SweepCell(
+                                ds, topo, strategy, ood_k=k, seed=seed,
+                                fault_rate=rate, robust=robust,
+                                name=(f"{prefix}/{ds}/{topo.name}/{place}"
+                                      f"/f{rate}/{robust}"),
+                                sweep=("byzantine", topo.name, place,
+                                       rate, robust)))
+    return cells
+
+
+def group_cells(
+        cells: List[SweepCell]) -> Dict[Tuple[str, int, str], List[int]]:
     """Cells sharing one compiled program: same dataset (model + sample
-    shapes) and same node count (topology/coeffs shapes)."""
-    groups: Dict[Tuple[str, int], List[int]] = {}
+    shapes), same node count (topology/coeffs shapes), and same robust
+    aggregation rule (static mix-fn configuration)."""
+    groups: Dict[Tuple[str, int, str], List[int]] = {}
     for i, cell in enumerate(cells):
-        groups.setdefault((cell.dataset, cell.topo.n_nodes), []).append(i)
+        groups.setdefault(
+            (cell.dataset, cell.topo.n_nodes, cell.robust), []).append(i)
     return groups
 
 
@@ -391,6 +441,7 @@ def run_sweep_cells(
     analytics: bool = True,
     arrival_threshold: float = DEFAULT_ARRIVAL_THRESHOLD,
     participation: Optional[ParticipationSpec] = None,
+    fault: Optional[FaultSpec] = None,
     log=None,
 ) -> List[Dict]:
     """Evaluate a whole grid of cells through the sweep engine.
@@ -435,22 +486,35 @@ def run_sweep_cells(
     activity, staleness statistics, and the staleness × arrival-round
     interaction when analytics are on.  Cells that set a rate without a
     spec get the default ``ParticipationSpec()``.
+
+    ``fault`` (a :class:`FaultSpec`) switches each group onto the
+    Byzantine-fault round (DESIGN.md §16): each cell's ``fault_rate``
+    rides the vmap axis (cells without one run at 0.0, bit-identical to
+    the fault-free round), each cell's ``robust`` rule picks its
+    compiled group's aggregator, and each row gains a ``"fault"`` digest
+    (:func:`quarantine_summary`) — realized corruption, detection lag,
+    quarantine occupancy.  Cells that set a rate without a spec get the
+    default ``FaultSpec()``.
     """
     if coeff_mode not in ("stack", "program"):
         raise KeyError(f"coeff_mode {coeff_mode!r}; have 'stack', 'program'")
     if participation is None and any(c.participation is not None
                                      for c in cells):
         participation = ParticipationSpec()
+    if fault is None and any(c.fault_rate is not None for c in cells):
+        fault = FaultSpec()
     spec = (AnalyticsSpec(arrival_threshold=arrival_threshold)
             if analytics else None)
     rows: List[Optional[Dict]] = [None] * len(cells)
-    for (ds, n_nodes), idxs in group_cells(cells).items():
+    for (ds, n_nodes, robust), idxs in group_cells(cells).items():
         t0 = time.time()
         init, loss_fn, acc_fn, opt = _model_fns(ds, scale, cells[idxs[0]].seed)
         mix_support = None
-        if mix_impl != "einsum":
+        if mix_impl != "einsum" or robust in ("trimmed", "median"):
             # one static schedule per compiled program: the union of every
-            # cell's neighbourhood mask (adjacency + self loops)
+            # cell's neighbourhood mask (adjacency + self loops).  The
+            # order-statistic aggregators need it even on the einsum impl
+            # — their padded-ELL tables are static engine configuration.
             mix_support = np.eye(n_nodes)
             for i in idxs:
                 mix_support = np.maximum(
@@ -460,7 +524,7 @@ def run_sweep_cells(
             DecentralizedConfig(rounds=scale.rounds,
                                 local_epochs=scale.local_epochs,
                                 eval_every=scale.eval_every,
-                                mix_impl=mix_impl),
+                                mix_impl=mix_impl, robust=robust),
             mix_support=mix_support)
 
         # distinct data configurations (seed × OOD node) → bank rows.
@@ -574,6 +638,12 @@ def run_sweep_cells(
                 participation_rates=np.asarray(
                     [1.0 if cells[i].participation is None
                      else cells[i].participation for i in idxs], np.float32))
+        if fault is not None:
+            part_kwargs.update(
+                fault=fault,
+                fault_rates=np.asarray(
+                    [0.0 if cells[i].fault_rate is None
+                     else cells[i].fault_rate for i in idxs], np.float32))
         result = engine.run(
             params0, engine_coeffs, bank, indices,
             np.asarray(data_idx), stack_tests(t_iid), stack_tests(t_ood),
@@ -619,6 +689,13 @@ def run_sweep_cells(
                     else cell.participation)
                 summary["participation"] = participation_summary(
                     part_row, scale.rounds, part_stream)
+            if result.fault is not None:
+                summary["fault_rate"] = (0.0 if cell.fault_rate is None
+                                         else cell.fault_rate)
+                summary["robust"] = cell.robust
+                summary["fault"] = quarantine_summary(
+                    {k: v[e] for k, v in result.fault.items()},
+                    scale.rounds)
             if cell.p_fail or cell.reactive:
                 summary.update(p_fail=cell.p_fail, reactive=cell.reactive)
             if cell.sweep is not None:

@@ -66,6 +66,10 @@ class SweepPreset:
     # "sparse" | "edges"); non-einsum backends derive each compiled
     # program's mix_support from its cells' topologies
     mix_impl: str = "einsum"
+    # FaultSpec kwargs for fault-injection presets (kept as a plain dict
+    # so --list stays jax-free); None → run_sweep_cells' default spec
+    # when any cell sets a fault_rate
+    fault_kwargs: Optional[dict] = None
 
 
 PRESETS: Dict[str, SweepPreset] = {}
@@ -295,6 +299,55 @@ register_preset(SweepPreset(
     _participation_build, _participation_verdict, seeds=(0,)))
 
 
+def _byzantine_build(datasets, seeds, n_nodes):
+    """Byzantine-fault grid (DESIGN.md §16): fault rate × topology (ring
+    vs BA) × OOD placement (hub vs leaf) × aggregation rule (mean /
+    trimmed / median).  The cells carry per-experiment fault rates, so
+    ``run_sweep_cells`` threads the default signflip ``FaultSpec``
+    through the round scan; rate-0.0 mean rows are the bit-identical
+    fault-free control, and cells with different ``robust`` compile into
+    separate groups (the aggregator is static engine configuration)."""
+    from benchmarks.common import byzantine_cells
+
+    return byzantine_cells(datasets=datasets, seeds=seeds, n_nodes=n_nodes)
+
+
+def _byzantine_verdict(rows):
+    mean = lambda xs: (sum(xs) / len(xs)) if xs else float("nan")
+    by: Dict[tuple, list] = {}
+    for r in rows:
+        by.setdefault((r["fault_rate"], r["robust"]),
+                      []).append(r["final_ood_acc_mean"])
+    rates = sorted({k[0] for k in by})
+    parts, recovered = [], True
+    for rate in rates:
+        cell = {rob: mean(by.get((rate, rob), []))
+                for rob in ("mean", "trimmed", "median")}
+        parts.append(f"rate={rate:g}: final_ood "
+                     + " ".join(f"{rob}={v:.3f}"
+                                for rob, v in cell.items()))
+        if rate > 0:
+            recovered &= (cell["trimmed"] >= cell["mean"] - 1e-6
+                          and cell["median"] >= cell["mean"] - 1e-6)
+    return ("byzantine faults (signflip, robust aggregation): "
+            + "; ".join(parts)
+            + ("  [robust ≥ mean under faults ✓]" if recovered
+               else "  [robust < mean under faults X]"))
+
+
+# byz_scale=12 makes the corruption decisive: a ×(−3) signflip barely
+# moves a degree-weighted mean at n=16 (mean "recovers" on its own and
+# the robust-vs-mean contrast inverts), while ×(−12) collapses plain
+# mean and leaves the order-statistic aggregators standing — the same
+# amplification the golden suite pins (tests/regen_goldens.py BYZ_SCALE).
+register_preset(SweepPreset(
+    "byzantine",
+    "Byzantine fault injection (fault rate × topology × OOD placement × "
+    "{mean, trimmed, median} aggregation)",
+    _byzantine_build, _byzantine_verdict, seeds=(0,),
+    fault_kwargs=dict(mode="signflip", byz_scale=12.0)))
+
+
 # ----------------------------------------------------------------------
 def plan(cells, scale) -> str:
     """The compiled-program plan for a cell grid — no jax work."""
@@ -302,15 +355,16 @@ def plan(cells, scale) -> str:
 
     lines = ["plan: group,experiments,distinct_datasets,rounds,"
              "est_bank_mib,cells"]
-    for (ds, n), idxs in group_cells(cells).items():
+    for (ds, n, robust), idxs in group_cells(cells).items():
         dkeys = {(cells[i].seed, cells[i].ood_nodes()) for i in idxs}
         bank_mib = (len(dkeys) * scale.n_train
                     * _SAMPLE_BYTES.get(ds, 4096)) / 2**20
         names = ",".join(cells[i].label for i in idxs[:3])
         more = f",+{len(idxs) - 3}" if len(idxs) > 3 else ""
+        tag = f"/{robust}" if robust != "mean" else ""
         lines.append(
-            f"  {ds}/n{n}: E={len(idxs)} D={len(dkeys)} R={scale.rounds} "
-            f"bank≈{bank_mib:.0f}MiB [{names}{more}]")
+            f"  {ds}/n{n}{tag}: E={len(idxs)} D={len(dkeys)} "
+            f"R={scale.rounds} bank≈{bank_mib:.0f}MiB [{names}{more}]")
     lines.append(f"total cells: {len(cells)} "
                  f"({len(group_cells(cells))} compiled programs)")
     return "\n".join(lines)
@@ -434,11 +488,12 @@ def main(argv: Optional[List[str]] = None) -> None:
         return
 
     coeff_mode = "program" if preset.programs else "stack"
+    fault = _preset_fault(preset)
     t0 = time.time()
     rows = run_sweep_cells(cells, scale=scale, unroll_eval=args.unroll,
                            mesh=mesh, chunk_rounds=args.chunk_rounds,
                            coeff_mode=coeff_mode, mix_impl=preset.mix_impl,
-                           log=print)
+                           fault=fault, log=print)
     engine_secs = time.time() - t0
     print(f"\nsweep engine: {len(cells)} experiments in "
           f"{engine_secs:.1f}s wall-clock "
@@ -516,12 +571,50 @@ def main(argv: Optional[List[str]] = None) -> None:
         })
         print(f"participation record → {bench_path}")
 
+    if rows and "fault" in rows[0]:
+        # byzantine robustness record (DESIGN.md §16): per (rate, robust)
+        # OOD aggregates + detection analytics, and the headline
+        # robust-vs-mean recovery flag under nonzero fault rates.
+        mean = lambda xs: (sum(xs) / len(xs)) if xs else None
+        by_cell: Dict[tuple, List[dict]] = {}
+        for r in rows:
+            by_cell.setdefault((r["fault_rate"], r["robust"]),
+                               []).append(r)
+        grid_rec = {
+            f"{rate:g}/{rob}": {
+                "cells": len(rs),
+                "ood_auc": round(mean([r["ood_auc"] for r in rs]), 4),
+                "final_ood_acc": round(mean(
+                    [r["final_ood_acc_mean"] for r in rs]), 4),
+                "fault_round_rate": round(mean(
+                    [r["fault"]["fault_round_rate"] for r in rs]), 4),
+            }
+            for (rate, rob), rs in sorted(by_cell.items())
+        }
+        nz_rates = sorted({k[0] for k in by_cell if k[0] > 0})
+        final = lambda rate, rob: mean(
+            [r["final_ood_acc_mean"] for r in by_cell.get((rate, rob), [])])
+        recovered = bool(nz_rates) and all(
+            final(rate, rob) >= final(rate, "mean") - 1e-6
+            for rate in nz_rates for rob in ("trimmed", "median"))
+        bench_path = _update_bench(args.out, f"byzantine/{preset.name}", {
+            "preset": preset.name,
+            "experiments": len(cells),
+            "rounds": scale.rounds,
+            "n_nodes": n_nodes,
+            "fault_mode": "signflip",
+            "grid": grid_rec,
+            "robust_recovers_vs_mean": recovered,
+        })
+        print(f"byzantine record → {bench_path}")
+
     if mesh is not None:
         # sharded-vs-single comparison → BENCH_sweep.json (perf trajectory)
         t0 = time.time()
         single_rows = run_sweep_cells(cells, scale=scale,
                                       coeff_mode=coeff_mode,
-                                      mix_impl=preset.mix_impl)
+                                      mix_impl=preset.mix_impl,
+                                      fault=fault)
         single_secs = time.time() - t0
         identical = all(
             a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
@@ -556,7 +649,8 @@ def main(argv: Optional[List[str]] = None) -> None:
         stack_rows = run_sweep_cells(cells, scale=scale, mesh=mesh,
                                      chunk_rounds=args.chunk_rounds,
                                      coeff_mode="stack",
-                                     mix_impl=preset.mix_impl)
+                                     mix_impl=preset.mix_impl,
+                                     fault=fault)
         stack_secs = time.time() - t0
         identical = all(
             a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]
@@ -623,6 +717,16 @@ def main(argv: Optional[List[str]] = None) -> None:
     print(f"rows → {path}")
 
 
+def _preset_fault(preset: SweepPreset):
+    """Materialize a preset's ``fault_kwargs`` into a FaultSpec (lazy —
+    keeps --list/--dry-run jax-free)."""
+    if preset.fault_kwargs is None:
+        return None
+    from repro.core.dynamic import FaultSpec
+
+    return FaultSpec(**preset.fault_kwargs)
+
+
 def _linfit(xs, ys):
     """Least-squares slope/intercept of secs vs rounds."""
     import numpy as np
@@ -665,6 +769,7 @@ def _run_shard_scale(args, preset, cells, scale, mesh, n_nodes) -> None:
     if len(sizes) < 2:
         raise SystemExit("--shard-scale needs ≥ 2 round counts")
     coeff_mode = "program" if preset.programs else "stack"
+    fault = _preset_fault(preset)
     entries = []
     for r in sizes:
         s = dataclasses.replace(scale, rounds=r)
@@ -672,11 +777,11 @@ def _run_shard_scale(args, preset, cells, scale, mesh, n_nodes) -> None:
         rows_sh = run_sweep_cells(cells, scale=s, mesh=mesh,
                                   chunk_rounds=args.chunk_rounds,
                                   coeff_mode=coeff_mode,
-                                  mix_impl=preset.mix_impl)
+                                  mix_impl=preset.mix_impl, fault=fault)
         sh = time.time() - t0
         t0 = time.time()
         rows_si = run_sweep_cells(cells, scale=s, coeff_mode=coeff_mode,
-                                  mix_impl=preset.mix_impl)
+                                  mix_impl=preset.mix_impl, fault=fault)
         si = time.time() - t0
         identical = all(
             a["iid_auc"] == b["iid_auc"] and a["ood_auc"] == b["ood_auc"]

@@ -93,6 +93,15 @@ class Combo:
     # are shared with the synchronous combos), and the pub-plane carry
     # must not break the chunked/mesh donation contract.
     participation: bool = False
+    # thread the Byzantine-fault round (DESIGN.md §16) through the trace:
+    # fault injection + the quarantine screen (row norms, EMA carry,
+    # probation timers) are folded-PRNG draws and selects — zero extra
+    # dot_generals/pallas_calls, no host callbacks inside the scan.
+    fault: bool = False
+    # robust aggregation rule: "norm_clip" is a coefficient transform in
+    # front of the unchanged impl (same budget); "trimmed"/"median" swap
+    # the contraction for the sort-network path (mix_eqn_budget knows).
+    robust: str = "mean"
 
     @property
     def name(self) -> str:
@@ -102,13 +111,19 @@ class Combo:
                     + ("accum32" if self.mix_in_float32 else "accumlow"))
         if self.participation:
             tag += "/part"
+        if self.fault:
+            tag += "/fault"
+        if self.robust != "mean":
+            tag += f"/{self.robust}"
         return tag
 
 
 def engine_matrix_combos() -> List[Combo]:
     """32 mode × impl × kind cells + 4 low-precision-plane ablations
     + 5 partial-participation cells (every mode on einsum, plus one
-    kernel backend)."""
+    kernel backend) + 8 fault/robust cells (every mode under quarantined
+    fault injection, the robust aggregators on their two backends, and
+    a fault × trimmed composition)."""
     combos = [Combo(m, i, k) for m in MODES for i in IMPLS for k in KINDS]
     combos += [
         Combo("scanned", impl, "stack", "bfloat16", m32)
@@ -118,6 +133,13 @@ def engine_matrix_combos() -> List[Combo]:
     combos += [Combo(m, "einsum", "stack", participation=True)
                for m in MODES]
     combos += [Combo("scanned", "pallas", "stack", participation=True)]
+    combos += [Combo(m, "einsum", "stack", fault=True) for m in MODES]
+    combos += [
+        Combo("scanned", "einsum", "stack", robust="trimmed"),
+        Combo("scanned", "einsum", "stack", robust="norm_clip"),
+        Combo("scanned", "edges", "stack", robust="median"),
+        Combo("scanned", "einsum", "stack", fault=True, robust="trimmed"),
+    ]
     return combos
 
 
@@ -182,7 +204,7 @@ def _setting():
 
 
 @functools.lru_cache(maxsize=None)
-def _engine(impl: str, mix_in_float32: bool):
+def _engine(impl: str, mix_in_float32: bool, robust: str = "mean"):
     from repro.core.decentralized import DecentralizedConfig
     from repro.core.sweep import SweepEngine
     from repro.training.optimizer import sgd
@@ -190,7 +212,8 @@ def _engine(impl: str, mix_in_float32: bool):
     s = _setting()
     cfg = DecentralizedConfig(
         rounds=ROUNDS, local_epochs=1, eval_every=EVAL_EVERY,
-        mix_impl=impl, mix_in_float32=mix_in_float32, epoch_shuffle=False)
+        mix_impl=impl, mix_in_float32=mix_in_float32, epoch_shuffle=False,
+        robust=robust)
     return SweepEngine(sgd(1e-2), s["loss_fn"], s["acc_fn"], cfg,
                        mix_support=s["support"])
 
@@ -201,7 +224,7 @@ def _traceable(combo: Combo):
     from repro.core.coeffs import ProgramCoeffs
 
     s = _setting()
-    engine = _engine(combo.impl, combo.mix_in_float32)
+    engine = _engine(combo.impl, combo.mix_in_float32, combo.robust)
     params0 = jax.tree.map(
         lambda x: x.astype(combo.param_dtype), s["params0"])
     coeffs = (np.asarray(s["stacks"]) if combo.kind == "stack"
@@ -218,6 +241,15 @@ def _traceable(combo: Combo):
         part_kwargs = dict(
             participation=ParticipationSpec(),
             participation_rates=np.asarray([1.0, 0.5], np.float32))
+    if combo.fault:
+        from repro.core.dynamic import FaultSpec
+
+        # quarantine=True threads the full self-healing carry (norm EMA,
+        # probation timers) through the trace — the HostSync rule proves
+        # the screen runs without host callbacks inside the scan
+        part_kwargs.update(
+            fault=FaultSpec(quarantine=True),
+            fault_rates=np.asarray([0.0, 0.3], np.float32))
     return engine.traceable(
         params0, coeffs, s["bank"], s["indices"], s["data_idx"],
         s["test_iid"], s["test_ood"], batch_size=BATCH, mode=combo.mode,
@@ -272,7 +304,7 @@ def expected_budget(combo: Combo) -> Dict[str, int]:
     s = _setting()
     ein = mix_impl_budget("einsum", _n_leaves())
     imp = mix_impl_budget(combo.impl, _n_leaves(),
-                          mix_support=s["support"])
+                          mix_support=s["support"], robust=combo.robust)
     return {p: base[p] - ein[p] + imp[p]
             for p in ("pallas_call", "dot_general")}
 

@@ -40,7 +40,7 @@ import numpy as np
 from repro.core.propagation import NO_ARRIVAL, arrival_by_hop, hops_from
 
 __all__ = ["AnalyticsSpec", "analytics_summary", "participation_summary",
-           "NO_ARRIVAL"]
+           "quarantine_summary", "NO_ARRIVAL"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,4 +216,49 @@ def participation_summary(
                                     if lo.any() else None)
     out["arrival_high_staleness"] = (float(arr[hi].mean())
                                      if hi.any() else None)
+    return out
+
+
+def quarantine_summary(
+    fault: Dict[str, np.ndarray],
+    rounds: int,
+) -> Dict[str, object]:
+    """Digest ONE experiment's fault/quarantine counters (one row of
+    ``SweepResult.fault``, DESIGN.md §16) into the robustness-preset
+    quantities:
+
+    * how much corruption actually landed (``n_faulty_nodes``,
+      ``fault_round_rate`` — realized per-node-round fault fraction);
+    * how the screen responded — mean/max rounds spent quarantined,
+      **detection lag** (first quarantine round − first fault round,
+      over nodes that were both faulted and caught; ``None`` when the
+      quarantine screen is off or nothing was caught),
+      ``n_undetected`` (faulted nodes the screen never flagged);
+    * **false-positive rate** — the fraction of node-rounds spent
+      quarantined among nodes that were NEVER faulty (``None`` when
+      every node was faulted at least once).  Probation tails on
+      genuinely-faulted nodes are deliberately not counted as false
+      positives — holding a caught node out for ``probation`` rounds is
+      the screen working as designed.
+    """
+    fr = np.asarray(fault["fault_rounds"], np.int64)
+    rq = np.asarray(fault["rounds_quarantined"], np.int64)
+    ff = np.asarray(fault["first_fault"], np.int64)
+    fq = np.asarray(fault["first_quar"], np.int64)
+    n = fr.shape[0]
+    faulted = fr > 0
+    out: Dict[str, object] = {
+        "n_faulty_nodes": int(faulted.sum()),
+        "fault_round_rate": float(fr.sum() / max(rounds * n, 1)),
+        "rounds_quarantined_mean": float(rq.mean()),
+        "rounds_quarantined_max": int(rq.max()),
+    }
+    caught = faulted & (fq >= 0) & (ff >= 0)
+    out["detection_lag_mean"] = (float((fq - ff)[caught].mean())
+                                 if caught.any() else None)
+    out["n_undetected"] = int((faulted & (fq < 0)).sum())
+    clean = ~faulted
+    out["false_positive_rate"] = (
+        float(rq[clean].sum() / max(rounds * int(clean.sum()), 1))
+        if clean.any() else None)
     return out

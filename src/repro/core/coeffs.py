@@ -74,6 +74,7 @@ __all__ = [
     "ProgramCoeffs",
     "program_for",
     "participation_renormalize",
+    "quarantine_renormalize",
     "stack_states",
     "state_nbytes",
     "degree_centrality",
@@ -546,6 +547,24 @@ def participation_renormalize(c: jnp.ndarray,
     masked = c * col
     changed = (masked != c).any(axis=-1, keepdims=True)
     return jnp.where(changed, renormalize_rows(masked, xp=jnp), c)
+
+
+def quarantine_renormalize(c: jnp.ndarray,
+                           quarantined: jnp.ndarray) -> jnp.ndarray:
+    """Excise quarantined nodes' *columns* from a row-stochastic mixing
+    matrix and renormalize the surviving rows — the coefficient half of
+    the self-healing quarantine (DESIGN.md §16,
+    ``repro.core.dynamic.FaultSpec``).
+
+    Identical algebra to :func:`participation_renormalize` with
+    ``active = ~quarantined`` (a quarantined neighbour's published plane
+    is excluded from the averages, exactly like a dropped node under
+    ``stale_mixing=False``), including the row-level ``changed`` gate: a
+    round with nothing quarantined returns the matrix BIT-identical, so
+    enabling the quarantine screen on a clean run cannot perturb it.
+    Rows whose entire support is quarantined fall back to self-weight 1.
+    """
+    return participation_renormalize(c, jnp.logical_not(quarantined))
 
 
 @dataclasses.dataclass

@@ -66,6 +66,8 @@ __all__ = [
     "make_round_fn",
     "make_participation_round_fn",
     "participation_carry_init",
+    "make_fault_round_fn",
+    "fault_carry_init",
     "make_mix_fn",
     "mix_impl_budget",
     "edges_schedule",
@@ -108,6 +110,19 @@ class DecentralizedConfig:
     # ring-offset count exceeds max degree + sparse_slack (see
     # make_mix_fn / sparse_schedule).
     sparse_slack: int = 4
+    # Robust aggregation (DESIGN.md §16): "mean" (default — the paper's
+    # Eq. (2), untouched callables so degenerate configs stay
+    # bit-identical) | "trimmed" (coordinate-wise trimmed mean over
+    # neighbour rows, robust_trim extremes cut per side) | "median"
+    # (coordinate-wise weighted median) | "norm_clip" (scale each
+    # neighbour column so its row norm is at most robust_clip × the
+    # receiver's own — a pure (n, n) coefficient transform composing
+    # with every mix_impl).  "trimmed"/"median" sort per coordinate and
+    # are served by mix_impl="einsum" (jnp reference) or "edges"
+    # (Pallas kernel) only.
+    robust: str = "mean"
+    robust_trim: int = 1
+    robust_clip: float = 1.0
     # True (default): the pipeline supplies E *distinct* epoch passes per
     # round (``NodeBatcher(local_epochs=E)``) and LocalTrain consumes them
     # as-is — the paper's Eq. (1).  False: legacy behavior — one epoch of
@@ -200,7 +215,10 @@ def coeffs_stack(
 def make_mix_fn(mix_impl: str = "einsum",
                 mix_support: Optional[np.ndarray] = None,
                 sparse_slack: int = 4,
-                mix_in_float32: bool = True) -> Callable:
+                mix_in_float32: bool = True,
+                robust: str = "mean",
+                robust_trim: int = 1,
+                robust_clip: float = 1.0) -> Callable:
     """Aggregation backend: XLA einsum (default), the fused flat-plane
     Pallas kernel (``kernels.gossip_mix.mix_plane_pallas`` — the whole
     mix as ONE ``pallas_call``, DESIGN.md §11; interpret-mode on CPU,
@@ -228,7 +246,71 @@ def make_mix_fn(mix_impl: str = "einsum",
     f32 to the native param/plane dtype
     (``DecentralizedConfig.mix_in_float32`` — the low-precision
     aggregation ablation).
+
+    ``robust`` (DESIGN.md §16) selects Byzantine-resilient aggregation:
+
+    * ``"mean"`` (default) — Eq. (2) exactly; this function returns the
+      SAME callables it always has, so every degenerate robustness
+      config (fault rate 0.0) is bit-identical to the synchronous path.
+    * ``"norm_clip"`` — a pure ``(n, n)`` coefficient transform
+      (:func:`repro.core.mixing.norm_clip_coeffs`): each neighbour
+      column is scaled so its published row norm is at most
+      ``robust_clip`` × the receiver's own, then rows renormalize.
+      Composes with EVERY ``mix_impl``.
+    * ``"trimmed"`` / ``"median"`` — coordinate-wise trimmed mean
+      (``robust_trim`` extremes cut per side) / weighted median over
+      the padded-ELL neighbour tables.  Needs ``mix_support`` (tables
+      fixed at trace time like ``"edges"``); served by
+      ``mix_impl="einsum"`` (jnp reference,
+      :func:`repro.core.mixing.mix_robust_tables`) or ``"edges"``
+      (Pallas sort-network kernel,
+      ``kernels.gossip_mix.mix_robust_pallas``) — the two are
+      bit-identical (tests/test_robust_mix.py); other impls raise.
     """
+    from repro.core.mixing import ROBUST_MODES
+
+    if robust not in ROBUST_MODES:
+        raise ValueError(f"unknown robust mode {robust!r}; "
+                         f"have {ROBUST_MODES}")
+    if robust in ("trimmed", "median"):
+        if mix_impl not in ("einsum", "edges"):
+            raise ValueError(
+                f"robust={robust!r} has no mix_impl={mix_impl!r} path — "
+                f"the per-coordinate sort runs over padded neighbour "
+                f"tables; use mix_impl='einsum' (jnp reference) or "
+                f"'edges' (Pallas kernel)")
+        if mix_support is None:
+            raise ValueError(
+                f"robust={robust!r} needs mix_support (the (n, n) "
+                f"neighbourhood mask, adjacency + self-loops) to fix "
+                f"the padded-ELL neighbour tables at trace time")
+        nbr_idx, nbr_mask = edges_schedule(mix_support)
+        idx, msk = jnp.asarray(nbr_idx), jnp.asarray(nbr_mask)
+        trim_k = int(robust_trim) if robust == "trimmed" else 0
+        if mix_impl == "einsum":
+            from repro.core.mixing import mix_robust_tables
+
+            return lambda params, coeffs: mix_robust_tables(
+                params, coeffs, idx, msk, robust, trim_k=trim_k,
+                mix_in_float32=mix_in_float32)
+        from repro.kernels.gossip_mix import mix_robust_pallas
+
+        return lambda params, coeffs: mix_robust_pallas(
+            params, coeffs, idx, msk, op=robust, trim_k=trim_k,
+            mix_in_float32=mix_in_float32)
+    if robust == "norm_clip":
+        from repro.core.mixing import norm_clip_coeffs, plane_norms
+
+        base = make_mix_fn(mix_impl, mix_support=mix_support,
+                           sparse_slack=sparse_slack,
+                           mix_in_float32=mix_in_float32)
+        clip = float(robust_clip)
+
+        def clipped_mix(params, coeffs):
+            return base(params,
+                        norm_clip_coeffs(coeffs, plane_norms(params), clip))
+
+        return clipped_mix
     if mix_impl == "einsum":
         if mix_in_float32:
             return mix_dense
@@ -267,7 +349,8 @@ def make_mix_fn(mix_impl: str = "einsum",
 
 def mix_impl_budget(mix_impl: str, n_leaves: int = 1,
                     mix_support: Optional[np.ndarray] = None,
-                    sparse_slack: int = 4) -> dict:
+                    sparse_slack: int = 4,
+                    robust: str = "mean") -> dict:
     """The trace-time equation budget a configured mix contributes to one
     round body — ``repro.kernels.gossip_mix.mix_eqn_budget`` with the
     circulant path's dense-fallback decision resolved exactly the way
@@ -280,8 +363,8 @@ def mix_impl_budget(mix_impl: str, n_leaves: int = 1,
     if mix_impl == "sparse" and mix_support is not None:
         offsets, _ = sparse_schedule(mix_support, sparse_slack)
         if offsets is None:
-            return mix_eqn_budget("einsum", n_leaves)
-    return mix_eqn_budget(mix_impl, n_leaves)
+            return mix_eqn_budget("einsum", n_leaves, robust=robust)
+    return mix_eqn_budget(mix_impl, n_leaves, robust=robust)
 
 
 def sparse_schedule(mix_support, sparse_slack: int = 4):
@@ -367,7 +450,10 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
                   epoch_shuffle: bool = True,
                   mix_support: Optional[np.ndarray] = None,
                   sparse_slack: int = 4,
-                  mix_in_float32: bool = True) -> Callable:
+                  mix_in_float32: bool = True,
+                  robust: str = "mean",
+                  robust_trim: int = 1,
+                  robust_clip: float = 1.0) -> Callable:
     """One full round — vmapped LocalTrain then aggregation — as a pure
     function ``(stacked_params, stacked_opt, node_batches, coeffs) →
     (mixed_params, opt, losses)``.  ``mix_support`` is consulted by
@@ -379,7 +465,9 @@ def make_round_fn(loss_fn: Callable, optimizer: Optimizer, local_epochs: int,
                                       epoch_shuffle)
     mix = make_mix_fn(mix_impl, mix_support=mix_support,
                       sparse_slack=sparse_slack,
-                      mix_in_float32=mix_in_float32)
+                      mix_in_float32=mix_in_float32,
+                      robust=robust, robust_trim=robust_trim,
+                      robust_clip=robust_clip)
 
     def round_fn(stacked_params, stacked_opt, node_batches, coeffs):
         params, opt, losses = jax.vmap(local_train)(
@@ -427,7 +515,10 @@ def make_participation_round_fn(loss_fn: Callable, optimizer: Optimizer,
                                 epoch_shuffle: bool = True,
                                 mix_support: Optional[np.ndarray] = None,
                                 sparse_slack: int = 4,
-                                mix_in_float32: bool = True) -> Callable:
+                                mix_in_float32: bool = True,
+                                robust: str = "mean",
+                                robust_trim: int = 1,
+                                robust_clip: float = 1.0) -> Callable:
     """Partial-participation round (DESIGN.md §15): ``(stacked_params,
     stacked_opt, pcarry, node_batches, coeffs, round_idx) → (params, opt,
     pcarry, losses)``.
@@ -454,7 +545,9 @@ def make_participation_round_fn(loss_fn: Callable, optimizer: Optimizer,
                                       epoch_shuffle)
     mix = make_mix_fn(mix_impl, mix_support=mix_support,
                       sparse_slack=sparse_slack,
-                      mix_in_float32=mix_in_float32)
+                      mix_in_float32=mix_in_float32,
+                      robust=robust, robust_trim=robust_trim,
+                      robust_clip=robust_clip)
     from repro.core.coeffs import participation_renormalize  # no cycle
 
     def select(active, new, old):
@@ -495,12 +588,216 @@ def make_participation_round_fn(loss_fn: Callable, optimizer: Optimizer,
     return round_fn
 
 
+def fault_carry_init(params, rate, fseed) -> dict:
+    """Per-experiment fault/quarantine carry (the traced half of
+    :class:`repro.core.dynamic.FaultSpec`, DESIGN.md §16):
+
+    * ``rate`` / ``fseed`` — the per-experiment fault rate and PRNG seed
+      (carried, not static, so one compiled program serves a whole
+      fault-rate grid and both shard on the experiment axis);
+    * ``qtimer`` — probation countdown per node; a node is quarantined
+      while ``qtimer > 0`` (re-flagging resets it to
+      ``FaultSpec.probation``, healthy rounds decrement it);
+    * ``norm_ema`` — EMA of each node's published row norm, the
+      baseline for the spike screen.  0.0 means "not yet seeded";
+      updated only on rounds the node passes the screen, so a
+      quarantined node's garbage never drags its own baseline;
+    * ``rounds_quarantined`` / ``fault_rounds`` /
+      ``quar_fault_rounds`` — per-node counts of quarantined rounds,
+      actually-faulty rounds, and rounds both at once (host side turns
+      these into false-positive rates);
+    * ``first_fault`` / ``first_quar`` — first round each node was
+      faulty / quarantined (−1 sentinel = never); their difference is
+      the detection lag.
+    """
+    n = jax.tree.leaves(params)[0].shape[0]
+    zeros = jnp.zeros((n,), jnp.int32)
+    return {
+        "rate": jnp.asarray(rate, jnp.float32),
+        "fseed": jnp.asarray(fseed, jnp.uint32),
+        "qtimer": zeros,
+        "norm_ema": jnp.zeros((n,), jnp.float32),
+        "rounds_quarantined": zeros,
+        "fault_rounds": zeros,
+        "quar_fault_rounds": zeros,
+        "first_fault": jnp.full((n,), -1, jnp.int32),
+        "first_quar": jnp.full((n,), -1, jnp.int32),
+    }
+
+
+def make_fault_round_fn(loss_fn: Callable, optimizer: Optimizer,
+                        local_epochs: int,
+                        fault,
+                        participation=None,
+                        mix_impl: str = "einsum",
+                        epoch_shuffle: bool = True,
+                        mix_support: Optional[np.ndarray] = None,
+                        sparse_slack: int = 4,
+                        mix_in_float32: bool = True,
+                        robust: str = "mean",
+                        robust_trim: int = 1,
+                        robust_clip: float = 1.0) -> Callable:
+    """Byzantine-fault round (DESIGN.md §16).  Signature without
+    participation: ``(stacked_params, stacked_opt, fcarry, node_batches,
+    coeffs, round_idx) → (params, opt, fcarry, losses)``; with a
+    ``ParticipationSpec`` the participation carry slots in before the
+    fault carry on both sides.
+
+    Per round: LocalTrain every node, publish (through the PR 9 stale
+    plane when ``participation`` is set), then draw the faulty set from
+    ``fault`` (a :class:`repro.core.dynamic.FaultSpec`, PRNG fold index
+    3) and overwrite faulty nodes' PUBLISHED rows with
+    ``FaultSpec.corrupt`` garbage — neighbours gossip against the
+    corruption while the faulty node's own params follow local
+    semantics (it keeps its honest locally-trained state, exactly like
+    a node whose outbound link is compromised but whose replica is
+    fine).  With ``fault.quarantine`` the in-scan health screen runs on
+    the published plane: a row is flagged when it contains nonfinite
+    values or its norm exceeds ``spike_ratio`` × that node's healthy
+    EMA; flagged rows start a ``probation``-round quarantine during
+    which their column is excised from the mixing matrix
+    (:func:`repro.core.coeffs.quarantine_renormalize`), their plane row
+    is zero-substituted (so ``0 × NaN`` cannot poison the dense
+    contraction), and the quarantined node itself keeps training
+    locally — self-healing: after probation it rejoins automatically.
+
+    ``rate=0.0`` draws an exactly-empty faulty set (uniform < 0.0) and
+    every select collapses bitwise, so a zero-fault run is
+    BIT-IDENTICAL to :func:`make_round_fn` /
+    :func:`make_participation_round_fn` under every mixing backend —
+    tests/test_fault.py holds this to ``==``.
+
+    Note: with ``robust="mean"`` and no quarantine, a NaN/Inf fault
+    poisons every destination of the dense contraction (``0 × NaN =
+    NaN``), not just graph neighbours — that IS the failure mode the
+    robust aggregators and the quarantine screen exist to contain.
+    """
+    local_train = make_local_train_fn(loss_fn, optimizer, local_epochs,
+                                      epoch_shuffle)
+    mix = make_mix_fn(mix_impl, mix_support=mix_support,
+                      sparse_slack=sparse_slack,
+                      mix_in_float32=mix_in_float32,
+                      robust=robust, robust_trim=robust_trim,
+                      robust_clip=robust_clip)
+    from repro.core.coeffs import (  # no cycle
+        participation_renormalize,
+        quarantine_renormalize,
+    )
+    from repro.core.mixing import plane_norms
+
+    def select(mask, new, old):
+        # explicit reshape: rank-promoting broadcasts are disabled
+        # repo-wide (jax_numpy_rank_promotion="raise")
+        def sel(a, b):
+            return jnp.where(
+                mask.reshape(mask.shape + (1,) * (a.ndim - 1)), a, b)
+        return jax.tree.map(sel, new, old)
+
+    def row_nonfinite(plane, n):
+        cnt = jnp.zeros((n,), jnp.int32)
+        for leaf in jax.tree.leaves(plane):
+            flat = leaf.reshape((n, -1))
+            cnt = cnt + jnp.sum(~jnp.isfinite(flat), axis=1,
+                                dtype=jnp.int32)
+        return cnt
+
+    def round_fn(stacked_params, stacked_opt, *state_and_xs):
+        if participation is not None:
+            pcarry, fcarry, node_batches, coeffs, round_idx = state_and_xs
+        else:
+            pcarry = None
+            fcarry, node_batches, coeffs, round_idx = state_and_xs
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        trained, opt_t, losses = jax.vmap(local_train)(
+            stacked_params, stacked_opt, node_batches)
+        if participation is not None:
+            steps = jax.tree.leaves(node_batches)[0].shape[1]
+            active = participation.active_mask(
+                pcarry["rate"], pcarry["pseed"], round_idx, n)
+            pub = select(active, trained, pcarry["pub"])
+            if not participation.stale_mixing:
+                coeffs = participation_renormalize(coeffs, active)
+        else:
+            pub = trained
+        faulty = fault.faulty_mask(fcarry["rate"], fcarry["fseed"],
+                                   round_idx, n)
+        # the corruption lands on the PUBLISHED plane (and persists in
+        # pcarry["pub"] until the node republishes — garbage stays
+        # visible to neighbours exactly as long as a stale row would)
+        pub = select(faulty, fault.corrupt(pub, fcarry["fseed"], round_idx),
+                     pub)
+        fcarry = dict(fcarry)
+        fint = faulty.astype(jnp.int32)
+        r32 = jnp.asarray(round_idx, jnp.int32)
+        fcarry["fault_rounds"] = fcarry["fault_rounds"] + fint
+        fcarry["first_fault"] = jnp.where(
+            (fcarry["first_fault"] < 0) & faulty, r32,
+            fcarry["first_fault"])
+        if fault.quarantine:
+            norms = plane_norms(pub)
+            ema = fcarry["norm_ema"]
+            suspicious = ((row_nonfinite(pub, n) > 0)
+                          | ~jnp.isfinite(norms)
+                          | ((ema > 0.0) & (norms > fault.spike_ratio * ema)))
+            qtimer = jnp.where(suspicious, fault.probation,
+                               jnp.maximum(fcarry["qtimer"] - 1, 0))
+            quarantined = qtimer > 0
+            # EMA advances only on rounds the node passes the screen —
+            # a quarantined node's garbage never drags its baseline
+            healthy = jnp.where(
+                ema > 0.0,
+                fault.ema_beta * ema + (1.0 - fault.ema_beta) * norms,
+                norms)
+            qint = quarantined.astype(jnp.int32)
+            fcarry["norm_ema"] = jnp.where(suspicious, ema, healthy)
+            fcarry["qtimer"] = qtimer
+            fcarry["rounds_quarantined"] = (
+                fcarry["rounds_quarantined"] + qint)
+            fcarry["quar_fault_rounds"] = (
+                fcarry["quar_fault_rounds"] + qint * fint)
+            fcarry["first_quar"] = jnp.where(
+                (fcarry["first_quar"] < 0) & quarantined, r32,
+                fcarry["first_quar"])
+            coeffs = quarantine_renormalize(coeffs, quarantined)
+            # zero-substitute quarantined rows BEFORE the contraction:
+            # an excised column still participates in dense tensordot
+            # and 0 × NaN = NaN would re-poison every destination
+            pub_mix = select(quarantined,
+                             jax.tree.map(jnp.zeros_like, pub), pub)
+            keep_local = faulty | quarantined
+        else:
+            pub_mix = pub
+            keep_local = faulty
+        mixed = mix(pub_mix, coeffs)
+        params = select(keep_local, trained, mixed)
+        opt = opt_t
+        if participation is not None:
+            params = select(active, params, stacked_params)
+            opt = select(active, opt_t, stacked_opt)
+            losses = jnp.where(active, losses, jnp.zeros((), losses.dtype))
+            act = active.astype(jnp.int32)
+            staleness = jnp.where(active, 0, pcarry["staleness"] + 1)
+            pcarry = {
+                **pcarry,
+                "pub": pub,
+                "staleness": staleness,
+                "staleness_sum": pcarry["staleness_sum"] + staleness,
+                "rounds_active": pcarry["rounds_active"] + act,
+                "local_steps": pcarry["local_steps"] + act * steps,
+            }
+            return params, opt, pcarry, fcarry, losses
+        return params, opt, fcarry, losses
+
+    return round_fn
+
+
 def make_scan_fn(round_fn: Callable, evaluate: Callable,
                  make_batch: Optional[Callable] = None,
                  coeff_fn: Optional[Callable] = None,
                  analytics=None,
                  keep_history: bool = True,
-                 participation=None) -> Callable:
+                 participation=None,
+                 fault=None) -> Callable:
     """Scan-over-rounds factory shared by ``DecentralizedTrainer`` (stacked
     batches) and ``repro.core.sweep`` (per-round index gather).
 
@@ -536,13 +833,22 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
     chaining like the analytics carry); the scan then also consumes the
     ``round_idx`` absolute-round input (the active-set draw folds it).
 
+    ``fault`` (a ``repro.core.dynamic.FaultSpec``) switches ``round_fn``
+    to the :func:`make_fault_round_fn` signature and grows the carry by
+    the fault/quarantine state (``fault_carry`` ←
+    :func:`fault_carry_init`, threaded back out for chunk chaining);
+    like participation, the fault draw folds the absolute round index
+    so chunked execution cannot shift the corruption schedule.
+
     Returns ``scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
-    test_ood[, round_idx, analytics_carry, participation_carry])`` →
-    ``(params, opt[, participation_carry][, analytics_carry][, losses,
-    iid, ood])`` — the participation carry slots in before the analytics
-    carry, the per-round history tail is present unless
-    ``keep_history=False``, and the no-analytics/no-participation order
-    is unchanged from the original ``(params, opt, losses, iid, ood)``.
+    test_ood[, round_idx, analytics_carry, participation_carry,
+    fault_carry])`` → ``(params, opt[, participation_carry]
+    [, fault_carry][, analytics_carry][, losses, iid, ood])`` — the
+    participation carry slots in before the fault carry, which slots in
+    before the analytics carry; the per-round history tail is present
+    unless ``keep_history=False``, and the
+    no-analytics/no-participation/no-fault order is unchanged from the
+    original ``(params, opt, losses, iid, ood)``.
 
     The carries come back out so callers can chain round-chunks (chunked
     mode donates them back in, keeping device accumulators bounded at one
@@ -556,17 +862,25 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
     if not keep_history and analytics is None:
         raise ValueError("keep_history=False without an analytics spec "
                          "would return no metrics at all")
-    needs_rounds = analytics is not None or participation is not None
+    needs_rounds = (analytics is not None or participation is not None
+                    or fault is not None)
 
     def scan_fn(params, opt, batch_xs, coeffs, eval_mask, test_iid,
                 test_ood, round_idx=None, analytics_carry=None,
-                participation_carry=None):
+                participation_carry=None, fault_carry=None):
         n = jax.tree.leaves(params)[0].shape[0]
 
         def body(carry, xs):
             carry = list(carry)
             p, o = carry[0], carry[1]
-            pc = carry[2] if participation is not None else None
+            slot = 2
+            pc = fc = None
+            if participation is not None:
+                pc = carry[slot]
+                slot += 1
+            if fault is not None:
+                fc = carry[slot]
+                slot += 1
             ac = carry[-1] if analytics is not None else None
             if needs_rounds:
                 bx, c, do_eval, r_abs = xs
@@ -574,7 +888,14 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
                 bx, c, do_eval = xs
             if coeff_fn is not None:
                 c = coeff_fn(c)  # c is this step's absolute round index
-            if participation is None:
+            if fault is not None:
+                if participation is not None:
+                    p, o, pc, fc, losses = round_fn(
+                        p, o, pc, fc, make_batch(bx), c, r_abs)
+                else:
+                    p, o, fc, losses = round_fn(
+                        p, o, fc, make_batch(bx), c, r_abs)
+            elif participation is None:
                 p, o, losses = round_fn(p, o, make_batch(bx), c)
             else:
                 p, o, pc, losses = round_fn(p, o, pc, make_batch(bx), c,
@@ -587,6 +908,8 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
             out = [p, o]
             if participation is not None:
                 out.append(pc)
+            if fault is not None:
+                out.append(fc)
             if analytics is not None:
                 out.append(analytics.update(ac, r_abs, do_eval, iid, ood))
             ys = ((losses, iid, ood)
@@ -596,6 +919,8 @@ def make_scan_fn(round_fn: Callable, evaluate: Callable,
         carry0 = [params, opt]
         if participation is not None:
             carry0.append(participation_carry)
+        if fault is not None:
+            carry0.append(fault_carry)
         if analytics is not None:
             carry0.append(analytics_carry)
         xs = ((batch_xs, coeffs, eval_mask, round_idx) if needs_rounds
@@ -649,7 +974,8 @@ class DecentralizedTrainer:
         self.data_counts = data_counts
         self.coeffs_fn = coeffs_fn  # e.g. core.dynamic link-failure matrices
         mix_support = None
-        if config.mix_impl in ("sparse", "edges"):
+        if (config.mix_impl in ("sparse", "edges")
+                or config.robust in ("trimmed", "median")):
             # support = neighbourhoods ∪ the strategy's actual round-0
             # support: kinds with off-neighbourhood weight (fl's dense
             # 1/n, register_strategy plugins, coeffs_fn overrides) would
@@ -667,7 +993,9 @@ class DecentralizedTrainer:
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
             config.epoch_shuffle, mix_support=mix_support,
             sparse_slack=config.sparse_slack,
-            mix_in_float32=config.mix_in_float32)
+            mix_in_float32=config.mix_in_float32,
+            robust=config.robust, robust_trim=config.robust_trim,
+            robust_clip=config.robust_clip)
         self._train_round = jax.jit(self._round_fn)
         self._evaluate = jax.jit(self._evaluate_impl)
         self._scan_fn = make_scan_fn(self._round_fn, self._evaluate_impl)

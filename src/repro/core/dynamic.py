@@ -39,7 +39,8 @@ from repro.core.strategies import (AggregationStrategy, mixing_matrix,
 from repro.core.topology import Topology
 
 __all__ = ["drop_edges", "dynamic_mixing_matrix", "link_failure_schedule",
-           "edge_mask", "ParticipationSpec", "PARTICIPATION_MODES"]
+           "edge_mask", "ParticipationSpec", "PARTICIPATION_MODES",
+           "FaultSpec", "FAULT_MODES"]
 
 
 def edge_mask(key, n: int, p_fail, dtype=jnp.float32) -> jnp.ndarray:
@@ -123,6 +124,105 @@ class ParticipationSpec:
         phase = (jnp.asarray(round_idx, jnp.int32) +
                  jnp.arange(n, dtype=jnp.int32)) % period
         return phase < k
+
+
+FAULT_MODES = ("nan", "inf", "noise", "signflip", "zero")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Byzantine / corruption faults on the *published* parameter plane.
+
+    The static (hashable → jit-static) half of the fault machinery,
+    mirroring :class:`ParticipationSpec`: the corruption mode and the
+    quarantine policy are compile-time configuration, while the
+    per-experiment fault ``rate`` and ``fseed`` are traced values carried
+    in the fault carry built by ``repro.core.sweep.SweepEngine`` — so one
+    compiled program serves a whole fault-rate grid (DESIGN.md §16).
+
+    Each round, each node is drawn faulty i.i.d. with probability
+    ``rate`` from the shared folded-PRNG convention
+    (``fold_in(fold_in(key(fseed), round), 3)`` — fold index 3; indices
+    0/1/2 belong to the edge mask, the Random-strategy resample, and the
+    participation draw).  Uniform draws live in [0, 1), so ``rate=0.0``
+    marks no node faulty *exactly* — the bit-identity anchor for the
+    fault-free control runs.
+
+    A faulty node corrupts only what it PUBLISHES: its neighbours gossip
+    against the garbage row while its own parameters follow local
+    semantics (it keeps its honest locally-trained state that round).
+    Corruption modes:
+
+    * ``"nan"`` / ``"inf"`` — the published row is poisoned wholesale
+      (overflowed local step / bit-rotted payload);
+    * ``"noise"`` — Gaussian noise at ``noise_scale`` is added to every
+      coordinate (per-leaf keys folded from the round key);
+    * ``"signflip"`` — the row is replaced by ``-byz_scale ·`` itself,
+      the classic amplified Byzantine attack;
+    * ``"zero"`` — the row is zeroed (dropped payload).
+
+    ``quarantine=True`` enables the in-scan self-healing screen: each
+    round every node's published row is health-checked (any nonfinite
+    coordinate, or plane norm exceeding ``spike_ratio ×`` a carried EMA
+    of that node's past published norms).  Flagged nodes are quarantined
+    for ``probation`` rounds — their columns are excised from the mixing
+    matrix and surviving rows renormalized
+    (``repro.core.coeffs.quarantine_renormalize``) — then released.  The
+    screen is pure jnp (no callbacks), so it runs inside the scan in all
+    four engine modes.
+    """
+
+    mode: str = "signflip"
+    noise_scale: float = 1.0
+    byz_scale: float = 3.0
+    seed: int = 0
+    quarantine: bool = False
+    probation: int = 3
+    spike_ratio: float = 10.0
+    ema_beta: float = 0.9
+
+    def __post_init__(self):
+        if self.mode not in FAULT_MODES:
+            raise ValueError(f"fault mode {self.mode!r} not in "
+                             f"{FAULT_MODES}")
+        if self.quarantine and self.probation < 1:
+            raise ValueError("quarantine needs probation >= 1")
+
+    def round_key(self, fseed, round_idx):
+        """Fold-index-3 PRNG key for one round's fault draws."""
+        return jax.random.fold_in(jax.random.fold_in(
+            jax.random.key(fseed), round_idx), 3)
+
+    def faulty_mask(self, rate, fseed, round_idx, n: int) -> jnp.ndarray:
+        """(n,) bool faulty mask for one round; ``rate``/``fseed``/
+        ``round_idx`` may be traced scalars, ``n`` is static."""
+        key = self.round_key(fseed, round_idx)
+        return jax.random.uniform(key, (n,)) < jnp.asarray(rate)
+
+    def corrupt(self, stacked_params, fseed, round_idx):
+        """Fully corrupted copy of a stacked (n, ...) parameter plane —
+        the caller selects faulty rows out of it (``jnp.where`` on the
+        mask), so clean rows never touch the corrupted values.  Noise
+        keys are folded per-leaf from the round key so no two leaves
+        share a draw."""
+        key = self.round_key(fseed, round_idx)
+        leaves, treedef = jax.tree.flatten(stacked_params)
+        out = []
+        for i, leaf in enumerate(leaves):
+            if self.mode == "nan":
+                bad = jnp.full_like(leaf, jnp.nan)
+            elif self.mode == "inf":
+                bad = jnp.full_like(leaf, jnp.inf)
+            elif self.mode == "zero":
+                bad = jnp.zeros_like(leaf)
+            elif self.mode == "signflip":
+                bad = jnp.asarray(-self.byz_scale, leaf.dtype) * leaf
+            else:  # noise
+                noise = jax.random.normal(jax.random.fold_in(key, i),
+                                          leaf.shape, leaf.dtype)
+                bad = leaf + jnp.asarray(self.noise_scale, leaf.dtype) * noise
+            out.append(bad)
+        return jax.tree.unflatten(treedef, out)
 
 
 def drop_edges(topo: Topology, p_fail: float,

@@ -63,7 +63,29 @@ __all__ = [
     "circulant_decomposition",
     "CirculantSchedule",
     "mixing_collective_bytes",
+    "ROBUST_MODES",
+    "oddeven_sort_pairs",
+    "robust_combine",
+    "mix_robust_tables",
+    "plane_norms",
+    "norm_clip_coeffs",
 ]
+
+#: robust-aggregation rules accepted by
+#: ``repro.core.decentralized.make_mix_fn(robust=...)`` (DESIGN.md §16):
+#: "mean" is the untouched weighted average; "trimmed"/"median" are the
+#: coordinate-wise order statistics below; "norm_clip" is the
+#: :func:`norm_clip_coeffs` coefficient transform.
+ROBUST_MODES = ("mean", "trimmed", "median", "norm_clip")
+
+# nonfinite sanitization bound for the robust sort keys: corrupted
+# (NaN/±Inf) coordinates are clamped to ±_ROBUST_BIG so every comparison
+# in the sort network is well-defined and a poisoned value behaves as a
+# maximally extreme outlier (bounded influence).  Padding / zero-weight
+# slots get _ROBUST_PAD, strictly beyond the clamp, so they sort past
+# every real value.
+_ROBUST_BIG = 1e30
+_ROBUST_PAD = 2e30
 
 
 def _leaf_mix(c: jnp.ndarray, leaf: jnp.ndarray,
@@ -231,6 +253,195 @@ def mix_edges(params, coeffs: jnp.ndarray, nbr_idx: jnp.ndarray,
         return (wk * gathered).sum(axis=1).astype(leaf.dtype)
 
     return jax.tree.map(leaf_fn, params)
+
+
+# ----------------------------------------------------------------------
+# robust aggregation: coordinate-wise order statistics over neighbours
+# ----------------------------------------------------------------------
+def oddeven_sort_pairs(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Sort ``(keys, vals)`` ascending by ``keys`` along axis 0 with a
+    fixed odd-even transposition network — ``d`` passes of vectorized
+    compare-exchanges over a static length-``d`` leading axis.
+
+    The network is stable (equal keys never swap), so its output depends
+    only on the input, not on how many extra passes padding adds — which
+    is what makes the ``dmax``-deep jnp reference and the ``d_pad``-deep
+    Pallas kernel bit-identical.  Callers must pre-sanitize keys to
+    finite values (NaN never satisfies ``lo > hi`` consistently and
+    would oscillate forever); see :func:`robust_combine`.
+    """
+    d = keys.shape[0]
+    for p in range(d):
+        start = p % 2
+        npairs = (d - start) // 2
+        if npairs == 0:
+            continue
+        stop = start + 2 * npairs
+        lo_k, hi_k = keys[start:stop:2], keys[start + 1:stop:2]
+        lo_v, hi_v = vals[start:stop:2], vals[start + 1:stop:2]
+        swap = lo_k > hi_k
+        new_lo_k = jnp.where(swap, hi_k, lo_k)
+        new_hi_k = jnp.where(swap, lo_k, hi_k)
+        new_lo_v = jnp.where(swap, hi_v, lo_v)
+        new_hi_v = jnp.where(swap, lo_v, hi_v)
+        merged_k = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(
+            (2 * npairs,) + keys.shape[1:])
+        merged_v = jnp.stack([new_lo_v, new_hi_v], axis=1).reshape(
+            (2 * npairs,) + vals.shape[1:])
+        keys = jnp.concatenate([keys[:start], merged_k, keys[stop:]], axis=0)
+        vals = jnp.concatenate([vals[:start], merged_v, vals[stop:]], axis=0)
+    return keys, vals
+
+
+def robust_combine(vals: jnp.ndarray, w: jnp.ndarray,
+                   self_vals: jnp.ndarray, op: str,
+                   trim_k: int = 1) -> jnp.ndarray:
+    """Coordinate-wise robust aggregate of gathered neighbour rows.
+
+    vals: (d, m, t) — slot d's value for destination row m, coordinate t
+      (gathered from the padded-ELL tables; padding slots carry weight 0).
+    w: (d, m) per-slot mixing weights — a slot participates iff w > 0.
+    self_vals: (m, t) — each destination's own row (the fallback when
+      every slot is trimmed away or the support is empty).
+    op: ``"trimmed"`` — drop the ``trim_k`` smallest and largest values
+      among the occupied slots, weighted mean of the survivors with the
+      weight mass renormalized; ``"median"`` — unweighted coordinate-wise
+      median of the occupied slots (weights only define occupancy).
+
+    Nonfinite values are clamped to ±1e30 before sorting (bounded
+    influence — a NaN plane behaves as an extreme outlier instead of
+    poisoning the comparisons), and the whole computation is the SAME op
+    sequence inside the Pallas kernel and the jnp reference, so the two
+    are bit-identical (tests/test_robust_mix.py).
+
+    This function is called from inside a Pallas kernel body, so it must
+    stay jnp-only with static shapes (no host control flow on traced
+    values, no cumsum primitives — the rank scan is an unrolled loop).
+    """
+    if op not in ("trimmed", "median"):
+        raise ValueError(f"robust_combine op {op!r} not in "
+                         f"('trimmed', 'median')")
+    d = vals.shape[0]
+    acc_dtype = vals.dtype
+    wv = w[:, :, None]
+    valid = wv > 0
+    big = jnp.asarray(_ROBUST_BIG, acc_dtype)
+    keys = jnp.clip(jnp.nan_to_num(vals, nan=_ROBUST_BIG, posinf=_ROBUST_BIG,
+                                   neginf=-_ROBUST_BIG), -big, big)
+    keys = jnp.where(valid, keys, jnp.asarray(_ROBUST_PAD, acc_dtype))
+    w3 = jnp.where(valid, wv, jnp.zeros_like(wv)).astype(acc_dtype)
+    w3 = jnp.broadcast_to(w3, keys.shape)
+    keys, w3 = oddeven_sort_pairs(keys, w3)
+    occupied = w3 > 0
+    # unrolled rank scan (no jnp.cumsum — it has no Mosaic lowering)
+    rank = jnp.zeros(keys.shape[1:], jnp.int32)
+    ranks = []
+    for i in range(d):
+        rank = rank + occupied[i].astype(jnp.int32)
+        ranks.append(rank)
+    r_lo = jnp.stack(ranks, axis=0)          # 1-based rank among occupied
+    cnt = rank                               # occupied slots per (m, t)
+    if op == "median":
+        lo = (cnt - 1) // 2
+        hi = cnt // 2
+        iota = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 0)
+        med = (jnp.sum(jnp.where(iota == lo[None], keys,
+                                 jnp.zeros_like(keys)), axis=0)
+               + jnp.sum(jnp.where(iota == hi[None], keys,
+                                   jnp.zeros_like(keys)), axis=0))
+        half = jnp.asarray(0.5, acc_dtype)
+        return jnp.where(cnt > 0, half * med, self_vals)
+    r_hi = cnt[None] - r_lo + occupied.astype(jnp.int32)
+    keep = occupied & (r_lo > trim_k) & (r_hi > trim_k)
+    wk = jnp.where(keep, w3, jnp.zeros_like(w3))
+    mass = jnp.sum(wk, axis=0)
+    num = jnp.sum(wk * keys, axis=0)
+    safe = jnp.where(mass > 0, mass, jnp.ones_like(mass))
+    return jnp.where(mass > 0, num / safe, self_vals)
+
+
+def mix_robust_tables(params, coeffs: jnp.ndarray, nbr_idx: jnp.ndarray,
+                      nbr_mask: jnp.ndarray, op: str, trim_k: int = 1,
+                      mix_in_float32: bool = True):
+    """Masked-sort REFERENCE of the robust edge-list gossip — Eq. (2)
+    with the weighted mean replaced by :func:`robust_combine` over each
+    destination's padded-ELL neighbour slots (self included; slots whose
+    per-round weight is 0 — dropped links, quarantined columns, padding —
+    are excluded from the order statistics).
+
+    Same tables and traced-weights contract as :func:`mix_edges`; the
+    Pallas counterpart is ``repro.kernels.gossip_mix.mix_robust_pallas``
+    and the two are bit-identical (same op sequence, see
+    :func:`robust_combine`).  O(n·dmax·|leaf|) memory for the gathered
+    value tensor — fine at sweep scale (dmax ≪ n), not a kernel.
+    """
+    idx = jnp.asarray(nbr_idx)
+    w = edge_weights(jnp.asarray(coeffs).astype(jnp.float32), idx,
+                     jnp.asarray(nbr_mask))
+    n = idx.shape[0]
+    wt = w.T  # (dmax, n) — slot axis leading, like the kernel tables
+
+    def leaf_fn(leaf: jnp.ndarray) -> jnp.ndarray:
+        acc_dtype = jnp.float32 if mix_in_float32 else leaf.dtype
+        flat = leaf.reshape(n, -1).astype(acc_dtype)
+        vals = jnp.take(flat, idx.T, axis=0)          # (dmax, n, p)
+        out = robust_combine(vals, wt.astype(acc_dtype), flat, op,
+                             trim_k=trim_k)
+        return out.astype(leaf.dtype).reshape(leaf.shape)
+
+    return jax.tree.map(leaf_fn, params)
+
+
+def plane_norms(params) -> jnp.ndarray:
+    """(n,) f32 L2 norm of each node's full parameter row — the plane
+    magnitude the ``norm_clip`` robust rule and the quarantine health
+    screen compare against (DESIGN.md §16)."""
+    leaves = jax.tree.leaves(params)
+    n = leaves[0].shape[0]
+    sq = jnp.zeros((n,), jnp.float32)
+    for leaf in leaves:
+        flat = leaf.reshape(n, -1).astype(jnp.float32)
+        sq = sq + jnp.sum(flat * flat, axis=1)
+    return jnp.sqrt(sq)
+
+
+def norm_clip_coeffs(coeffs: jnp.ndarray, norms: jnp.ndarray,
+                     clip_mult: float = 1.0) -> jnp.ndarray:
+    """Row-norm clipping as a coefficient transform: neighbour j's weight
+    in row i is scaled by ``min(1, clip_mult·‖x_i‖/‖x_j‖)`` — a
+    neighbour whose plane is larger than the destination's own row can
+    contribute at most a clipped fraction of its mass.  Neighbours with
+    nonfinite norms are dropped outright (their scale is meaningless);
+    self weights are never clipped; rows that were scaled are
+    renormalized (fallback self-weight 1), rows left untouched are
+    returned BIT-identical — so a round where nothing clips reproduces
+    the plain mean exactly.
+
+    Because this is a pure (n, n) → (n, n) transform, every mix backend
+    (einsum/pallas/sparse/edges) reuses its existing kernel on the
+    clipped matrix — ``make_mix_fn(robust="norm_clip")`` composes it in
+    front of the selected impl.
+    """
+    from repro.core.strategies import renormalize_rows
+
+    c = jnp.asarray(coeffs)
+    n = c.shape[-1]
+    norms = jnp.asarray(norms, jnp.float32)
+    finite = jnp.isfinite(norms)
+    denom = jnp.where(norms > 0, norms, jnp.ones_like(norms))
+    ratio = (jnp.asarray(clip_mult, jnp.float32) * norms[:, None]
+             / denom[None, :])
+    # zero-norm neighbours pass unclipped (nothing to scale); nonfinite
+    # destination norms disable clipping for that row (self is suspect —
+    # the quarantine screen, not the clip rule, handles that case)
+    factor = jnp.where(norms[None, :] > 0, jnp.minimum(ratio, 1.0), 1.0)
+    factor = jnp.where(jnp.isfinite(factor), factor, 1.0)
+    factor = jnp.where(finite[None, :], factor, 0.0)
+    eye = jnp.eye(n, dtype=bool)
+    factor = jnp.where(eye, 1.0, factor).astype(c.dtype)
+    scaled = c * factor
+    changed = (scaled != c).any(axis=-1, keepdims=True)
+    return jnp.where(changed, renormalize_rows(scaled, xp=jnp), c)
 
 
 def mix_sparse_host(params, schedule: CirculantSchedule):

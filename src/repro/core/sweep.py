@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -73,12 +74,14 @@ from repro.core.decentralized import (
     DecentralizedConfig,
     RoundMetrics,
     eval_round_indices,
+    fault_carry_init,
+    make_fault_round_fn,
     make_participation_round_fn,
     make_round_fn,
     make_scan_fn,
     participation_carry_init,
 )
-from repro.core.dynamic import ParticipationSpec
+from repro.core.dynamic import FaultSpec, ParticipationSpec
 from repro.training.optimizer import Optimizer
 
 __all__ = ["SweepEngine", "SweepResult", "gather_round_batch",
@@ -164,15 +167,85 @@ def _finalize_participation(participation: Optional[ParticipationSpec],
     }
 
 
-def _split_engine_out(out, participation, analytics):
+def _finalize_fault(fault: Optional[FaultSpec], fcarry,
+                    n_exp: int) -> Optional[Dict[str, np.ndarray]]:
+    """Host digest of the fault/quarantine carry, padding rows dropped —
+    the ``SweepResult.fault`` payload (all ``(E, n)``; consumed by
+    ``repro.core.analytics.quarantine_summary``)."""
+    if fault is None:
+        return None
+    return {k: np.asarray(fcarry[k])[:n_exp]
+            for k in ("fault_rounds", "rounds_quarantined",
+                      "quar_fault_rounds", "first_fault", "first_quar")}
+
+
+def _split_engine_out(out, participation, analytics, fault=None):
     """Unpack a ``make_scan_fn`` output tuple — ``(params, opt[, pcarry]
-    [, acarry][, losses, iid, ood])`` — into its five slots (missing ones
-    come back ``None``/``{}``/history ``None``)."""
+    [, fcarry][, acarry][, losses, iid, ood])`` — into its six slots
+    (missing ones come back ``None``/``{}``/history ``None``)."""
     params, opt = out[0], out[1]
     rest = list(out[2:])
     pcarry = rest.pop(0) if participation is not None else None
+    fcarry = rest.pop(0) if fault is not None else None
     acarry = rest.pop(0) if analytics is not None else {}
-    return params, opt, pcarry, acarry, (tuple(rest) if rest else None)
+    return (params, opt, pcarry, fcarry, acarry,
+            (tuple(rest) if rest else None))
+
+
+def _save_sweep_checkpoint(directory, rounds_done, params, opt, acarry,
+                           pcarry, fcarry, losses, iids, oods,
+                           keep_history) -> str:
+    """Persist the FULL chunk-boundary scan state — model, optimizer,
+    every carry, and the host-side history so far — as one atomic
+    checkpoint (``repro.training.checkpoint.save_checkpoint``: tmp +
+    rename, so a crash mid-write leaves the previous checkpoint intact).
+    The state pytree rides the ``params`` slot; the variable-length
+    history rides the ``opt_state`` slot (its round count is recorded in
+    the metadata so restore can rebuild an exact skeleton)."""
+    from repro.training.checkpoint import save_checkpoint
+
+    state = {"params": params, "opt": opt, "acarry": acarry,
+             "pcarry": pcarry, "fcarry": fcarry}
+    hist = ({"losses": np.concatenate(losses, axis=1),
+             "iids": np.concatenate(iids, axis=1),
+             "oods": np.concatenate(oods, axis=1)}
+            if keep_history and losses else None)
+    return save_checkpoint(
+        directory, rounds_done, state, hist,
+        metadata={"rounds_done": int(rounds_done),
+                  "keep_history": bool(keep_history)})
+
+
+def _load_sweep_checkpoint(path, params, opt, acarry, pcarry, fcarry,
+                           keep_history):
+    """Inverse of :func:`_save_sweep_checkpoint` — restores into
+    skeletons built from the CURRENT run's (post-padding) inputs, so a
+    checkpoint from a differently-shaped run fails loudly with the
+    offending tree path instead of resuming garbage."""
+    import json
+    import zipfile
+    import zlib
+
+    from repro.training.checkpoint import load_checkpoint
+
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+    except (zipfile.BadZipFile, zlib.error, EOFError) as e:
+        raise ValueError(f"{path}: truncated or corrupt checkpoint ({e})")
+    done = int(meta["rounds_done"])
+    skel = {"params": params, "opt": opt, "acarry": acarry,
+            "pcarry": pcarry, "fcarry": fcarry}
+    if keep_history and done:
+        e, n = np.shape(jax.tree.leaves(params)[0])[:2]
+        h = np.zeros((e, done, n), np.float32)
+        state, hist, meta = load_checkpoint(
+            path, skel, {"losses": h, "iids": h, "oods": h})
+        hist = {k: np.asarray(v) for k, v in hist.items()}
+    else:
+        state, _, meta = load_checkpoint(path, skel)
+        hist = None
+    return state, hist, meta
 
 
 @dataclasses.dataclass
@@ -199,6 +272,12 @@ class SweepResult:
     per-node participation digest (DESIGN.md §15) — ``(E, n)`` arrays
     keyed ``rounds_active`` / ``final_staleness`` / ``mean_staleness``
     (Σ post-round staleness / R) / ``local_steps``.
+
+    ``fault`` (``SweepEngine.run(fault=...)``) holds the per-node
+    fault/quarantine digest (DESIGN.md §16) — ``(E, n)`` arrays keyed
+    ``fault_rounds`` / ``rounds_quarantined`` / ``quar_fault_rounds`` /
+    ``first_fault`` / ``first_quar`` (−1 = never), the inputs to
+    ``repro.core.analytics.quarantine_summary``.
     """
 
     train_loss: np.ndarray
@@ -208,6 +287,7 @@ class SweepResult:
     eval_every: int = 1
     analytics: Optional[Dict[str, np.ndarray]] = None
     participation: Optional[Dict[str, np.ndarray]] = None
+    fault: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def n_experiments(self) -> int:
@@ -262,18 +342,21 @@ class SweepEngine:
             loss_fn, optimizer, config.local_epochs, config.mix_impl,
             config.epoch_shuffle, mix_support=mix_support,
             sparse_slack=config.sparse_slack,
-            mix_in_float32=config.mix_in_float32)
+            mix_in_float32=config.mix_in_float32,
+            robust=config.robust, robust_trim=config.robust_trim,
+            robust_clip=config.robust_clip)
         self._run_jit = jax.jit(
             self._run_impl,
             static_argnames=("batch_size", "program", "analytics",
-                             "keep_history", "participation"))
+                             "keep_history", "participation", "fault"))
         self._round_jit = jax.jit(
             self._one_round_impl,
             static_argnames=("batch_size", "do_eval", "program",
-                             "analytics", "participation"))
+                             "analytics", "participation", "fault"))
         self._chunk_jit: Dict[bool, Callable] = {}
         self._sharded_cache: Dict[Tuple[Any, ...], Callable] = {}
         self._part_round_fns: Dict[ParticipationSpec, Callable] = {}
+        self._fault_round_fns: Dict[Tuple[Any, ...], Callable] = {}
 
     def _participation_round_fn(self, spec: ParticipationSpec) -> Callable:
         """Lazily-built (and cached — the fn's identity keys the jit
@@ -286,8 +369,33 @@ class SweepEngine:
                 epoch_shuffle=self.config.epoch_shuffle,
                 mix_support=self._mix_support,
                 sparse_slack=self.config.sparse_slack,
-                mix_in_float32=self.config.mix_in_float32)
+                mix_in_float32=self.config.mix_in_float32,
+                robust=self.config.robust,
+                robust_trim=self.config.robust_trim,
+                robust_clip=self.config.robust_clip)
             self._part_round_fns[spec] = fn
+        return fn
+
+    def _fault_round_fn(self, spec: FaultSpec,
+                        participation: Optional[ParticipationSpec],
+                        ) -> Callable:
+        """Lazily-built (and cached) Byzantine-fault round — keyed on both
+        specs since participation changes the round signature."""
+        key = (spec, participation)
+        fn = self._fault_round_fns.get(key)
+        if fn is None:
+            fn = make_fault_round_fn(
+                self.loss_fn, self.optimizer, self.config.local_epochs,
+                spec, participation=participation,
+                mix_impl=self.config.mix_impl,
+                epoch_shuffle=self.config.epoch_shuffle,
+                mix_support=self._mix_support,
+                sparse_slack=self.config.sparse_slack,
+                mix_in_float32=self.config.mix_in_float32,
+                robust=self.config.robust,
+                robust_trim=self.config.robust_trim,
+                robust_clip=self.config.robust_clip)
+            self._fault_round_fns[key] = fn
         return fn
 
     # ------------------------------------------------------------------
@@ -304,7 +412,8 @@ class SweepEngine:
 
         if self._mix_support is None:
             return  # make_round_fn already raised in __init__
-        if self.config.mix_impl == "edges":
+        if (self.config.mix_impl == "edges"
+                or self.config.robust in ("trimmed", "median")):
             s = np.asarray(self._mix_support)
             covered = (s > 0) | np.eye(s.shape[0], dtype=bool)
         else:
@@ -338,9 +447,10 @@ class SweepEngine:
 
     def _experiment_scan(self, bank, batch_size, eval_mask, rounds_idx,
                          params, opt, coeffs_e, idx_e, data_idx, test_iid,
-                         test_ood, acarry_e, pcarry_e, program=None,
-                         state_e=None, analytics=None, keep_history=True,
-                         participation=None):
+                         test_ood, acarry_e, pcarry_e, fcarry_e=None,
+                         program=None, state_e=None, analytics=None,
+                         keep_history=True, participation=None,
+                         fault=None):
         """All R rounds of ONE experiment (vmapped over E by the callers):
         :func:`repro.core.decentralized.make_scan_fn` with the per-round
         batch realized as an in-scan gather from the shared bank.  With a
@@ -349,48 +459,66 @@ class SweepEngine:
         an ``analytics`` spec, ``acarry_e`` is this experiment's streaming
         accumulator carry and ``rounds_idx`` the (R,) absolute indices;
         with a ``participation`` spec, ``pcarry_e`` its participation
-        carry (stale plane + staleness counters, DESIGN.md §15)."""
+        carry (stale plane + staleness counters, DESIGN.md §15); with a
+        ``fault`` spec, ``fcarry_e`` its fault/quarantine carry
+        (DESIGN.md §16)."""
         coeff_fn = (None if program is None
                     else (lambda r: program.matrix(state_e, r)))
-        round_fn = (self._round_fn if participation is None
-                    else self._participation_round_fn(participation))
+        if fault is not None:
+            round_fn = self._fault_round_fn(fault, participation)
+        elif participation is not None:
+            round_fn = self._participation_round_fn(participation)
+        else:
+            round_fn = self._round_fn
         scan_fn = make_scan_fn(
             round_fn, self._eval,
             make_batch=lambda ix: gather_round_batch(
                 bank, data_idx, ix, batch_size),
             coeff_fn=coeff_fn, analytics=analytics,
-            keep_history=keep_history, participation=participation)
+            keep_history=keep_history, participation=participation,
+            fault=fault)
         kwargs = {}
         if analytics is not None:
             kwargs.update(round_idx=rounds_idx, analytics_carry=acarry_e)
         if participation is not None:
             kwargs.update(round_idx=rounds_idx,
                           participation_carry=pcarry_e)
+        if fault is not None:
+            kwargs.update(round_idx=rounds_idx, fault_carry=fcarry_e)
         return scan_fn(params, opt, idx_e, coeffs_e, eval_mask,
                        test_iid, test_ood, **kwargs)
 
     def _run_impl(self, params0, opt0, coeffs, indices, data_idx, eval_mask,
                   rounds_idx, bank, test_iid, test_ood, states, acarry,
-                  pcarry, *, batch_size, program=None, analytics=None,
-                  keep_history=True, participation=None):
-        run_one = lambda p, o, c, ix, d, ti, to, st, ac, pc: (
+                  pcarry, fcarry={}, *, batch_size, program=None,
+                  analytics=None, keep_history=True, participation=None,
+                  fault=None):
+        run_one = lambda p, o, c, ix, d, ti, to, st, ac, pc, fc: (
             self._experiment_scan(
                 bank, batch_size, eval_mask, rounds_idx, p, o, c, ix, d,
-                ti, to, ac, pc, program, st, analytics, keep_history,
-                participation))
+                ti, to, ac, pc, fc, program, st, analytics, keep_history,
+                participation, fault))
         return jax.vmap(run_one)(
             params0, opt0, coeffs, indices, data_idx, test_iid, test_ood,
-            states, acarry, pcarry)
+            states, acarry, pcarry, fcarry)
 
     def _one_round_impl(self, params, opt, coeffs_r, idx_r, data_idx, bank,
-                        test_iid, test_ood, states, acarry, pcarry,
+                        test_iid, test_ood, states, acarry, pcarry, fcarry,
                         round_r, *, batch_size, do_eval, program=None,
-                        analytics=None, participation=None):
-        def one(p, o, c, ix, d, ti, to, st, ac, pc):
+                        analytics=None, participation=None, fault=None):
+        def one(p, o, c, ix, d, ti, to, st, ac, pc, fc):
             if program is not None:
                 c = program.matrix(st, c)  # c is this round's index
             batch = gather_round_batch(bank, d, ix, batch_size)
-            if participation is None:
+            if fault is not None:
+                if participation is not None:
+                    p, o, pc, fc, losses = self._fault_round_fn(
+                        fault, participation)(p, o, pc, fc, batch, c,
+                                              round_r)
+                else:
+                    p, o, fc, losses = self._fault_round_fn(
+                        fault, None)(p, o, fc, batch, c, round_r)
+            elif participation is None:
                 p, o, losses = self._round_fn(p, o, batch, c)
             else:
                 p, o, pc, losses = self._participation_round_fn(
@@ -402,11 +530,11 @@ class SweepEngine:
                 iid = ood = jnp.zeros((n,))
             if analytics is not None and do_eval:
                 ac = analytics.update(ac, round_r, True, iid, ood)
-            return p, o, losses, iid, ood, ac, pc
+            return p, o, losses, iid, ood, ac, pc, fc
 
         return jax.vmap(one)(
             params, opt, coeffs_r, idx_r, data_idx, test_iid, test_ood,
-            states, acarry, pcarry)
+            states, acarry, pcarry, fcarry)
 
     # ------------------------------------------------------------------
     # sharded / chunked mode
@@ -416,6 +544,7 @@ class SweepEngine:
                       analytics: Optional[AnalyticsSpec],
                       keep_history: bool,
                       participation: Optional[ParticipationSpec] = None,
+                      fault: Optional[FaultSpec] = None,
                       ) -> Callable:
         """The un-jitted ``shard_map(vmap_E(scan_R(...)))`` program over
         the mesh's single experiment axis — shared by the executing
@@ -427,24 +556,26 @@ class SweepEngine:
         exp, rep = P(mesh.axis_names[0]), P()
 
         def body(params, opt, coeffs, idx, data_idx, eval_mask, rounds_idx,
-                 bank, test_iid, test_ood, states, acarry, pcarry):
+                 bank, test_iid, test_ood, states, acarry, pcarry, fcarry):
             return self._run_impl(params, opt, coeffs, idx, data_idx,
                                   eval_mask, rounds_idx, bank, test_iid,
-                                  test_ood, states, acarry, pcarry,
+                                  test_ood, states, acarry, pcarry, fcarry,
                                   batch_size=batch_size, program=program,
                                   analytics=analytics,
                                   keep_history=keep_history,
-                                  participation=participation)
+                                  participation=participation,
+                                  fault=fault)
 
-        # outputs: (params, opt[, pcarry][, acarry][, losses, iid, ood])
-        # — all exp
+        # outputs: (params, opt[, pcarry][, fcarry][, acarry][, losses,
+        # iid, ood]) — all exp
         n_out = 2 + (1 if participation is not None else 0) \
+            + (1 if fault is not None else 0) \
             + (1 if analytics is not None else 0) \
             + (3 if keep_history else 0)
         return compat_shard_map(
             body, mesh,
             in_specs=(exp, exp, exp, exp, exp, rep, rep, rep, exp, exp,
-                      exp, exp, exp),
+                      exp, exp, exp, exp),
             out_specs=(exp,) * n_out)
 
     def _make_sharded_fn(self, mesh, batch_size: int,
@@ -452,20 +583,21 @@ class SweepEngine:
                          analytics: Optional[AnalyticsSpec],
                          keep_history: bool, donate: bool,
                          participation: Optional[ParticipationSpec],
+                         fault: Optional[FaultSpec] = None,
                          ) -> Callable:
         """``jit(shard_map(vmap_E(scan_R(...))))``.  Per-experiment
         inputs/outputs — including the coefficient-program states and the
-        analytics/participation carries — shard on E; the sample bank,
-        eval mask, and absolute round indices are replicated (every
+        analytics/participation/fault carries — shard on E; the sample
+        bank, eval mask, and absolute round indices are replicated (every
         experiment reads them whole).  The (params, opt) carry is donated
         when ``donate`` (``DONATED_CARRY_ARGNUMS``)."""
         key = (mesh, batch_size, program, analytics, keep_history, donate,
-               participation)
+               participation, fault)
         if key in self._sharded_cache:
             return self._sharded_cache[key]
         fn = jax.jit(
             self._sharded_body(mesh, batch_size, program, analytics,
-                               keep_history, participation),
+                               keep_history, participation, fault),
             donate_argnums=DONATED_CARRY_ARGNUMS if donate else ())
         self._sharded_cache[key] = fn
         return fn
@@ -475,6 +607,7 @@ class SweepEngine:
                        analytics: Optional[AnalyticsSpec],
                        keep_history: bool, donate: bool,
                        participation: Optional[ParticipationSpec],
+                       fault: Optional[FaultSpec] = None,
                        ) -> Callable:
         """Single-device chunk step: the scanned program with a donated
         (params, opt) carry, re-dispatched per round-chunk."""
@@ -482,13 +615,13 @@ class SweepEngine:
             self._chunk_jit[donate] = jax.jit(
                 self._run_impl,
                 static_argnames=("batch_size", "program", "analytics",
-                                 "keep_history", "participation"),
+                                 "keep_history", "participation", "fault"),
                 donate_argnums=DONATED_CARRY_ARGNUMS if donate else ())
         chunk_jit = self._chunk_jit[donate]
         return lambda *args: chunk_jit(
             *args, batch_size=batch_size, program=program,
             analytics=analytics, keep_history=keep_history,
-            participation=participation)
+            participation=participation, fault=fault)
 
     def _run_sharded(self, params0, opt0, coeffs, idx, data_idx, eval_mask,
                      bank, test_iid, test_ood, batch_size, mesh,
@@ -496,13 +629,27 @@ class SweepEngine:
                      acarry, analytics: Optional[AnalyticsSpec],
                      keep_history: bool, donate: bool, pcarry,
                      participation: Optional[ParticipationSpec],
+                     fcarry={}, fault: Optional[FaultSpec] = None,
+                     checkpoint_dir: Optional[str] = None,
+                     resume: bool = False,
                      ) -> SweepResult:
         """Sharded and/or chunked execution.  Bit-identical to the scanned
         path: padding rows are dropped, each chunk resumes the exact scan
-        carry — (params, opt) AND the analytics/participation
-        accumulators — round indices stay absolute in program, analytics
-        and participation mode, and per-shard programs are the same
-        per-experiment math."""
+        carry — (params, opt) AND the analytics/participation/fault
+        accumulators — round indices stay absolute in program, analytics,
+        participation and fault mode, and per-shard programs are the same
+        per-experiment math.
+
+        ``checkpoint_dir`` makes the run crash-safe (DESIGN.md §16): the
+        FULL scan state — params, optimizer, every carry, and the history
+        accumulated so far — is persisted atomically
+        (``repro.training.checkpoint``) at every chunk boundary, entirely
+        outside the jitted scan.  ``resume=True`` restarts from
+        ``latest_checkpoint`` and — because each chunk consumes absolute
+        round indices and the carries resume exactly — reproduces the
+        uninterrupted run bit-identically (tests/test_fault.py kills a
+        sweep mid-run and proves it).  With no checkpoint on disk,
+        ``resume=True`` degrades to a fresh start."""
         n_exp, rounds = coeffs.shape[:2]
         test_iid = jax.tree.map(jnp.asarray, test_iid)
         test_ood = jax.tree.map(jnp.asarray, test_ood)
@@ -512,10 +659,11 @@ class SweepEngine:
             n_dev = int(np.prod(list(mesh.shape.values())))
             pad = (-n_exp) % n_dev
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states, acarry, pcarry) = (
+             states, acarry, pcarry, fcarry) = (
                 pad_experiments(t, pad)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states, acarry, pcarry))
+                          test_iid, test_ood, states, acarry, pcarry,
+                          fcarry))
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             exp_sh = NamedSharding(mesh, P(mesh.axis_names[0]))
@@ -525,36 +673,65 @@ class SweepEngine:
             # device_put materializes fresh buffers laid out on the mesh,
             # so donating the carry never invalidates caller arrays.
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states, acarry, pcarry) = (
+             states, acarry, pcarry, fcarry) = (
                 put(t, exp_sh)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states, acarry, pcarry))
+                          test_iid, test_ood, states, acarry, pcarry,
+                          fcarry))
             bank = put(bank, rep_sh)
             rounds_idx = put(rounds_idx, rep_sh)
             fn = self._make_sharded_fn(mesh, batch_size, program,
                                        analytics, keep_history, donate,
-                                       participation)
+                                       participation, fault)
+            reput = lambda t: put(t, exp_sh)
         else:
             if donate:
                 # chunk 0 would donate the caller's params0 — copy once
                 params0 = jax.tree.map(
                     lambda x: jnp.asarray(x).copy(), params0)
             fn = self._make_chunk_fn(batch_size, program, analytics,
-                                     keep_history, donate, participation)
+                                     keep_history, donate, participation,
+                                     fault)
+            reput = lambda t: jax.tree.map(jnp.asarray, t)
 
         chunk = chunk_rounds or rounds
         params, opt = params0, opt0
         losses, iids, oods = [], [], []
-        for a in range(0, rounds, chunk):
+        start, chunks_done = 0, 0
+        if checkpoint_dir is not None and resume:
+            from repro.training.checkpoint import latest_checkpoint
+
+            ck = latest_checkpoint(checkpoint_dir)
+            if ck is not None:
+                state, hist_np, meta = _load_sweep_checkpoint(
+                    ck, params, opt, acarry, pcarry, fcarry, keep_history)
+                params = reput(state["params"])
+                opt = reput(state["opt"])
+                if analytics is not None:
+                    acarry = reput(state["acarry"])
+                if participation is not None:
+                    pcarry = reput(state["pcarry"])
+                if fault is not None:
+                    fcarry = reput(state["fcarry"])
+                if keep_history and int(meta["rounds_done"]):
+                    losses = [hist_np["losses"]]
+                    iids = [hist_np["iids"]]
+                    oods = [hist_np["oods"]]
+                start = int(meta["rounds_done"])
+        crash_after = int(os.environ.get(
+            "REPRO_SWEEP_CRASH_AFTER_CHUNKS", "0"))
+        for a in range(start, rounds, chunk):
             b = min(a + chunk, rounds)
             out = fn(
                 params, opt, coeffs[:, a:b], idx[:, a:b], data_idx,
                 jnp.asarray(eval_mask[a:b]), rounds_idx[a:b], bank,
-                test_iid, test_ood, states, acarry, pcarry)
-            params, opt, pc_out, ac_out, hist = _split_engine_out(
-                out, participation, analytics)
+                test_iid, test_ood, states, acarry, pcarry, fcarry)
+            params, opt, pc_out, fc_out, ac_out, hist = _split_engine_out(
+                out, participation, analytics, fault)
             if participation is not None:
                 pcarry = pc_out
+            if fault is not None:
+                fcarry = fc_out
             if analytics is not None:
                 acarry = ac_out
             if keep_history:
@@ -562,6 +739,15 @@ class SweepEngine:
                 losses.append(np.asarray(l_c))
                 iids.append(np.asarray(iid_c))
                 oods.append(np.asarray(ood_c))
+            chunks_done += 1
+            if checkpoint_dir is not None and b < rounds:
+                _save_sweep_checkpoint(
+                    checkpoint_dir, b, params, opt, acarry, pcarry,
+                    fcarry, losses, iids, oods, keep_history)
+                if crash_after and chunks_done >= crash_after:
+                    # test hook: die WITHOUT cleanup, exactly like a
+                    # preempted host (tests/test_fault.py kill-and-resume)
+                    os._exit(17)
 
         out_params = jax.tree.map(lambda x: x[:n_exp], params)
         if keep_history:
@@ -575,7 +761,8 @@ class SweepEngine:
             eval_every=self.config.eval_every,
             analytics=_finalize_analytics(analytics, acarry, n_exp),
             participation=_finalize_participation(
-                participation, pcarry, n_exp, rounds))
+                participation, pcarry, n_exp, rounds),
+            fault=_finalize_fault(fault, fcarry, n_exp))
 
     # ------------------------------------------------------------------
     def _prepare_inputs(self, params0, coeffs, bank, indices, data_idx,
@@ -583,12 +770,19 @@ class SweepEngine:
                         keep_history: bool,
                         participation: Optional[ParticipationSpec] = None,
                         participation_rates=None,
-                        participation_seeds=None):
+                        participation_seeds=None,
+                        fault: Optional[FaultSpec] = None,
+                        fault_rates=None,
+                        fault_seeds=None):
         """Shared input normalization for :meth:`run` and
         :meth:`traceable` — program/stack resolution, support validation,
-        index gathering, optimizer/analytics/participation carry
+        index gathering, optimizer/analytics/participation/fault carry
         construction."""
-        if participation is not None:
+        if fault is not None:
+            # build (and cache) the fault round fn OUTSIDE any jit trace
+            # (same trace-time-constant reasoning as participation below)
+            self._fault_round_fn(fault, participation)
+        elif participation is not None:
             # build (and cache) the participation round fn OUTSIDE any jit
             # trace: make_mix_fn bakes trace-time constants (e.g. the
             # padded-ELL neighbour tables) into the closure, which must
@@ -610,7 +804,8 @@ class SweepEngine:
         else:
             coeffs = jnp.asarray(coeffs, jnp.float32)
             rounds = coeffs.shape[1]
-        if self.config.mix_impl in ("sparse", "edges"):
+        if (self.config.mix_impl in ("sparse", "edges")
+                or self.config.robust in ("trimmed", "median")):
             self._check_sparse_support(coeffs, program, states)
         if not keep_history and analytics is None:
             raise ValueError("keep_history=False without an analytics "
@@ -647,8 +842,25 @@ class SweepEngine:
                          (n_exp,)))
             pcarry = jax.vmap(participation_carry_init)(
                 params0, jnp.asarray(rates), jnp.asarray(seeds))
+        if fault is None:
+            if fault_rates is not None or fault_seeds is not None:
+                raise ValueError("fault_rates/fault_seeds need a "
+                                 "FaultSpec (fault=)")
+            fcarry = {}
+        else:
+            frates = (np.zeros(n_exp, np.float32)
+                      if fault_rates is None
+                      else np.broadcast_to(
+                          np.asarray(fault_rates, np.float32), (n_exp,)))
+            fseeds = (np.asarray(fault.seed + np.arange(n_exp), np.uint32)
+                      if fault_seeds is None
+                      else np.broadcast_to(
+                          np.asarray(fault_seeds, np.uint32), (n_exp,)))
+            fcarry = jax.vmap(fault_carry_init)(
+                params0, jnp.asarray(frates), jnp.asarray(fseeds))
         return (params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
-                states, program, acarry, pcarry, rounds, n_exp, n_nodes)
+                states, program, acarry, pcarry, fcarry, rounds, n_exp,
+                n_nodes)
 
     def traceable(
         self,
@@ -669,6 +881,9 @@ class SweepEngine:
         participation: Optional[ParticipationSpec] = None,
         participation_rates=None,
         participation_seeds=None,
+        fault: Optional[FaultSpec] = None,
+        fault_rates=None,
+        fault_seeds=None,
     ) -> Tuple[Callable, Tuple[Any, ...], Dict[str, Any]]:
         """``(fn, args, jit_kwargs)`` for static analysis — the exact
         program each execution mode runs, as a traceable closure plus
@@ -684,11 +899,11 @@ class SweepEngine:
         pass ``True`` to analyze donation intent on CPU, where run()
         skips it only because the backend ignores donation."""
         (params0, opt0, coeffs, idx, data_idx, eval_mask, bank, states,
-         program, acarry, pcarry, rounds, n_exp, n_nodes) = \
+         program, acarry, pcarry, fcarry, rounds, n_exp, n_nodes) = \
             self._prepare_inputs(
                 params0, coeffs, bank, indices, data_idx, analytics,
                 keep_history, participation, participation_rates,
-                participation_seeds)
+                participation_seeds, fault, fault_rates, fault_seeds)
         donate = donation_supported() if donate is None else donate
         rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
         eval_mask = jnp.asarray(eval_mask)
@@ -699,9 +914,9 @@ class SweepEngine:
             fn = functools.partial(
                 self._one_round_impl, batch_size=batch_size, do_eval=True,
                 program=program, analytics=analytics,
-                participation=participation)
+                participation=participation, fault=fault)
             args = (params0, opt0, coeffs[:, 0], idx[:, 0], data_idx, bank,
-                    test_iid, test_ood, states, acarry, pcarry,
+                    test_iid, test_ood, states, acarry, pcarry, fcarry,
                     jnp.asarray(0, jnp.int32))
             return fn, args, {}
 
@@ -709,11 +924,11 @@ class SweepEngine:
             fn = functools.partial(
                 self._run_impl, batch_size=batch_size, program=program,
                 analytics=analytics, keep_history=keep_history,
-                participation=participation)
+                participation=participation, fault=fault)
             c = rounds if mode == "scanned" else (chunk_rounds or rounds)
             args = (params0, opt0, coeffs[:, :c], idx[:, :c], data_idx,
                     eval_mask[:c], rounds_idx[:c], bank, test_iid,
-                    test_ood, states, acarry, pcarry)
+                    test_ood, states, acarry, pcarry, fcarry)
             jit_kwargs = ({} if mode == "scanned" else
                           {"donate_argnums":
                            DONATED_CARRY_ARGNUMS if donate else ()})
@@ -727,15 +942,16 @@ class SweepEngine:
             n_dev = int(np.prod(list(mesh.shape.values())))
             pad = (-n_exp) % n_dev
             (params0, opt0, coeffs, idx, data_idx, test_iid, test_ood,
-             states, acarry, pcarry) = (
+             states, acarry, pcarry, fcarry) = (
                 pad_experiments(t, pad)
                 for t in (params0, opt0, coeffs, idx, data_idx,
-                          test_iid, test_ood, states, acarry, pcarry))
+                          test_iid, test_ood, states, acarry, pcarry,
+                          fcarry))
             fn = self._sharded_body(mesh, batch_size, program, analytics,
-                                    keep_history, participation)
+                                    keep_history, participation, fault)
             args = (params0, opt0, coeffs, idx, data_idx, eval_mask,
                     rounds_idx, bank, test_iid, test_ood, states, acarry,
-                    pcarry)
+                    pcarry, fcarry)
             return fn, args, {"donate_argnums":
                               DONATED_CARRY_ARGNUMS if donate else ()}
 
@@ -762,6 +978,11 @@ class SweepEngine:
         participation: Optional[ParticipationSpec] = None,
         participation_rates=None,   # (E,) or scalar; None → all 1.0
         participation_seeds=None,   # (E,) or scalar; None → seed+arange(E)
+        fault: Optional[FaultSpec] = None,
+        fault_rates=None,           # (E,) or scalar; None → all 0.0
+        fault_seeds=None,           # (E,) or scalar; None → seed+arange(E)
+        checkpoint_dir: Optional[str] = None,
+        resume: bool = False,
     ) -> SweepResult:
         """Run the whole grid.  ``unroll_eval`` overrides the config flag
         (None → use ``config.unroll_eval``).  ``mesh`` (from
@@ -796,15 +1017,32 @@ class SweepEngine:
         experiment PRNG seeds (None → ``spec.seed + arange(E)``).  Rates
         and seeds are CARRIED data, not static, so one compiled program
         serves a whole rate grid.  ``SweepResult.participation`` holds
-        the staleness digest."""
+        the staleness digest.
+
+        ``fault`` (a ``repro.core.dynamic.FaultSpec``) switches every
+        mode to Byzantine-fault rounds (DESIGN.md §16):
+        ``fault_rates``/``fault_seeds`` mirror the participation
+        arguments (None → rate 0.0 — bit-identical to the fault-free
+        path — and ``spec.seed + arange(E)``); both are CARRIED data, so
+        one compiled program serves a whole fault-rate grid.
+        ``SweepResult.fault`` holds the quarantine digest.
+
+        ``checkpoint_dir`` (needs ``chunk_rounds``) persists the full
+        scan state at every chunk boundary — atomic writes, outside the
+        jitted scan; ``resume=True`` restarts from the latest checkpoint
+        bit-identically (fresh start when none exists)."""
         (params0, opt0, coeffs, idx, data_idx, eval_mask, bank, states,
-         program, acarry, pcarry, rounds, n_exp, n_nodes) = \
+         program, acarry, pcarry, fcarry, rounds, n_exp, n_nodes) = \
             self._prepare_inputs(
                 params0, coeffs, bank, indices, data_idx, analytics,
                 keep_history, participation, participation_rates,
-                participation_seeds)
+                participation_seeds, fault, fault_rates, fault_seeds)
         donate = donation_supported() if donate is None else donate
 
+        if checkpoint_dir is not None and not chunk_rounds:
+            raise ValueError(
+                "checkpoint_dir needs chunk_rounds — checkpoints are "
+                "written at chunk boundaries, outside the jitted scan")
         unroll = (self.config.unroll_eval if unroll_eval is None
                   else unroll_eval)
         if unroll:
@@ -815,25 +1053,30 @@ class SweepEngine:
             return self._run_unrolled(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size, states, program,
-                acarry, analytics, keep_history, pcarry, participation)
+                acarry, analytics, keep_history, pcarry, participation,
+                fcarry, fault)
 
         if mesh is not None or chunk_rounds:
             return self._run_sharded(
                 params0, opt0, coeffs, idx, data_idx, eval_mask, bank,
                 test_iid, test_ood, batch_size, mesh, chunk_rounds,
                 states, program, acarry, analytics, keep_history, donate,
-                pcarry, participation)
+                pcarry, participation, fcarry, fault, checkpoint_dir,
+                resume)
 
         rounds_idx = jnp.arange(rounds, dtype=jnp.int32)
         out = self._run_jit(
             params0, opt0, coeffs, idx, data_idx, jnp.asarray(eval_mask),
             rounds_idx, bank, test_iid, test_ood, states, acarry, pcarry,
-            batch_size=batch_size, program=program, analytics=analytics,
-            keep_history=keep_history, participation=participation)
-        params, _, pc_out, ac_out, hist = _split_engine_out(
-            out, participation, analytics)
+            fcarry, batch_size=batch_size, program=program,
+            analytics=analytics, keep_history=keep_history,
+            participation=participation, fault=fault)
+        params, _, pc_out, fc_out, ac_out, hist = _split_engine_out(
+            out, participation, analytics, fault)
         if participation is not None:
             pcarry = pc_out
+        if fault is not None:
+            fcarry = fc_out
         if analytics is not None:
             acarry = ac_out
         if hist is not None:
@@ -846,13 +1089,15 @@ class SweepEngine:
             eval_every=self.config.eval_every,
             analytics=_finalize_analytics(analytics, acarry, n_exp),
             participation=_finalize_participation(
-                participation, pcarry, n_exp, rounds))
+                participation, pcarry, n_exp, rounds),
+            fault=_finalize_fault(fault, fcarry, n_exp))
 
     def _run_unrolled(self, params, opt, coeffs, idx, data_idx, eval_mask,
                       bank, test_iid, test_ood, batch_size, states=None,
                       program=None, acarry=None, analytics=None,
                       keep_history=True, pcarry=None,
-                      participation=None) -> SweepResult:
+                      participation=None, fcarry=None,
+                      fault=None) -> SweepResult:
         """Escape hatch: per-round dispatch, incremental metrics (the
         analytics carry is folded one eval round at a time)."""
         if states is None:
@@ -861,18 +1106,21 @@ class SweepEngine:
             acarry = {}
         if pcarry is None:
             pcarry = {}
+        if fcarry is None:
+            fcarry = {}
         n_exp = jax.tree.leaves(params)[0].shape[0]
         n_nodes = jax.tree.leaves(params)[0].shape[1]
         rounds = coeffs.shape[1]
         losses, iids, oods = [], [], []
         for r in range(rounds):
-            (params, opt, l_r, iid_r, ood_r, acarry,
-             pcarry) = self._round_jit(
+            (params, opt, l_r, iid_r, ood_r, acarry, pcarry,
+             fcarry) = self._round_jit(
                 params, opt, coeffs[:, r], idx[:, r], data_idx, bank,
-                test_iid, test_ood, states, acarry, pcarry,
+                test_iid, test_ood, states, acarry, pcarry, fcarry,
                 jnp.asarray(r, jnp.int32), batch_size=batch_size,
                 do_eval=bool(eval_mask[r]), program=program,
-                analytics=analytics, participation=participation)
+                analytics=analytics, participation=participation,
+                fault=fault)
             if keep_history:
                 losses.append(np.asarray(l_r))
                 iids.append(np.asarray(iid_r))
@@ -888,4 +1136,5 @@ class SweepEngine:
             params=params, eval_every=self.config.eval_every,
             analytics=_finalize_analytics(analytics, acarry, n_exp),
             participation=_finalize_participation(
-                participation, pcarry, n_exp, rounds))
+                participation, pcarry, n_exp, rounds),
+            fault=_finalize_fault(fault, fcarry, n_exp))

@@ -62,6 +62,8 @@ __all__ = [
     "mix_plane_pallas",
     "gossip_edges_pallas",
     "mix_edges_pallas",
+    "gossip_robust_pallas",
+    "mix_robust_pallas",
     "gossip_mix_pallas",
     "mix_dense_pallas",
     "mix_modeled_hbm_bytes",
@@ -71,7 +73,8 @@ __all__ = [
 ]
 
 
-def mix_eqn_budget(mix_impl: str, n_leaves: int = 1) -> dict:
+def mix_eqn_budget(mix_impl: str, n_leaves: int = 1,
+                   robust: str = "mean") -> dict:
     """Trace-time equation budget ONE aggregation (Eq. 2) contributes to a
     round body — the fusion contract as introspectable metadata, consumed
     by ``repro.analysis`` fusion-budget rules (DESIGN.md §13) instead of
@@ -90,6 +93,13 @@ def mix_eqn_budget(mix_impl: str, n_leaves: int = 1) -> dict:
       of both.  (The dense fallback is an *einsum* budget — resolve it
       with ``repro.core.decentralized.mix_impl_budget``, which knows the
       support.)
+
+    ``robust`` (DESIGN.md §16) modulates the contract: ``"norm_clip"``
+    is a pure coefficient transform in front of the unchanged impl (same
+    budget); ``"trimmed"``/``"median"`` replace the contraction with the
+    sort-network path — the einsum reference becomes gathers + selects
+    (zero GEMMs) and the edges impl swaps its kernel for the robust one
+    (still exactly ONE ``pallas_call``).
     """
     budgets = {
         "einsum": {"pallas_call": 0, "dot_general": n_leaves},
@@ -100,6 +110,13 @@ def mix_eqn_budget(mix_impl: str, n_leaves: int = 1) -> dict:
     if mix_impl not in budgets:
         raise KeyError(f"unknown mix_impl {mix_impl!r}; "
                        f"have {sorted(budgets)}")
+    if robust in ("trimmed", "median"):
+        if mix_impl == "einsum":
+            return {"pallas_call": 0, "dot_general": 0}
+        if mix_impl == "edges":
+            return {"pallas_call": 1, "dot_general": 0}
+        raise ValueError(f"robust={robust!r} has no {mix_impl!r} path "
+                         f"(supported: einsum reference, edges kernel)")
     return budgets[mix_impl]
 
 
@@ -334,6 +351,120 @@ def mix_edges_pallas(params, coeffs: jnp.ndarray, nbr_idx, nbr_mask,
     return layout.unpack(mixed)
 
 
+# ----------------------------------------------------------------------
+# robust edge-list mix: in-register sort network over the neighbour axis
+# ----------------------------------------------------------------------
+def _robust_kernel(op, trim_k, acc_dtype, n_rows, w_ref, i_ref, p_ref,
+                   o_ref):
+    """One (n_pad, bt) output tile of the robust edge-list mix.  Same
+    operands as :func:`_edges_kernel` — (d_pad, n_lane) weight/index
+    tables, (n_pad, bt) plane slab — but instead of the weighted
+    accumulate, every destination's (d_pad, bt) neighbour slab is
+    gathered into registers and reduced by
+    ``repro.core.mixing.robust_combine``: an odd-even transposition sort
+    over the STATIC d_pad axis followed by the trimmed-mean /
+    coordinate-median selection with weight-mass renormalization.
+    Padding slots (weight 0) sort past every real value and are excluded
+    from the order statistics; the destination's own row is the fallback
+    when everything is trimmed.  VMEM working set is O(d_pad·n_pad·bt)
+    for the sorted pairs — ``bt`` is the knob if d_pad·n grows."""
+    from repro.core.mixing import robust_combine
+
+    slab = p_ref[...].astype(acc_dtype)
+    w = w_ref[...]
+    idx = i_ref[...]
+    vals = jnp.stack(
+        [jnp.take(slab, idx[d, :n_rows], axis=0) for d in range(w.shape[0])],
+        axis=0)                                    # (d_pad, n_pad, bt)
+    out = robust_combine(vals, w[:, :n_rows].astype(acc_dtype),
+                         slab[:n_rows], op, trim_k=trim_k)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "trim_k", "bt", "interpret",
+                                    "mix_in_float32"))
+def gossip_robust_pallas(plane: jnp.ndarray, weights: jnp.ndarray,
+                         nbr_idx: jnp.ndarray, op: str = "trimmed",
+                         trim_k: int = 1, bt: int = 512,
+                         interpret: Optional[bool] = None,
+                         mix_in_float32: bool = True) -> jnp.ndarray:
+    """Robust Eq. (2) over the padded-ELL tables as ONE ``pallas_call`` —
+    the Byzantine-resilient counterpart of :func:`gossip_edges_pallas`
+    (DESIGN.md §16).
+
+    plane / weights / nbr_idx / interpret / mix_in_float32: exactly as
+    :func:`gossip_edges_pallas` (tables padded to (⌈dmax/8⌉·8,
+    ⌈n/128⌉·128) and transposed; padded slots gather row 0 under weight
+    0, which the robust rule excludes by occupancy rather than by
+    multiplying to zero).
+    op / trim_k: the robust rule — see
+    ``repro.core.mixing.robust_combine``.
+    bt: plane tile width; smaller than the mean kernels' default because
+    each program holds the (d_pad, n_pad, bt) sorted-pair working set in
+    VMEM, not just one slab.
+
+    Bit-identical to the masked-sort reference
+    ``repro.core.mixing.mix_robust_tables`` — the sort network is stable,
+    so the table padding this kernel adds cannot change the result
+    (tests/test_robust_mix.py).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, p = plane.shape
+    dmax = weights.shape[1]
+    sub = 16 if plane.dtype == jnp.bfloat16 else 8
+    n_pad = _round_up(n, sub)
+    bt = _round_up(min(bt, _round_up(p, 128)), 128)
+    p_pad = _round_up(p, bt)
+    if (n_pad, p_pad) != (n, p):
+        plane = jnp.pad(plane, ((0, n_pad - n), (0, p_pad - p)))
+    d_pad = _round_up(dmax, 8)
+    n_lane = _round_up(n_pad, 128)
+    w = jnp.asarray(weights, jnp.float32).T
+    idx = jnp.asarray(nbr_idx, jnp.int32).T
+    w = jnp.pad(w, ((0, d_pad - dmax), (0, n_lane - n)))
+    idx = jnp.pad(idx, ((0, d_pad - dmax), (0, n_lane - n)))
+    acc_dtype = jnp.float32 if mix_in_float32 else plane.dtype
+
+    out = pl.pallas_call(
+        functools.partial(_robust_kernel, op, trim_k, acc_dtype, n_pad),
+        grid=(p_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((d_pad, n_lane), lambda j: (0, 0)),  # weights
+            pl.BlockSpec((d_pad, n_lane), lambda j: (0, 0)),  # neighbours
+            pl.BlockSpec((n_pad, bt), lambda j: (0, j)),      # plane slab
+        ],
+        out_specs=pl.BlockSpec((n_pad, bt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, p_pad), plane.dtype),
+        interpret=interpret,
+    )(w, idx, plane)
+    return out[:n, :p]
+
+
+def mix_robust_pallas(params, coeffs: jnp.ndarray, nbr_idx, nbr_mask,
+                      op: str = "trimmed", trim_k: int = 1, bt: int = 512,
+                      plane_dtype=None,
+                      interpret: Optional[bool] = None,
+                      mix_in_float32: bool = True):
+    """Robust Eq. (2) over a stacked pytree: pack once → per-edge weight
+    gather → ONE :func:`gossip_robust_pallas` → unpack once.  Drop-in
+    peer of :func:`mix_edges_pallas` selected by
+    ``repro.core.decentralized.make_mix_fn(mix_impl="edges",
+    robust="trimmed"|"median")``; bit-identical to the jnp reference
+    ``repro.core.mixing.mix_robust_tables``."""
+    from repro.core.mixing import edge_weights
+
+    layout = PlaneLayout.from_tree(params)
+    plane = layout.pack(params, dtype=plane_dtype)
+    w = edge_weights(jnp.asarray(coeffs, jnp.float32),
+                     jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
+    mixed = gossip_robust_pallas(plane, w, jnp.asarray(nbr_idx), op=op,
+                                 trim_k=trim_k, bt=bt, interpret=interpret,
+                                 mix_in_float32=mix_in_float32)
+    return layout.unpack(mixed)
+
+
 def mix_modeled_hbm_bytes(impl: str, n: int, p_floats: int,
                           itemsize: int = 4, n_leaves: int = 1,
                           bt: int = 2048, max_neighbors: Optional[int] = None,
@@ -360,6 +491,14 @@ def mix_modeled_hbm_bytes(impl: str, n: int, p_floats: int,
       re-fetches (f32 weight + int32 index per edge slot):
       ``2·n·P·b + ⌈P/bt⌉·n·dmax·8``.  Beats ``"pallas_plane"`` exactly
       when ``2·dmax < n`` — every paper topology from n ≈ 64 up.
+    * ``"edges_robust"`` — the robust sort-network kernel
+      (:func:`gossip_robust_pallas`; needs ``max_neighbors``): identical
+      HBM traffic to ``"edges"`` — each neighbour row is still gathered
+      exactly once per tile and the sort runs entirely in registers/VMEM
+      — so robustness costs compute and VMEM working set
+      (O(d_pad·n·bt) sorted pairs), never extra HBM.  Dominance
+      (robust ≥ edges, and < pallas_plane whenever 2·dmax < n) is pinned
+      in tests/test_robust_mix.py.
     * ``"sparse"`` — the circulant ring-offset schedule
       (``repro.core.mixing.mix_sparse``; needs ``n_offsets`` = the static
       offset count K incl. 0): each offset reads the full plane once and
@@ -378,9 +517,9 @@ def mix_modeled_hbm_bytes(impl: str, n: int, p_floats: int,
         return ((n_offsets + 1) * n * p_floats * itemsize
                 + n_offsets * n * 4)
     tiles = -(-p_floats // bt)
-    if impl == "edges":
+    if impl in ("edges", "edges_robust"):
         if max_neighbors is None:
-            raise ValueError("impl='edges' needs max_neighbors (the "
+            raise ValueError(f"impl={impl!r} needs max_neighbors (the "
                              "padded-ELL table width dmax)")
         return (2 * n * p_floats * itemsize
                 + tiles * n * max_neighbors * 8)

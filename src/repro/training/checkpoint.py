@@ -11,6 +11,8 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zipfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -67,15 +69,39 @@ def _unflatten_into(skeleton: Any, flat: Dict[str, np.ndarray], prefix: str) -> 
             raise ValueError(
                 f"{key}: checkpoint shape {arr.shape} != skeleton {np.shape(leaf)}"
             )
-        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, 'dtype') else None))
+        want = getattr(leaf, "dtype", None)
+        if want is not None and np.dtype(arr.dtype) != np.dtype(want):
+            raise ValueError(
+                f"{key}: checkpoint dtype {arr.dtype} != skeleton {np.dtype(want)}"
+            )
+        new_leaves.append(jnp.asarray(arr, dtype=want))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def _read_npz(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Read + validate a checkpoint archive.
+
+    A crash mid-write never leaves a bad file at the checkpoint path (the
+    atomic tmp+rename in :func:`save_checkpoint` guarantees that), but disk
+    corruption, partial copies, or a stray non-checkpoint ``.npz`` can.
+    Both surface as ``ValueError`` naming the file, so resume logic can
+    distinguish "bad checkpoint" from genuine tree-mismatch bugs.
+    """
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            flat = {k: z[k] for k in z.files if k != "__meta__"}
+            if "__meta__" not in z.files:
+                raise ValueError(
+                    f"{path}: no __meta__ entry — not a checkpoint archive")
+            meta = json.loads(str(z["__meta__"]))
+    except (zipfile.BadZipFile, zlib.error, EOFError) as e:
+        raise ValueError(f"{path}: truncated or corrupt checkpoint ({e})")
+    return flat, meta
 
 
 def load_checkpoint(path: str, params_like: Any,
                     opt_like: Any = None) -> Tuple[Any, Any, Dict]:
-    with np.load(path, allow_pickle=False) as z:
-        flat = {k: z[k] for k in z.files if k != "__meta__"}
-        meta = json.loads(str(z["__meta__"]))
+    flat, meta = _read_npz(path)
     params = _unflatten_into(params_like, flat, "params")
     opt = _unflatten_into(opt_like, flat, "opt") if opt_like is not None else None
     return params, opt, meta

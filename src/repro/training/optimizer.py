@@ -29,6 +29,8 @@ __all__ = [
     "apply_updates",
     "global_norm",
     "make_optimizer",
+    "skip_nonfinite_updates",
+    "NonfiniteGuardState",
 ]
 
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]
@@ -184,9 +186,57 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
     return _adam_core(lr, b1, b2, eps, weight_decay, clip_norm)
 
 
-def make_optimizer(name: str, lr, **kwargs) -> Optimizer:
+# ----------------------------------------------------------------------
+# nonfinite guard (DESIGN.md §16 — the local half of fault tolerance)
+# ----------------------------------------------------------------------
+class NonfiniteGuardState(NamedTuple):
+    inner: object            # wrapped optimizer's state pytree
+    skipped: jnp.ndarray     # () int32 — steps dropped for NaN/Inf grads
+
+
+def skip_nonfinite_updates(opt: Optimizer) -> Optimizer:
+    """Wrap ``opt`` so steps with any NaN/Inf gradient become identity.
+
+    A single poisoned batch (label corruption, fp16 overflow, a Byzantine
+    neighbor's garbage leaking into the loss) otherwise destroys the whole
+    node: one NaN gradient NaNs the momentum/Adam moments and every later
+    step.  The guard checks all gradient leaves for finiteness BEFORE the
+    inner update; on a bad step the update is all-zeros and the inner state
+    is carried through unchanged (step counter included, so LR schedules do
+    not advance on skipped steps), while a carried ``skipped`` counter
+    records the drop.  Grads are zero-substituted before the inner update
+    runs so no transient NaN arithmetic can leak through the select.
+
+    The wrapped optimizer is a drop-in :class:`Optimizer` — its state nests
+    the inner state, so it vmaps/stacks/checkpoints along the node axis
+    exactly like the unwrapped one.  Compose at construction time::
+
+        engine = SweepEngine(skip_nonfinite_updates(sgd(1e-2)), ...)
+    """
+
+    def init(params):
+        return NonfiniteGuardState(opt.init(params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state: NonfiniteGuardState, params=None):
+        finite = jnp.all(jnp.stack(
+            [jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]))
+        safe = jax.tree.map(
+            lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
+        upd, new_inner = opt.update(safe, state.inner, params)
+        sel = lambda n, o: jnp.where(finite, n, o)
+        updates = jax.tree.map(lambda u: sel(u, jnp.zeros_like(u)), upd)
+        inner = jax.tree.map(sel, new_inner, state.inner)
+        skipped = jnp.where(finite, state.skipped, state.skipped + 1)
+        return updates, NonfiniteGuardState(inner, skipped.astype(jnp.int32))
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, skip_nonfinite: bool = False,
+                   **kwargs) -> Optimizer:
     """Config-system entry point."""
     table = {"sgd": sgd, "adam": adam, "adamw": adamw}
     if name not in table:
         raise KeyError(f"unknown optimizer {name!r}; have {sorted(table)}")
-    return table[name](lr, **kwargs)
+    opt = table[name](lr, **kwargs)
+    return skip_nonfinite_updates(opt) if skip_nonfinite else opt

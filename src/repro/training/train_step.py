@@ -24,7 +24,8 @@ from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core.mixing import mix_dense
 from repro.models.transformer import ForwardOptions
 from repro.training.losses import lm_loss_fn
-from repro.training.optimizer import Optimizer, apply_updates
+from repro.training.optimizer import (Optimizer, apply_updates,
+                                      skip_nonfinite_updates)
 
 __all__ = ["make_train_step", "make_loss"]
 
@@ -45,6 +46,7 @@ def make_train_step(
     optimizer: Optimizer,
     opts: Optional[ForwardOptions] = None,
     gossip: bool = True,
+    skip_nonfinite: bool = False,
 ) -> Callable:
     """Build ``train_step(params, opt_state, batch, coeffs) →
     (params, opt_state, loss)`` with stacked node axes everywhere.
@@ -52,8 +54,18 @@ def make_train_step(
     batch leaves: (N, micro, local_b, S[, ...]).
     coeffs: (N, N) row-stochastic global mixing matrix (hierarchical:
     block-diagonal intra-pod + inter-pod bridge entries).
+
+    ``skip_nonfinite=True`` wraps the optimizer with
+    :func:`repro.training.optimizer.skip_nonfinite_updates`, turning any
+    step whose gradients contain NaN/Inf into an identity update with a
+    carried per-node skip counter (DESIGN.md §16).  The opt state must
+    then be created with the WRAPPED optimizer's ``init`` — i.e.
+    ``skip_nonfinite_updates(optimizer).init`` — since the guard nests the
+    inner state under :class:`NonfiniteGuardState`.
     """
     loss_fn = make_loss(cfg, pcfg, opts)
+    if skip_nonfinite:
+        optimizer = skip_nonfinite_updates(optimizer)
 
     def node_grads(params, node_batch):
         """Grad-accumulate over the microbatch axis for ONE node."""

@@ -385,6 +385,152 @@ def compute_participation_goldens(mesh=None,
     return out
 
 
+# ----------------------------------------------------------------------
+# byzantine robustness golden suite (DESIGN.md §16): signflip faults at a
+# pinned rate grid on ring + BA, aggregated by plain mean (the vulnerable
+# baseline), trimmed mean, median, and mean + self-healing quarantine —
+# the headline robust-vs-mean OOD numbers, pinned per aggregator
+# ----------------------------------------------------------------------
+BYZANTINE_GOLDEN_PATH = os.path.join(GOLDEN_DIR, "sweep_byzantine.json")
+BYZ_SCALE = 12.0  # amplified enough that the norm screen (×10) trips
+
+
+def byzantine_scenarios():
+    """(name, topology, strategy, OOD sources, fault rate) — the
+    rate-0.0 ring cell doubles as the synchronous bit-identity control
+    (asserted inside :func:`compute_byzantine_goldens`); the BA cells
+    contrast hub vs leaf OOD placement under the same fault stream."""
+    from repro.core.topology import barabasi_albert
+
+    ba = barabasi_albert(N, 2, seed=0)
+    hub = ba.kth_highest_degree_node(1)
+    leaf = int(ba.nodes_by_degree()[-1])
+    return [
+        ("ring6/unweighted/src0/f0.0", ring(N), "unweighted", (0,), 0.0),
+        ("ring6/unweighted/src0/f0.2", ring(N), "unweighted", (0,), 0.2),
+        ("ba6/degree/hub/f0.2", ba, "degree", (hub,), 0.2),
+        ("ba6/degree/leaf/f0.35", ba, "degree", (leaf,), 0.35),
+    ]
+
+
+def compute_byzantine_goldens(mesh=None, chunk_rounds: Optional[int] = None,
+                              keep_history: bool = True) -> Dict:
+    """Run the byzantine grid once per aggregator (one compiled program
+    each; the fault rates ride the vmap axis) and digest it into the
+    golden payload.
+
+    On the primary call (no mesh/chunking, history kept) the rate-0.0
+    scenario of the plain-mean run is additionally asserted BIT-identical
+    to the fault-free synchronous engine on the same inputs — a
+    regenerated golden can never encode a drifted fault-free path.  The
+    realized fault draw (``fault_rounds``) is asserted identical across
+    aggregators on every run: the corruption stream is a pinned PRNG
+    function of (seed, round), never of what the aggregator did with it.
+    """
+    from repro.core.analytics import quarantine_summary
+    from repro.core.dynamic import FaultSpec
+    from repro.models.paper_models import (
+        classifier_accuracy, classifier_loss, ffn_apply)
+    from repro.training.optimizer import sgd
+
+    bscens = byzantine_scenarios()
+    engine, args = build_engine_inputs(scens=[s[:4] for s in bscens])
+    rates = np.asarray([s[4] for s in bscens], np.float32)
+    support = np.eye(N)
+    for _, topo, _, _ in (s[:4] for s in bscens):
+        support = np.maximum(support, np.asarray(topo.adjacency))
+    spec = FaultSpec(mode="signflip", byz_scale=BYZ_SCALE)
+    qspec = FaultSpec(mode="signflip", byz_scale=BYZ_SCALE,
+                      quarantine=True, probation=2)
+
+    def robust_engine(robust):
+        cfg = DecentralizedConfig(rounds=ROUNDS, local_epochs=2,
+                                  eval_every=EVAL_EVERY, robust=robust)
+        return SweepEngine(sgd(1e-2), classifier_loss(ffn_apply),
+                           classifier_accuracy(ffn_apply), cfg,
+                           mix_support=support)
+
+    run = lambda en, fs: en.run(
+        *args, batch_size=BATCH, mesh=mesh, chunk_rounds=chunk_rounds,
+        analytics=AnalyticsSpec(arrival_threshold=THRESHOLD),
+        keep_history=keep_history, fault=fs, fault_rates=rates)
+    results = {
+        "mean": run(engine, spec),
+        "trimmed": run(robust_engine("trimmed"), spec),
+        "median": run(robust_engine("median"), spec),
+        "mean+quarantine": run(engine, qspec),
+    }
+    base = results["mean"]
+    for agg, res in results.items():
+        np.testing.assert_array_equal(
+            res.fault["fault_rounds"], base.fault["fault_rounds"],
+            err_msg=f"fault draw diverged under {agg}")
+    if mesh is None and chunk_rounds is None and keep_history:
+        sync = engine.run(*args, batch_size=BATCH,
+                          analytics=AnalyticsSpec(
+                              arrival_threshold=THRESHOLD))
+        e0 = [i for i, s in enumerate(bscens) if s[4] == 0.0]
+        for e in e0:
+            np.testing.assert_array_equal(base.train_loss[e],
+                                          sync.train_loss[e])
+            np.testing.assert_array_equal(base.iid_acc[e], sync.iid_acc[e])
+            np.testing.assert_array_equal(base.ood_acc[e], sync.ood_acc[e])
+            for k in sync.analytics:
+                np.testing.assert_array_equal(base.analytics[k][e],
+                                              sync.analytics[k][e])
+        # the robustness claim the suite exists to pin: under every
+        # nonzero fault rate the robust aggregators END UP at least as
+        # accurate on the OOD task as plain mean (AUC can lag — trimming
+        # also slows early propagation — but recovery must not)
+        for e, s in enumerate(bscens):
+            if s[4] == 0.0:
+                continue
+            fm = float(base.analytics["final_ood_acc"][e].mean())
+            for agg in ("trimmed", "median"):
+                fr = float(
+                    results[agg].analytics["final_ood_acc"][e].mean())
+                assert fr >= fm - 1e-6, (s[0], agg, fr, fm)
+    out: Dict = {
+        "meta": {"n_nodes": N, "rounds": ROUNDS, "eval_every": EVAL_EVERY,
+                 "arrival_threshold": THRESHOLD, "batch": BATCH,
+                 "fault_mode": spec.mode, "byz_scale": BYZ_SCALE,
+                 "fault_seed": spec.seed, "robust_trim": 1,
+                 "quarantine_probation": qspec.probation,
+                 "quarantine_spike_ratio": qspec.spike_ratio},
+        "scenarios": {},
+    }
+    for e, (name, topo, _, srcs, rate) in enumerate(bscens):
+        fdig = {k: v[e] for k, v in base.fault.items()}
+        cell: Dict = {
+            "fault_rate": rate,
+            "ood_sources": list(srcs),
+            "fault_rounds": [int(v) for v in fdig["fault_rounds"]],
+            "first_fault": [int(v) for v in fdig["first_fault"]],
+            "aggregators": {},
+        }
+        for agg, res in results.items():
+            stream = {k: v[e] for k, v in res.analytics.items()}
+            cell["aggregators"][agg] = {
+                "iid_auc_mean": float(stream["iid_auc"].mean()),
+                "ood_auc_mean": float(stream["ood_auc"].mean()),
+                "ood_arrival": [int(v) for v in stream["ood_arrival"]],
+                "final_ood_acc_mean": float(stream["final_ood_acc"].mean()),
+            }
+        q = quarantine_summary(
+            {k: v[e] for k, v in results["mean+quarantine"].fault.items()},
+            ROUNDS)
+        cell["quarantine"] = {
+            "n_faulty_nodes": q["n_faulty_nodes"],
+            "fault_round_rate": q["fault_round_rate"],
+            "rounds_quarantined_mean": q["rounds_quarantined_mean"],
+            "detection_lag_mean": q["detection_lag_mean"],
+            "n_undetected": q["n_undetected"],
+            "false_positive_rate": q["false_positive_rate"],
+        }
+        out["scenarios"][name] = cell
+    return out
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     goldens = compute_goldens()
@@ -412,6 +558,15 @@ def main() -> None:
         print(f"  {name}: ood_auc_mean={g['ood_auc_mean']:.4f} "
               f"activity={g['activity_rate']:.2f} "
               f"staleness={np.mean(g['mean_staleness']):.2f}")
+    byz = compute_byzantine_goldens()
+    with open(BYZANTINE_GOLDEN_PATH, "w") as f:
+        json.dump(byz, f, indent=1)
+        f.write("\n")
+    print(f"wrote {BYZANTINE_GOLDEN_PATH}")
+    for name, g in byz["scenarios"].items():
+        aucs = " ".join(f"{a}={v['ood_auc_mean']:.4f}"
+                        for a, v in g["aggregators"].items())
+        print(f"  {name}: rate={g['fault_rate']} {aucs}")
 
 
 if __name__ == "__main__":

@@ -289,12 +289,12 @@ class TestBudgetMetadata:
 # engine-matrix preset + CLI (one-cell smokes; full matrix runs in CI)
 # ----------------------------------------------------------------------
 class TestPreset:
-    def test_engine_matrix_lists_41_combos(self):
+    def test_engine_matrix_lists_49_combos(self):
         from repro.analysis.presets import engine_matrix_combos
 
         combos = engine_matrix_combos()
-        assert len(combos) == 41
-        assert len({c.name for c in combos}) == 41
+        assert len(combos) == 49
+        assert len({c.name for c in combos}) == 49
         # the partial-participation cells: every mode on einsum + one
         # kernel backend, sharing the synchronous einsum budgets
         part = [c for c in combos if c.participation]
@@ -302,6 +302,18 @@ class TestPreset:
             ("scanned", "einsum"), ("chunked", "einsum"),
             ("mesh", "einsum"), ("unrolled", "einsum"),
             ("scanned", "pallas")}
+        # the fault cells: quarantined fault injection through every
+        # mode (same einsum budgets), plus a fault × trimmed composition
+        fault = [c for c in combos if c.fault]
+        assert {c.mode for c in fault} == set(
+            ("scanned", "chunked", "mesh", "unrolled"))
+        assert any(c.robust == "trimmed" for c in fault)
+        # the robust cells cover both order-statistic backends plus the
+        # coefficient-transform rule
+        assert {(c.impl, c.robust) for c in combos
+                if c.robust != "mean"} == {
+            ("einsum", "trimmed"), ("einsum", "norm_clip"),
+            ("edges", "median")}
 
     @pytest.mark.parametrize("mode,impl", [
         ("scanned", "pallas"), ("unrolled", "einsum")])

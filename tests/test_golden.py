@@ -209,3 +209,73 @@ def test_participation_golden_mesh_mode_identical(computed_participation):
 def test_participation_golden_no_history_identical(computed_participation):
     assert (rg.compute_participation_goldens(keep_history=False)
             == computed_participation)
+
+
+# ----------------------------------------------------------------------
+# byzantine robustness suite (goldens/sweep_byzantine.json): signflip
+# faults at a pinned rate grid aggregated by mean / trimmed / median /
+# mean+quarantine — DESIGN.md §16.  compute_byzantine_goldens itself
+# asserts the rate-0.0 mean cell bit-identical to the fault-free engine
+# and that the robust aggregators recover final OOD accuracy >= plain
+# mean under every nonzero fault rate (the headline robustness claim).
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def computed_byzantine():
+    return rg.compute_byzantine_goldens()
+
+
+def _load_byzantine_goldens():
+    assert os.path.exists(rg.BYZANTINE_GOLDEN_PATH), (
+        f"missing {rg.BYZANTINE_GOLDEN_PATH}; generate it with "
+        f"`PYTHONPATH=src python -m tests.regen_goldens`")
+    with open(rg.BYZANTINE_GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_byzantine_golden_values_match(computed_byzantine):
+    want = _load_byzantine_goldens()
+    assert want["meta"] == computed_byzantine["meta"], (
+        "byzantine golden meta (fault spec/scale) drifted — regenerate "
+        "the goldens if the change was intentional")
+    assert set(want["scenarios"]) == set(computed_byzantine["scenarios"])
+    for name, g in want["scenarios"].items():
+        c = computed_byzantine["scenarios"][name]
+        # the fault draw is a pinned PRNG stream: counters are exact ints
+        for key in ("fault_rate", "ood_sources", "fault_rounds",
+                    "first_fault"):
+            assert c[key] == g[key], (name, key)
+        assert set(c["aggregators"]) == set(g["aggregators"]), name
+        for agg, gv in g["aggregators"].items():
+            cv = c["aggregators"][agg]
+            assert cv["ood_arrival"] == gv["ood_arrival"], (name, agg)
+            for key in ("iid_auc_mean", "ood_auc_mean",
+                        "final_ood_acc_mean"):
+                np.testing.assert_allclose(cv[key], gv[key], atol=rg.TOL,
+                                           err_msg=f"{name}:{agg}:{key}")
+        for key, gv in g["quarantine"].items():
+            cv = c["quarantine"][key]
+            if gv is None:
+                assert cv is None, (name, key)
+            else:
+                np.testing.assert_allclose(cv, gv, atol=1e-9,
+                                           err_msg=f"{name}:{key}")
+
+
+def test_byzantine_golden_chunked_mode_identical(computed_byzantine):
+    """Absolute round indices drive the fault draw and the quarantine
+    carry resumes across chunk boundaries — digested payload EQUAL."""
+    assert rg.compute_byzantine_goldens(chunk_rounds=2) == computed_byzantine
+
+
+def test_byzantine_golden_mesh_mode_identical(computed_byzantine):
+    """The fault/quarantine carry shards on E like the analytics carry;
+    E-padding + shard_map cannot change any counter or curve."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    assert (rg.compute_byzantine_goldens(mesh=make_sweep_mesh())
+            == computed_byzantine)
+
+
+def test_byzantine_golden_no_history_identical(computed_byzantine):
+    assert (rg.compute_byzantine_goldens(keep_history=False)
+            == computed_byzantine)

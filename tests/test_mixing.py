@@ -578,12 +578,16 @@ class TestConfigThreading:
         real = dec.make_mix_fn
 
         def spy(mix_impl="einsum", mix_support=None, sparse_slack=4,
-                mix_in_float32=True):
+                mix_in_float32=True, robust="mean", robust_trim=1,
+                robust_clip=1.0):
             seen.update(sparse_slack=sparse_slack,
-                        mix_in_float32=mix_in_float32)
+                        mix_in_float32=mix_in_float32,
+                        robust=robust, robust_trim=robust_trim)
             return real(mix_impl, mix_support=mix_support,
                         sparse_slack=sparse_slack,
-                        mix_in_float32=mix_in_float32)
+                        mix_in_float32=mix_in_float32,
+                        robust=robust, robust_trim=robust_trim,
+                        robust_clip=robust_clip)
 
         monkeypatch.setattr(dec, "make_mix_fn", spy)
         return seen
@@ -594,11 +598,13 @@ class TestConfigThreading:
         from repro.training.optimizer import sgd
 
         seen = self._spy(monkeypatch)
-        cfg = DecentralizedConfig(mix_in_float32=False, sparse_slack=9)
+        cfg = DecentralizedConfig(mix_in_float32=False, sparse_slack=9,
+                                  robust="trimmed", robust_trim=2)
         DecentralizedTrainer(ring(4), AggregationStrategy("unweighted"),
                              sgd(1e-2), lambda p, b: 0.0,
                              lambda p, t: 0.0, cfg)
-        assert seen == {"sparse_slack": 9, "mix_in_float32": False}
+        assert seen == {"sparse_slack": 9, "mix_in_float32": False,
+                        "robust": "trimmed", "robust_trim": 2}
 
     def test_engine_threads_knobs(self, monkeypatch):
         from repro.core.decentralized import DecentralizedConfig
@@ -606,9 +612,12 @@ class TestConfigThreading:
         from repro.training.optimizer import sgd
 
         seen = self._spy(monkeypatch)
-        cfg = DecentralizedConfig(mix_in_float32=False, sparse_slack=7)
-        SweepEngine(sgd(1e-2), lambda p, b: 0.0, lambda p, t: 0.0, cfg)
-        assert seen == {"sparse_slack": 7, "mix_in_float32": False}
+        cfg = DecentralizedConfig(mix_in_float32=False, sparse_slack=7,
+                                  robust="median")
+        SweepEngine(sgd(1e-2), lambda p, b: 0.0, lambda p, t: 0.0, cfg,
+                    mix_support=np.ones((4, 4)))
+        assert seen == {"sparse_slack": 7, "mix_in_float32": False,
+                        "robust": "median", "robust_trim": 1}
 
     def test_sparse_slack_changes_fallback_decision(self):
         """The threaded slack is live: the perfect-matching support falls

@@ -1,0 +1,341 @@
+"""Robust aggregation tests (DESIGN.md §16): numpy oracles for the
+trimmed-mean / median / norm-clip rules, bit-equality between the jnp
+masked-sort reference and the Pallas sort-network kernel, the HBM-bytes
+model for the robust edge kernel, and the `make_mix_fn` dispatch
+contract.
+
+The oracle deliberately re-implements the WHOLE rule in numpy float64 —
+stable sort, ±1e30 nonfinite clamp, per-side rank trim, weight-mass
+renormalization, self-row fallback — so the jnp/Pallas paths are checked
+against an independent formulation, not against each other alone.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis import given, settings, st  # optional dep; skips if absent
+
+from repro.core.decentralized import edges_schedule, make_mix_fn
+from repro.core.mixing import (
+    ROBUST_MODES,
+    edge_weights,
+    mix_dense,
+    mix_edges,
+    mix_robust_tables,
+    norm_clip_coeffs,
+    plane_norms,
+)
+from repro.core.strategies import AggregationStrategy, mixing_matrix
+from repro.core.topology import barabasi_albert, ring
+from repro.kernels.gossip_mix import (
+    mix_eqn_budget,
+    mix_modeled_hbm_bytes,
+    mix_robust_pallas,
+)
+
+_BIG = 1e30
+
+
+def _sanitize(v):
+    return np.clip(np.nan_to_num(np.asarray(v, np.float64), nan=_BIG,
+                                 posinf=_BIG, neginf=-_BIG), -_BIG, _BIG)
+
+
+def _oracle(flat, coeffs, nbr_idx, nbr_mask, op, trim_k):
+    """Float64 numpy reference of `robust_combine` over one (n, p) leaf."""
+    flat = np.asarray(flat, np.float64)
+    n, p = flat.shape
+    out = flat.copy()  # self-row fallback
+    w = (np.asarray(coeffs, np.float64)[np.arange(n)[:, None], nbr_idx]
+         * np.asarray(nbr_mask, np.float64))
+    for i in range(n):
+        occ = np.nonzero(w[i] > 0)[0]
+        if occ.size == 0:
+            continue
+        vals = _sanitize(flat[np.asarray(nbr_idx)[i, occ]])  # (k, p)
+        ws = w[i, occ]
+        for t in range(p):
+            order = np.argsort(vals[:, t], kind="stable")
+            sv, sw = vals[order, t], ws[order]
+            if op == "median":
+                out[i, t] = np.median(sv)
+                continue
+            kept = slice(trim_k, sv.size - trim_k)
+            kv, kw = sv[kept], sw[kept]
+            if kw.size and kw.sum() > 0:
+                out[i, t] = float((kw * kv).sum() / kw.sum())
+    return out
+
+
+def _random_case(seed, n, p, density=0.5, nonfinite=0.0):
+    """(flat, coeffs, nbr_idx, nbr_mask) with random support + weights."""
+    rng = np.random.default_rng(seed)
+    sup = rng.random((n, n)) < density
+    sup = np.maximum(sup, sup.T)
+    np.fill_diagonal(sup, True)
+    if n > 2 and rng.random() < 0.3:  # force an isolated node sometimes
+        i = int(rng.integers(n))
+        sup[i, :] = sup[:, i] = False
+        sup[i, i] = True
+    c = rng.random((n, n)) * sup
+    # zero a few support entries so table occupancy < structural degree
+    c *= rng.random((n, n)) > 0.2
+    np.fill_diagonal(c, np.diagonal(c) + 0.5)
+    c = c / c.sum(1, keepdims=True)
+    flat = rng.standard_normal((n, p)).astype(np.float32)
+    if nonfinite > 0:
+        bad = rng.random((n, p)) < nonfinite
+        flat = np.where(bad, rng.choice([np.nan, np.inf, -np.inf],
+                                        size=(n, p)).astype(np.float32), flat)
+    nbr_idx, nbr_mask = edges_schedule(sup.astype(np.float64))
+    return flat, c.astype(np.float32), nbr_idx, nbr_mask
+
+
+class TestOracle:
+    @pytest.mark.parametrize("op,trim_k", [("trimmed", 1), ("trimmed", 2),
+                                           ("median", 0)])
+    def test_reference_matches_numpy_oracle(self, op, trim_k):
+        flat, c, idx, msk = _random_case(0, 10, 6)
+        got = mix_robust_tables({"x": jnp.asarray(flat)}, jnp.asarray(c),
+                                jnp.asarray(idx), jnp.asarray(msk),
+                                op, trim_k=trim_k)["x"]
+        want = _oracle(flat, c, idx, msk, op, trim_k)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                                   atol=1e-5)
+
+    def test_oracle_with_nonfinite_rows(self):
+        flat, c, idx, msk = _random_case(3, 8, 5, nonfinite=0.15)
+        for op, k in [("trimmed", 1), ("median", 0)]:
+            got = mix_robust_tables({"x": jnp.asarray(flat)}, jnp.asarray(c),
+                                    jnp.asarray(idx), jnp.asarray(msk),
+                                    op, trim_k=k)["x"]
+            np.testing.assert_allclose(np.asarray(got),
+                                       _oracle(flat, c, idx, msk, op, k),
+                                       rtol=2e-5, atol=1e-5)
+
+    def test_all_neighbors_trimmed_falls_back_to_self(self):
+        """2·trim_k ≥ occupied slots ⇒ the trimmed mean has no survivors
+        and the destination keeps its own row BIT-exactly."""
+        n = 4
+        sup = np.asarray(ring(n).adjacency) + np.eye(n)  # 3 occupied/row
+        c = sup / sup.sum(1, keepdims=True)
+        idx, msk = edges_schedule(sup)
+        flat = np.random.default_rng(1).standard_normal((n, 5)).astype(
+            np.float32)
+        got = mix_robust_tables({"x": jnp.asarray(flat)},
+                                jnp.asarray(c, dtype=jnp.float32),
+                                jnp.asarray(idx), jnp.asarray(msk),
+                                "trimmed", trim_k=2)["x"]
+        np.testing.assert_array_equal(np.asarray(got), flat)
+
+    def test_isolated_node_keeps_own_row(self):
+        """Support = self only ⇒ 1 occupied slot: trimmed(k≥1) falls back
+        to the self row exactly; median degenerates to the row itself."""
+        n = 5
+        sup = np.asarray(ring(n).adjacency) + np.eye(n)
+        sup[2, :] = sup[:, 2] = 0
+        sup[2, 2] = 1
+        c = sup / sup.sum(1, keepdims=True)
+        idx, msk = edges_schedule(sup)
+        flat = np.random.default_rng(2).standard_normal((n, 4)).astype(
+            np.float32)
+        for op, k in [("trimmed", 1), ("median", 0)]:
+            got = mix_robust_tables({"x": jnp.asarray(flat)},
+                                    jnp.asarray(c, dtype=jnp.float32),
+                                    jnp.asarray(idx), jnp.asarray(msk),
+                                    op, trim_k=k)["x"]
+            np.testing.assert_array_equal(np.asarray(got)[2], flat[2], op)
+
+    def test_trim0_recovers_weighted_mean(self):
+        """trim_k=0 trimmed mean == the plain edge-list weighted mean."""
+        t = barabasi_albert(12, 2, 0)
+        sup = np.asarray(t.adjacency) + np.eye(12)
+        c = jnp.asarray(mixing_matrix(t, AggregationStrategy("degree")),
+                        dtype=jnp.float32)
+        idx, msk = edges_schedule(sup)
+        p = {"w": jax.random.normal(jax.random.key(0), (12, 7, 3))}
+        got = mix_robust_tables(p, c, jnp.asarray(idx), jnp.asarray(msk),
+                                "trimmed", trim_k=0)
+        want = mix_edges(p, c, jnp.asarray(idx), jnp.asarray(msk))
+        np.testing.assert_allclose(np.asarray(got["w"]),
+                                   np.asarray(want["w"]), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_median_contains_nan_poison(self):
+        """One NaN-poisoned row: under the median every OTHER node's mixed
+        row stays finite (the poison is an outlier, not a contagion) —
+        the exact failure the plain mean cannot contain."""
+        t = ring(8)
+        sup = np.asarray(t.adjacency) + np.eye(8)
+        c = jnp.asarray(mixing_matrix(t, AggregationStrategy("unweighted")),
+                        dtype=jnp.float32)
+        idx, msk = edges_schedule(sup)
+        flat = np.random.default_rng(3).standard_normal((8, 6)).astype(
+            np.float32)
+        flat[0] = np.nan
+        got = mix_robust_tables({"x": jnp.asarray(flat)}, c,
+                                jnp.asarray(idx), jnp.asarray(msk),
+                                "median", trim_k=0)["x"]
+        assert np.isfinite(np.asarray(got)[1:]).all()
+        # and the mean genuinely does NOT contain it (neighbors poisoned)
+        mean = mix_edges({"x": jnp.asarray(flat)}, c, jnp.asarray(idx),
+                         jnp.asarray(msk))["x"]
+        assert not np.isfinite(np.asarray(mean)[1]).all()
+
+
+class TestPallasBitEquality:
+    @pytest.mark.parametrize("op,trim_k", [("trimmed", 1), ("trimmed", 2),
+                                           ("median", 0)])
+    def test_kernel_matches_reference_bitwise(self, op, trim_k):
+        flat, c, idx, msk = _random_case(7, 12, 9)
+        params = {"w": jnp.asarray(flat).reshape(12, 3, 3),
+                  "b": jax.random.normal(jax.random.key(1), (12, 5))}
+        ref = mix_robust_tables(params, jnp.asarray(c), jnp.asarray(idx),
+                                jnp.asarray(msk), op, trim_k=trim_k)
+        ker = mix_robust_pallas(params, jnp.asarray(c), jnp.asarray(idx),
+                                jnp.asarray(msk), op=op, trim_k=trim_k)
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(ref[k]),
+                                          np.asarray(ker[k]), err_msg=k)
+
+    def test_kernel_matches_reference_with_nonfinite(self):
+        flat, c, idx, msk = _random_case(11, 9, 7, nonfinite=0.2)
+        params = {"x": jnp.asarray(flat)}
+        for op, k in [("trimmed", 1), ("median", 0)]:
+            ref = mix_robust_tables(params, jnp.asarray(c), jnp.asarray(idx),
+                                    jnp.asarray(msk), op, trim_k=k)
+            ker = mix_robust_pallas(params, jnp.asarray(c), jnp.asarray(idx),
+                                    jnp.asarray(msk), op=op, trim_k=k)
+            np.testing.assert_array_equal(np.asarray(ref["x"]),
+                                          np.asarray(ker["x"]), err_msg=op)
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(2, 9), p=st.integers(1, 8),
+       op_i=st.integers(0, 2), poison=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_property_reference_vs_oracle(seed, n, p, op_i, poison):
+    """Random support/weights/values (optionally nonfinite-poisoned):
+    jnp reference == float64 oracle, and Pallas kernel == jnp reference
+    BIT-exactly — across occupancy patterns the fixed cases miss."""
+    op, trim_k = [("trimmed", 1), ("trimmed", 2), ("median", 0)][op_i]
+    flat, c, idx, msk = _random_case(seed, n, p,
+                                     nonfinite=0.15 if poison else 0.0)
+    params = {"x": jnp.asarray(flat)}
+    ref = mix_robust_tables(params, jnp.asarray(c), jnp.asarray(idx),
+                            jnp.asarray(msk), op, trim_k=trim_k)["x"]
+    np.testing.assert_allclose(np.asarray(ref),
+                               _oracle(flat, c, idx, msk, op, trim_k),
+                               rtol=2e-5, atol=1e-5)
+    ker = mix_robust_pallas(params, jnp.asarray(c), jnp.asarray(idx),
+                            jnp.asarray(msk), op=op, trim_k=trim_k)["x"]
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+class TestNormClip:
+    def _setup(self, amplify=None):
+        t = barabasi_albert(10, 2, 4)
+        c = jnp.asarray(mixing_matrix(t, AggregationStrategy("degree")),
+                        dtype=jnp.float32)
+        p = {"w": jax.random.normal(jax.random.key(2), (10, 6, 4))}
+        if amplify is not None:
+            p = {"w": p["w"].at[amplify].mul(50.0)}
+        return c, p
+
+    def test_no_clip_is_bit_identical(self):
+        """All rows the same norm ⇒ nothing clips ⇒ the matrix (and thus
+        the whole mix) is BIT-identical to the plain mean."""
+        c, p = self._setup()
+        norms = plane_norms(p)
+        uniform = jnp.ones_like(norms) * norms[0]
+        np.testing.assert_array_equal(
+            np.asarray(norm_clip_coeffs(c, uniform)), np.asarray(c))
+
+    def test_clip_shrinks_amplified_column_and_keeps_rows_stochastic(self):
+        c, p = self._setup(amplify=3)
+        clipped = norm_clip_coeffs(c, plane_norms(p))
+        cc, cn = np.asarray(c), np.asarray(clipped)
+        np.testing.assert_allclose(cn.sum(1), 1.0, rtol=1e-5)
+        nbr = (np.arange(10) != 3) & (cc[:, 3] > 0)
+        assert nbr.any()
+        assert (cn[nbr, 3] < cc[nbr, 3]).all()  # amplified column shrank
+
+    def test_nonfinite_neighbor_dropped(self):
+        c, p = self._setup()
+        norms = plane_norms(p).at[4].set(jnp.nan)
+        clipped = np.asarray(norm_clip_coeffs(c, norms))
+        off = np.arange(10) != 4
+        assert (clipped[off, 4] == 0).all()
+        np.testing.assert_allclose(clipped.sum(1), 1.0, rtol=1e-5)
+
+    def test_norm_clip_composes_with_every_impl(self):
+        t = ring(8)
+        sup = np.asarray(t.adjacency) + np.eye(8)
+        c = jnp.asarray(mixing_matrix(t, AggregationStrategy("unweighted")),
+                        dtype=jnp.float32)
+        p = {"w": jax.random.normal(jax.random.key(3), (8, 5, 3))}
+        p = {"w": p["w"].at[0].mul(40.0)}
+        outs = []
+        for impl in ["einsum", "pallas", "sparse", "edges"]:
+            mix = make_mix_fn(impl, mix_support=sup, robust="norm_clip")
+            outs.append(np.asarray(mix(p, c)["w"]))
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=1e-5)
+
+
+class TestDispatch:
+    SUP = np.asarray(ring(6).adjacency) + np.eye(6)
+
+    def test_mean_returns_plain_backends(self):
+        assert make_mix_fn("einsum", robust="mean") is mix_dense
+
+    @pytest.mark.parametrize("impl", ["pallas", "sparse"])
+    @pytest.mark.parametrize("robust", ["trimmed", "median"])
+    def test_sort_rules_reject_unsupported_impls(self, impl, robust):
+        with pytest.raises(ValueError, match="no mix_impl"):
+            make_mix_fn(impl, mix_support=self.SUP, robust=robust)
+
+    def test_sort_rules_need_support(self):
+        with pytest.raises(ValueError, match="mix_support"):
+            make_mix_fn("einsum", robust="trimmed")
+
+    def test_unknown_robust_mode(self):
+        with pytest.raises(ValueError, match="robust"):
+            make_mix_fn("einsum", robust="krum")
+        assert "mean" in ROBUST_MODES
+
+    def test_eqn_budget(self):
+        assert mix_eqn_budget("einsum", robust="trimmed") == {
+            "pallas_call": 0, "dot_general": 0}
+        assert mix_eqn_budget("edges", robust="median") == {
+            "pallas_call": 1, "dot_general": 0}
+        with pytest.raises(ValueError):
+            mix_eqn_budget("pallas", robust="trimmed")
+        # norm_clip composes: budget equals the base impl's
+        assert (mix_eqn_budget("pallas", robust="norm_clip")
+                == mix_eqn_budget("pallas"))
+
+
+class TestModeledBytes:
+    def test_robust_kernel_costs_no_extra_hbm(self):
+        """The sort network lives in registers/VMEM: modeled HBM bytes of
+        edges_robust == edges at every scale."""
+        for n, dmax in [(64, 8), (256, 12), (1024, 16)]:
+            for p_floats in [10_000, 1_000_000]:
+                assert (mix_modeled_hbm_bytes("edges_robust", n, p_floats,
+                                              max_neighbors=dmax)
+                        == mix_modeled_hbm_bytes("edges", n, p_floats,
+                                                 max_neighbors=dmax))
+
+    def test_robust_beats_dense_plane_when_sparse(self):
+        """2·dmax < n ⇒ the robust edge kernel still moves strictly fewer
+        modeled bytes than the dense fused-plane kernel — robustness is
+        not an excuse to fall back to dense."""
+        for n, dmax in [(64, 8), (256, 12), (1024, 16)]:
+            for p_floats in [100_000, 1_000_000]:
+                assert (mix_modeled_hbm_bytes("edges_robust", n, p_floats,
+                                              max_neighbors=dmax)
+                        < mix_modeled_hbm_bytes("pallas_plane", n, p_floats))
+
+    def test_needs_max_neighbors(self):
+        with pytest.raises(ValueError, match="max_neighbors"):
+            mix_modeled_hbm_bytes("edges_robust", 64, 1000)

@@ -12,6 +12,7 @@ from repro.training.checkpoint import (
 )
 from repro.training.losses import lm_loss_fn, softmax_xent
 from repro.training.optimizer import (
+    NonfiniteGuardState,
     adam,
     adamw,
     apply_updates,
@@ -20,6 +21,7 @@ from repro.training.optimizer import (
     global_norm,
     make_optimizer,
     sgd,
+    skip_nonfinite_updates,
     warmup_cosine_schedule,
 )
 from repro.training.train_step import make_train_step, reshape_for_microbatch
@@ -73,6 +75,83 @@ class TestOptimizers:
         assert make_optimizer("sgd", 0.1)
         with pytest.raises(KeyError):
             make_optimizer("lion", 0.1)
+
+
+class TestNonfiniteGuard:
+    """skip_nonfinite_updates (DESIGN.md §16): the local half of fault
+    tolerance — one poisoned batch must not destroy the node."""
+
+    def test_clean_steps_bit_identical_to_unwrapped(self):
+        opt, raw = skip_nonfinite_updates(adam(1e-2)), adam(1e-2)
+        p = {"w": jnp.ones((3, 2)), "b": jnp.zeros(2)}
+        g = {"w": jnp.full((3, 2), 0.1), "b": jnp.full(2, -0.2)}
+        s, rs = opt.init(p), raw.init(p)
+        for _ in range(3):
+            u, s = jax.jit(opt.update)(g, s, p)
+            ru, rs = jax.jit(raw.update)(g, rs, p)
+            for a, b in zip(jax.tree.leaves(u), jax.tree.leaves(ru)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(s.skipped) == 0
+
+    @pytest.mark.parametrize("poison", [jnp.nan, jnp.inf, -jnp.inf])
+    def test_poisoned_step_is_identity(self, poison):
+        opt = skip_nonfinite_updates(sgd(0.1, momentum=0.9))
+        p = {"w": jnp.ones((4,))}
+        s = opt.init(p)
+        u1, s1 = opt.update({"w": jnp.full(4, 0.3)}, s, p)
+        bad = {"w": jnp.asarray([0.1, poison, 0.2, 0.3])}
+        u2, s2 = opt.update(bad, s1, p)
+        np.testing.assert_array_equal(np.asarray(u2["w"]), np.zeros(4))
+        assert int(s2.skipped) == 1
+        # inner state untouched: momentum AND step (LR schedule frozen)
+        np.testing.assert_array_equal(np.asarray(s2.inner.momentum["w"]),
+                                      np.asarray(s1.inner.momentum["w"]))
+        assert int(s2.inner.step) == int(s1.inner.step)
+        # recovery: the next clean step proceeds normally
+        u3, s3 = opt.update({"w": jnp.full(4, 0.3)}, s2, p)
+        assert np.isfinite(np.asarray(u3["w"])).all()
+        assert (np.asarray(u3["w"]) != 0).all()
+        assert int(s3.skipped) == 1
+
+    def test_poisoned_batch_through_train_step(self):
+        """End-to-end: a label-poisoned batch NaNs the gradients of one
+        node; with the guard that node's params and opt state come back
+        bit-identical and only its skip counter advances — without it the
+        node is destroyed."""
+        pcfg = ParallelConfig(n_nodes=4, microbatch=1, remat=False)
+        opt = skip_nonfinite_updates(adamw(1e-3))
+        # gossip=False: the dense contraction would smear node 2's NaN
+        # params into every row (0·NaN) — containing THAT is the robust
+        # aggregators' job (tests/test_robust_mix.py), not the guard's
+        step = make_train_step(CFG, pcfg, adamw(1e-3),
+                               opts=ForwardOptions(remat=False),
+                               gossip=False, skip_nonfinite=True)
+        params = jax.vmap(lambda k: init_params(k, CFG))(
+            jnp.stack([jax.random.key(0)] * 4))
+        opt_state = jax.vmap(opt.init)(params)
+        toks = jax.random.randint(jax.random.key(5), (32, 16), 0, 128)
+        batch = reshape_for_microbatch(
+            {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}, 4, 1)
+        # poison node 2's embedding so its grads (and loss) go nonfinite
+        poisoned = jax.tree.map(lambda x: x, params)
+        leaves, treedef = jax.tree_util.tree_flatten(poisoned)
+        leaves = [l.at[2].set(jnp.nan) for l in leaves]
+        poisoned = jax.tree_util.tree_unflatten(treedef, leaves)
+        p2, s2, _ = jax.jit(step)(poisoned, opt_state, batch, jnp.eye(4))
+        skipped = np.asarray(s2.skipped)
+        np.testing.assert_array_equal(skipped, [0, 0, 1, 0])
+        for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(poisoned)):
+            # node 2: identity update (params carried through unchanged
+            # modulo the NaNs it already had); others: genuine updates
+            aa, bb = np.asarray(a), np.asarray(b)
+            np.testing.assert_array_equal(aa[2], bb[2])
+            assert (aa[[0, 1, 3]] != bb[[0, 1, 3]]).any()
+
+    def test_wrapped_state_structure(self):
+        opt = make_optimizer("sgd", 0.1, skip_nonfinite=True)
+        s = opt.init({"w": jnp.ones(2)})
+        assert isinstance(s, NonfiniteGuardState)
+        assert int(s.skipped) == 0
 
 
 class TestLosses:
@@ -159,3 +238,45 @@ class TestCheckpoint:
         save_checkpoint(str(tmp_path), 1, params)
         save_checkpoint(str(tmp_path), 12, params)
         assert "00000012" in latest_checkpoint(str(tmp_path))
+
+    def test_missing_key_names_tree_path(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"w": jnp.ones(2)})
+        with pytest.raises(KeyError, match="params/extra"):
+            load_checkpoint(latest_checkpoint(str(tmp_path)),
+                            {"w": jnp.ones(2), "extra": jnp.ones(3)})
+
+    def test_dtype_mismatch_names_tree_path(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"w": jnp.ones((3, 3), jnp.float32)})
+        with pytest.raises(ValueError, match=r"params/w.*dtype"):
+            load_checkpoint(latest_checkpoint(str(tmp_path)),
+                            {"w": jnp.ones((3, 3), jnp.int32)})
+
+    def test_truncated_file_detected(self, tmp_path):
+        """A partially-copied / disk-corrupted archive must fail as a
+        ValueError naming the file — not leak zipfile internals or, far
+        worse, resume from garbage."""
+        params = {"w": jnp.arange(64, dtype=jnp.float32)}
+        path = save_checkpoint(str(tmp_path), 0, params)
+        raw = open(path, "rb").read()
+        with open(path, "wb") as f:
+            f.write(raw[: len(raw) // 2])
+        with pytest.raises(ValueError, match="truncated or corrupt"):
+            load_checkpoint(path, params)
+
+    def test_non_checkpoint_npz_rejected(self, tmp_path):
+        """A stray .npz without the __meta__ sidecar is not a checkpoint."""
+        path = str(tmp_path / "ckpt_00000000.npz")
+        np.savez(path, **{"params/w": np.ones(2, np.float32)})
+        with pytest.raises(ValueError, match="__meta__"):
+            load_checkpoint(path, {"w": jnp.ones(2)})
+
+    def test_crash_mid_write_leaves_previous_checkpoint(self, tmp_path):
+        """The atomic tmp+rename contract: a checkpoint path either holds
+        the complete old file or the complete new one.  Simulate the
+        crash window by writing the tmp file and never renaming."""
+        params = {"w": jnp.ones(4)}
+        path = save_checkpoint(str(tmp_path), 0, params)
+        (tmp_path / "garbage.tmp").write_bytes(b"half a checkpoint")
+        assert latest_checkpoint(str(tmp_path)) == path  # .tmp ignored
+        p, _, meta = load_checkpoint(path, params)
+        assert meta["step"] == 0
